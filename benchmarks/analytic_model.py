@@ -1,0 +1,165 @@
+"""Analytic per-device HBM-traffic and residency model per (arch × shape).
+
+Why this exists: the structural HLO byte count (hlo_analysis) charges every
+op-granularity temp as HBM traffic — inside doubly-nested attention scans
+that multiplies VMEM-resident score tiles by full trip products, a ~100×
+overcount vs what a scheduled TPU program actually moves. A roofline's
+memory term must be the *minimum achievable* traffic, so it is derived here
+from the model structure:
+
+  decode   : packed weights (active experts only for MoE) + KV cache read
+             + 1-token cache write
+  prefill  : packed weights + KV cache write + flash-attention K/V streaming
+             (nq passes) + layer-boundary activations
+  train    : master weights fwd+bwd (gathered over the tp axis under FSDP)
+             + optimizer state update + remat'd boundary activations
+             + flash K/V streaming fwd/bwd + loss logits
+
+The HLO-structural number stays in the artifacts as a fusion-pessimal upper
+bound; EXPERIMENTS.md reports both. Peak residency (params + opt + cache +
+live activations) is also modeled — the "does it fit 16 GiB" check that
+CPU-backend memory_analysis (no TPU liveness optimization) cannot answer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_config
+
+HBM_PER_CHIP = 16 * 1024 ** 3
+
+
+@dataclasses.dataclass
+class CellGeometry:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    n_dev: int
+    tp: int = 16
+
+    @property
+    def dp(self) -> int:
+        return self.n_dev // self.tp
+
+    @property
+    def b_local(self) -> int:
+        return max(1, self.shape.global_batch // self.dp)
+
+    @property
+    def s_local(self) -> int:
+        # sequence-parallel residual stream (train/prefill)
+        return max(1, self.shape.seq_len // self.tp)
+
+
+def _param_bytes(cfg: ModelConfig, mode: str) -> float:
+    """Total parameter bytes: packed 2-bit for serve, bf16 masters for qat."""
+    n = cfg.param_count()
+    return n / 4.0 if mode == "serve" else n * 2.0
+
+
+def _active_param_bytes_serve(cfg: ModelConfig, batch: int) -> float:
+    """Decode reads only routed experts; with a large batch most experts are
+    hit, so take min(full, tokens × active-path params)."""
+    full = cfg.param_count() / 4.0
+    if cfg.moe is None:
+        return full
+    active = cfg.param_count(active_only=True) / 4.0
+    # each token touches the active path; distinct-expert coverage saturates
+    return min(full, active * batch)
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, s_len: int) -> float:
+    """fp8 KV / latent / SSM state bytes (global)."""
+    L_attn, L_mamba = cfg._block_counts()
+    total = 0.0
+    if cfg.attention_kind == "mla":
+        m = cfg.mla
+        total += L_attn * batch * s_len * (m.kv_lora_rank + m.qk_rope_head_dim)
+    elif cfg.attention_kind == "gqa":
+        if cfg.shared_attention:   # zamba2: shared block, per-position cache
+            n_slots = cfg.block_pattern.count("a")
+        else:
+            n_slots = L_attn
+        total += 2.0 * n_slots * batch * cfg.num_kv_heads * s_len * cfg.head_dim
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nheads = d_in // s.head_dim
+        total += L_mamba * batch * nheads * s.head_dim * s.state_size * 4  # f32
+        total += L_mamba * batch * (s.conv_width - 1) * (
+            d_in + 2 * s.num_groups * s.state_size) * 4
+    return total
+
+
+def _flash_kv_stream(cfg: ModelConfig, batch_local: int, s_len: int,
+                     chunk: int = 512) -> float:
+    """Flash attention K/V HBM streaming per device per pass: every q-chunk
+    row re-reads K and V (bf16)."""
+    if cfg.attention_kind == "none":
+        return 0.0
+    L_attn, _ = cfg._block_counts()
+    nq = max(1, s_len // chunk)
+    if cfg.attention_kind == "mla":
+        kv_width = cfg.num_heads * 2 * (cfg.mla.qk_nope_head_dim
+                                        + cfg.mla.v_head_dim) / 2
+    else:
+        kv_width = 2 * cfg.num_kv_heads * cfg.head_dim
+    return L_attn * nq * batch_local * s_len * kv_width * 2.0
+
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeConfig, n_dev: int) -> Dict[str, float]:
+    g = CellGeometry(cfg, shape, n_dev)
+    L = cfg.num_layers
+    d = cfg.d_model
+    act2 = 2.0  # bf16
+
+    if shape.kind == "decode":
+        w = _active_param_bytes_serve(cfg, shape.global_batch) / n_dev
+        cache = _cache_bytes(cfg, shape.global_batch, shape.seq_len) / n_dev
+        out = {"weights": w, "cache_read": cache,
+               "cache_write": cache / max(shape.seq_len, 1),
+               "activations": L * shape.global_batch * d * act2 / n_dev}
+    elif shape.kind == "prefill":
+        w = _param_bytes(cfg, "serve") / n_dev
+        cache = _cache_bytes(cfg, shape.global_batch, shape.seq_len) / n_dev
+        kv_stream = _flash_kv_stream(cfg, g.b_local, shape.seq_len) / g.tp
+        acts = 3.0 * L * g.b_local * g.s_local * d * act2
+        out = {"weights": w, "cache_write": cache, "kv_stream": kv_stream,
+               "activations": acts}
+    else:  # train
+        w_master = _param_bytes(cfg, "qat")
+        # fwd + bwd each read the (dp-)gathered weights: 2 × params/tp;
+        # grads written+reduced + AdamW m/v read+write: ~10 bytes/param /dev
+        w_traffic = 2.0 * w_master / g.tp + 10.0 * cfg.param_count() / n_dev
+        acts = 4.0 * L * g.b_local * g.s_local * d * act2      # remat policy
+        kv_stream = 3.0 * _flash_kv_stream(cfg, g.b_local, shape.seq_len) / g.tp
+        logits = 2.0 * g.b_local * g.s_local * cfg.vocab_padded * 4.0
+        out = {"weights": w_traffic, "activations": acts,
+               "kv_stream": kv_stream, "logits": logits}
+    out["total"] = sum(out.values())
+    return out
+
+
+def peak_residency(cfg: ModelConfig, shape: ShapeConfig, n_dev: int) -> Dict[str, float]:
+    """Per-device HBM residency (the 16 GiB check)."""
+    g = CellGeometry(cfg, shape, n_dev)
+    if shape.kind == "train":
+        params = _param_bytes(cfg, "qat") / n_dev          # 2-D sharded masters
+        opt = cfg.param_count() * 4.0 / n_dev              # bf16 m+v
+        grads = _param_bytes(cfg, "qat") / n_dev
+        # remat carries: one boundary activation per layer + one layer's
+        # backward live set (~6 boundary-sized f32 tensors)
+        carry = cfg.num_layers * g.b_local * g.s_local * cfg.d_model * 2.0
+        live = 6.0 * g.b_local * g.s_local * max(cfg.d_ff, cfg.d_model) * 4.0
+        logits = g.b_local * min(2048, shape.seq_len) * cfg.vocab_padded * 4.0
+        parts = {"params": params, "opt": opt, "grads": grads,
+                 "act_carries": carry, "bwd_live": live, "logits": logits}
+    else:
+        params = _param_bytes(cfg, "serve") / n_dev
+        cache = _cache_bytes(cfg, shape.global_batch, shape.seq_len) / n_dev
+        live = 4.0 * g.b_local * max(g.s_local if shape.kind == "prefill" else 1,
+                                     1) * max(cfg.d_ff, cfg.d_model) * 4.0
+        parts = {"params": params, "cache": cache, "live": live}
+    parts["total"] = sum(parts.values())
+    parts["fits_16g"] = parts["total"] <= HBM_PER_CHIP
+    return parts

@@ -1,0 +1,57 @@
+"""Paper Table IV — aggregate memory bandwidth & capacity.
+
+TOM's 200 TB/s on-chip figure from the bank model (core/rom.py), the
+comparison rows, and the TPU-adaptation twin: effective weight-stream
+bandwidth of packed-ternary HBM vs bf16 (the DESIGN.md §2.1 claim that 2-bit
+packing is an 8× memory-roofline lever, measured on this host as a proxy and
+structurally in the dry-run artifacts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rom, ternary
+from benchmarks.common import Report, close, time_fn
+
+
+def run() -> Report:
+    r = Report("bandwidth")
+
+    bw = rom.peak_bandwidth_bytes_s()
+    r.row("tom/aggregate_bw_tb_s", round(bw / 1e12, 1), close(bw / 1e12, 200.0, 0.02))
+    cap = rom.DEFAULT_CHIP.rom_mb + rom.DEFAULT_CHIP.sram_mb
+    r.row("tom/capacity_mb", round(cap, 2), "paper: 536.04 (498.54 ROM + 37.5 SRAM)")
+    for name, tbs, mb in rom.TABLE_IV_BANDWIDTH:
+        r.row(f"tableIV/{name}", tbs, f"capacity {mb} MB")
+    r.row("tom_vs_h100", round(bw / 1e12 / 4.8, 1), "paper: >41x")
+
+    # --- TPU adaptation: packed-ternary weight-stream advantage ---------------
+    # decode is weight-bandwidth-bound; bytes per step: bf16 2B/w, int4 0.5B/w,
+    # packed ternary 0.25B/w → 8x / 2x fewer bytes. Verify the packer hits the
+    # exact ratio and measure host-RAM GEMV streaming as a directional proxy.
+    k, n = 4096, 4096
+    w = np.random.default_rng(0).normal(size=(k, n)).astype(np.float32)
+    t, s = ternary.quantize(jnp.asarray(w))
+    packed = ternary.pack2(t)
+    r.row("packed_bytes_ratio_bf16", (k * n * 2) / packed.nbytes, "expect 8.0")
+    r.row("packed_bytes_ratio_int4", (k * n * 0.5) / packed.nbytes, "expect 2.0")
+
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(k,)).astype(np.float32))
+    wb = jnp.asarray(w, jnp.bfloat16)
+
+    f_bf16 = jax.jit(lambda x, w: x @ w.astype(jnp.float32))
+    f_pack = jax.jit(lambda x, p, s: (x @ ternary.unpack2(p).astype(jnp.float32)) * s)
+    t_bf16 = time_fn(lambda: jax.block_until_ready(f_bf16(x, wb)))
+    t_pack = time_fn(lambda: jax.block_until_ready(f_pack(x, packed, s)))
+    r.row("host_gemv_bf16_us", round(t_bf16 * 1e6, 1), "CPU proxy only")
+    r.row("host_gemv_packed_us", round(t_pack * 1e6, 1),
+          f"{t_bf16 / t_pack:.2f}x (CPU decode cost offsets HBM win; "
+          "TPU structural ratio is in the dry-run memory term)")
+    r.save()
+    return r
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Paper Fig 11 (area + TBT breakdown) and Fig 13 (vs CPU / A100) — the
+end-to-end BitNet-2B evaluation via the cycle-approximate simulator, plus a
+real CPU-executed serving sanity pass through the actual JAX engine.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core import rom
+from repro.core.simulator import TomSimulator
+from benchmarks.common import Report, close
+
+
+def run(quick: bool = False) -> Report:
+    r = Report("e2e")
+    cfg = get_config("bitnet-2b")
+    sim = TomSimulator(cfg)
+
+    # --- Fig 11a: area ---------------------------------------------------------
+    area = rom.chip_area()
+    r.row("fig11a/total_mm2", round(area.total_mm2, 1), close(area.total_mm2, 56.9, 0.03))
+    for kind, frac in area.breakdown().items():
+        want = {"rom": 0.58, "sram": 0.24, "compute": 0.18}[kind]
+        r.row(f"fig11a/{kind}_share", round(frac, 3), f"paper: {want:.2f}")
+
+    # --- Fig 11b: TBT breakdown at the paper's 1024 on-chip context -------------
+    br = sim.tbt_breakdown(context=1024)
+    r.row("fig11b/tbt_us", round(br["total_us"], 1), close(br["total_us"], 302.4, 0.02))
+    r.row("fig11b/ffn_share", round(br["ffn"], 3), "paper: 0.44")
+    r.row("fig11b/attn_share", round(br["attention"], 3), "paper: 0.34")
+    r.row("fig11b/peak_tps", round(1e6 / br["total_us"], 0),
+          close(1e6 / br["total_us"], 3306.0, 0.02))
+
+    # --- Fig 13: speedups / energy efficiency vs A100 + CPU ----------------------
+    cmp = sim.comparison_vs_baselines(256, 256)
+    r.row("fig13/e2e_speedup_vs_a100", round(cmp["a100"]["speedup"], 1),
+          close(cmp["a100"]["speedup"], 63.7, 0.05) + " (256/256 task)")
+    r.row("fig13/energy_eff_vs_a100", round(cmp["a100"]["energy_efficiency"], 1),
+          "paper: 63.7x x power ratio")
+    r.row("fig13/energy_eff_vs_cpu", round(cmp["cpu"]["energy_efficiency"], 0),
+          "paper: >4000x")
+    for pl, gl in ((64, 64), (128, 128), (512, 512)):
+        c = sim.comparison_vs_baselines(pl, gl)
+        r.row(f"fig13/e2e_tps@{pl}/{gl}", round(c["tom"]["tps"], 0),
+              f"speedup vs A100 {c['a100']['speedup']:.1f}x")
+    # TTFT: token-by-token prefill (the paper's mode)
+    for pl in (64, 256):
+        r.row(f"fig13/ttft_ms@{pl}", round(sim.ttft_s(pl) * 1e3, 2), "")
+
+    # --- real JAX serving engine sanity (reduced model on CPU) -------------------
+    if not quick:
+        from repro.launch.serve import build_engine
+        eng = build_engine("bitnet-2b", "tiny", slots=4, max_len=128,
+                           prefill="token")
+        for i in range(6):
+            eng.submit(list(range(3 + i, 13 + i)), max_new_tokens=8)
+        stats = eng.run_until_drained()
+        r.row("jax_engine/completed", stats.completed, "reduced bitnet-2b on CPU")
+        r.row("jax_engine/tps_host_cpu", round(stats.tps, 1),
+              "host-CPU figure; production rate comes from the dry-run roofline")
+    r.save()
+    return r
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Kernel-layer benchmark: Pallas kernels vs their pure-jnp oracles.
+
+TPU kernels are validated in interpret mode on CPU (correctness) and timed
+against the XLA path (directional only on CPU — the structural win is the
+dry-run memory term). Covers:
+  * ternary_matmul — packed 2-bit decode-in-kernel GEMM (C1's runtime analogue)
+  * flash_decode — context-tiled online-softmax decode (C3's in-lane kernel)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ternary
+from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.flash_decode import ref as fd_ref
+from repro.kernels.ternary_matmul import ops as tm_ops
+from repro.kernels.ternary_matmul import ref as tm_ref
+from benchmarks.common import Report, time_fn
+
+
+def run(quick: bool = False) -> Report:
+    r = Report("kernels")
+    rng = np.random.default_rng(0)
+
+    # --- ternary matmul -------------------------------------------------------
+    shapes = [(256, 512, 256), (512, 1024, 512)] if quick else \
+             [(256, 512, 256), (512, 1024, 512), (1024, 2048, 1024)]
+    for m, k, n in shapes:
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        t, s = ternary.quantize(w)
+        packed = ternary.pack2(t)
+        ref = tm_ref.ternary_matmul_ref(x, packed, s)
+        out = tm_ops.ternary_matmul(x, packed, s, interpret=True)
+        err = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+        r.row(f"ternary_matmul/{m}x{k}x{n}/allclose", round(err, 8),
+              "pallas(interpret) vs jnp oracle")
+        t_ref = time_fn(lambda: jax.block_until_ready(
+            tm_ref.ternary_matmul_ref(x, packed, s)), iters=3)
+        r.row(f"ternary_matmul/{m}x{k}x{n}/ref_us", round(t_ref * 1e6, 1), "")
+
+    # --- flash decode ------------------------------------------------------------
+    cases = [(2, 8, 2, 512, 64), (1, 8, 4, 1024, 128)]
+    for b, hq, hkv, s_len, d in cases:
+        g = hq // hkv
+        q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+        k_ = jnp.asarray(rng.normal(size=(b, hkv, s_len, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, hkv, s_len, d)), jnp.float32)
+        length = jnp.asarray(s_len - 7, jnp.int32)
+        ref = fd_ref.flash_decode_ref(q.reshape(b, hkv, g, d), k_, v, length)
+        out = fd_ops.decode_attention(q, k_, v, length, interpret=True)
+        err = float(jnp.max(jnp.abs(out.reshape(b, hkv, g, d) - ref))
+                    / (jnp.max(jnp.abs(ref)) + 1e-9))
+        r.row(f"flash_decode/b{b}h{hq}s{s_len}d{d}/allclose", round(err, 8), "")
+        t_ref = time_fn(lambda: jax.block_until_ready(
+            fd_ref.flash_decode_ref(q.reshape(b, hkv, g, d), k_, v, length)),
+            iters=3)
+        r.row(f"flash_decode/b{b}h{hq}s{s_len}d{d}/ref_us", round(t_ref * 1e6, 1), "")
+    r.save()
+    return r
+
+
+if __name__ == "__main__":
+    run()

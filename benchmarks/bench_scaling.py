@@ -1,0 +1,63 @@
+"""Paper Fig 15 — LoRA and context-length scaling overheads.
+
+(a) two-path LoRA execution cost on TBT/area/power for the paper's adapter
+    placements (None, Q+V, Q+K+V+O, All), ternary adapters in SRAM;
+(b) context scaling: TBT nearly flat to the paper's 2560 max (the attention
+    engines have "inherent computational redundancy"), SRAM area/power linear.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import get_config
+from repro.core import rom
+from repro.core.powergate import GatingSchedule, chip_power
+from repro.core.simulator import TomSimulator
+from benchmarks.common import Report
+
+LORA_PLACEMENTS = {
+    "none": 0,
+    "q+v": 2,
+    "q+k+v+o": 4,
+    "all_weights": 7,   # q,k,v,o,up,gate/None,down — swiglu counts 7, relu2 6
+}
+
+
+def run() -> Report:
+    r = Report("scaling")
+    cfg = get_config("bitnet-2b")
+    sim = TomSimulator(cfg)
+    rank = 16
+
+    # --- Fig 15a: LoRA overhead -----------------------------------------------
+    base_tbt = sim.tbt_s(1024)
+    base_area = rom.chip_area().total_mm2
+    base_power = chip_power(GatingSchedule(cfg.num_layers)).total_w
+    for name, n_targets in LORA_PLACEMENTS.items():
+        tbt = sim.tbt_s(1024, lora_targets=n_targets, lora_rank=rank)
+        # ternary adapters live in SRAM next to the KV cache: 2 bits/param
+        adapter_params = n_targets * cfg.num_layers * 2 * cfg.d_model * rank
+        adapter_mb = adapter_params / 4 / rom.MB
+        area = base_area + rom.sram_area_mm2(adapter_mb)
+        power = base_power * (1 + 0.30 * adapter_mb / rom.DEFAULT_CHIP.sram_mb) \
+            + 0.0  # SRAM leakage share scales with added capacity
+        r.row(f"fig15a/{name}/tbt_overhead", round(tbt / base_tbt - 1, 4),
+              f"+{(tbt - base_tbt) * 1e6:.1f}us")
+        r.row(f"fig15a/{name}/area_overhead", round(area / base_area - 1, 4),
+              f"adapters {adapter_mb:.2f} MB SRAM")
+        r.row(f"fig15a/{name}/power_overhead", round(power / base_power - 1, 4), "")
+
+    # --- Fig 15b: context scaling ------------------------------------------------
+    base = sim.tbt_s(512)
+    for ctx in (512, 1024, 1536, 2048, 2560):
+        tbt = sim.tbt_s(ctx)
+        kv_mb = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * ctx) / rom.MB
+        sram_mm2 = rom.sram_area_mm2(kv_mb)
+        r.row(f"fig15b/ctx={ctx}/tbt_rel", round(tbt / base, 4),
+              f"paper: near-flat; kv={kv_mb:.1f}MB sram={sram_mm2:.2f}mm2")
+    r.save()
+    return r
+
+
+if __name__ == "__main__":
+    run()

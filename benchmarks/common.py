@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: timing, row emission, artifact paths."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+ARTIFACTS.mkdir(exist_ok=True)
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (after warmup)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Report:
+    """Collects (name, value, derived) rows, prints CSV, saves JSON."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: List[Dict[str, Any]] = []
+
+    def row(self, name: str, value, derived: str = "") -> None:
+        self.rows.append({"name": name, "value": value, "derived": derived})
+        v = f"{value:.6g}" if isinstance(value, float) else str(value)
+        print(f"{self.bench},{name},{v},{derived}")
+
+    def save(self) -> Path:
+        out = ARTIFACTS / f"bench_{self.bench}.json"
+        out.write_text(json.dumps(self.rows, indent=1))
+        return out
+
+
+def close(a: float, b: float, tol: float) -> str:
+    err = abs(a - b) / max(abs(b), 1e-12)
+    return f"err={err:.1%} vs paper {b:g} ({'OK' if err <= tol else 'MISS'})"

@@ -1,0 +1,68 @@
+"""Benchmark harness entry point: one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``bench,name,value,derived`` CSV rows per bench, saves JSON artifacts
+under artifacts/, and appends the roofline table if dry-run artifacts exist.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="skip slow JAX e2e passes")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_asic, bench_bandwidth, bench_c3_variants,
+                            bench_e2e, bench_kernels, bench_power,
+                            bench_rom_density, bench_scaling, bench_sparsity)
+
+    benches = {
+        "sparsity": bench_sparsity.run,                       # Fig 4
+        "rom_density": bench_rom_density.run,                 # Fig 9/10, Tab II/III
+        "bandwidth": bench_bandwidth.run,                     # Tab IV
+        "e2e": lambda: bench_e2e.run(quick=args.quick),       # Fig 11/13
+        "power": bench_power.run,                             # Fig 12, Fig 8
+        "asic": bench_asic.run,                               # Fig 14
+        "scaling": bench_scaling.run,                         # Fig 15
+        "kernels": lambda: bench_kernels.run(quick=args.quick),
+        "c3_variants": lambda: bench_c3_variants.run(quick=args.quick),  # §IV-D.2 ablation
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    t0 = time.time()
+    failures = []
+    for name, fn in benches.items():
+        print(f"\n=== bench:{name} ===")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"bench {name} FAILED: {e!r}", file=sys.stderr)
+
+    # roofline table (requires dry-run artifacts; skipped gracefully if absent)
+    print("\n=== roofline (from dry-run artifacts) ===")
+    try:
+        from benchmarks import roofline
+        roofline.main([])
+    except SystemExit:
+        pass
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline skipped: {e!r}")
+
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s; "
+          f"{len(failures)} failures")
+    for name, err in failures:
+        print("  FAILED:", name, err)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

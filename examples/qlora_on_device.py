@@ -1,0 +1,62 @@
+"""QLoRA on-device tuning (paper C4): adapt an IMMUTABLE packed-ROM base.
+
+    PYTHONPATH=src python examples/qlora_on_device.py
+
+The paper's two-path execution: the ternary base weights live in ROM and can
+never change post-fabrication; adaptation happens through ternary LoRA
+adapters in SRAM (LoTA-QAF-style), re-using the same Ternary×FP8 compute.
+
+This example:
+  1. builds a reduced model in 'qlora' mode (packed base + adapters),
+  2. snapshots the packed base bytes,
+  3. fine-tunes on the synthetic corpus — ONLY adapter/norm leaves train,
+  4. verifies the loss falls AND the packed base is bit-identical after
+     training (the ROM-immutability invariant).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.launch.train import TrainConfig, Trainer  # noqa: E402
+
+
+def packed_fingerprint(params) -> int:
+    h = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = jax.tree_util.keystr(path)
+        if "packed" in key:
+            h ^= hash(np.asarray(leaf).tobytes()) ^ hash(key)
+    return h
+
+
+def main() -> int:
+    tc = TrainConfig(arch="qwen3-1.7b", preset="tiny", mode="qlora",
+                     steps=60, batch=4, seq=128, lr=2e-3, warmup=10,
+                     log_every=10)
+    trainer = Trainer(tc)
+
+    before = packed_fingerprint(trainer.params)
+    n_train = sum(
+        np.prod(l.shape)
+        for p, l in jax.tree_util.tree_flatten_with_path(trainer.params)[0]
+        if "lora" in jax.tree_util.keystr(p))
+    n_total = sum(np.prod(l.shape) for l in jax.tree.leaves(trainer.params))
+    print(f"[qlora] trainable adapter params: {n_train / 1e3:.0f}K "
+          f"of {n_total / 1e6:.1f}M total leaves")
+
+    final = trainer.run()
+    after = packed_fingerprint(trainer.params)
+
+    loss = final.get("ce_loss", final.get("loss"))
+    print(f"[qlora] final loss {loss:.3f} (random = {np.log(2048):.2f})")
+    assert before == after, "ROM base mutated — C4 invariant violated!"
+    print("[qlora] packed ROM base bit-identical after training ✓ "
+          "(the paper's immutable 'knowledge foundation')")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

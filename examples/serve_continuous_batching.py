@@ -1,0 +1,39 @@
+"""Serving example: continuous batching over the packed-ternary model.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+
+Demonstrates the production serving path on a reduced BitNet-2B:
+  * requests with mixed prompt lengths / sampling settings arrive over time,
+  * slots free and refill mid-flight (continuous batching),
+  * both prefill modes: the paper's token-by-token ("eliminates the
+    prefill/decoding distinction", §IV-D.2) and the beyond-paper batched
+    prefill — outputs are identical under greedy decoding.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.launch.serve import build_engine  # noqa: E402
+
+for prefill in ("token", "batched"):
+    rng = np.random.default_rng(0)   # identical workload for both modes
+    eng = build_engine("bitnet-2b", "tiny", slots=4, max_len=128,
+                       prefill=prefill)
+    print(f"\n=== prefill mode: {prefill} ===")
+    reqs = []
+    # staggered workload: 12 requests, more than slots → queueing + refill
+    for i in range(12):
+        plen = int(rng.integers(4, 24))
+        prompt = list(rng.integers(0, 1000, size=plen))
+        reqs.append(eng.submit(prompt, max_new_tokens=12,
+                               temperature=0.0 if i % 3 else 0.7,
+                               top_k=0 if i % 3 else 20))
+    stats = eng.run_until_drained()
+    ttfts = sorted(r.ttft_s for r in reqs)
+    print(f"completed {stats.completed}/12 | {stats.tokens_out} tokens in "
+          f"{stats.ticks} ticks | {stats.tps:.1f} tok/s (host CPU)")
+    print(f"TTFT p50 {ttfts[len(ttfts)//2]*1e3:.0f} ms, "
+          f"p max {ttfts[-1]*1e3:.0f} ms")
+    print("sample output:", reqs[0].output)

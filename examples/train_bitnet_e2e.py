@@ -1,0 +1,74 @@
+"""End-to-end driver: QAT-train a ~100M-param BitNet-style model from scratch.
+
+    PYTHONPATH=src python examples/train_bitnet_e2e.py [--steps 300]
+
+This is the 'train a ~100M model for a few hundred steps' deliverable: the
+full production path — ternary STE fake-quant on every linear (how BitNet-2B
+itself was trained), AdamW + cosine schedule, deterministic resumable data,
+async atomic checkpoints, fault-tolerant step runner — on a ~100M-parameter
+BitNet-architecture model sized for CPU wall-clock. Loss on the structured
+synthetic corpus should fall from ~ln(vocab)≈7.6 to well under 5.
+
+Resume works: re-running continues from the latest checkpoint in --ckpt-dir.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import ModelConfig, LoRAConfig  # noqa: E402
+from repro.launch.train import TrainConfig, Trainer  # noqa: E402
+import repro.configs  # noqa: E402
+
+
+# ~100M params: 12L × (4·768² + 3·768·2048) + 32768·768 (tied embedding)
+CONFIG_100M = ModelConfig(
+    name="bitnet-100m",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=2048,          # synthetic-corpus vocab (keeps the head cheap)
+    ffn_kind="relu2",
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    lora=LoRAConfig(rank=16, targets=("q", "v")),
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/bitnet_100m_ckpt")
+    args = ap.parse_args()
+
+    # register the custom config under an arch id the Trainer can resolve
+    import repro.configs.base as base
+    mod_name = "bitnet_100m"
+    base._MODULE_FOR_ARCH["bitnet-100m"] = mod_name
+    sys.modules[f"repro.configs.{mod_name}"] = type(sys)("cfg")
+    sys.modules[f"repro.configs.{mod_name}"].CONFIG = CONFIG_100M
+
+    n_params = CONFIG_100M.param_count()
+    print(f"[e2e] bitnet-100m: {n_params / 1e6:.1f}M params, "
+          f"{args.steps} steps x {args.batch}x{args.seq} tokens")
+
+    tc = TrainConfig(arch="bitnet-100m", preset="full", mode="qat",
+                     steps=args.steps, batch=args.batch, seq=args.seq,
+                     lr=6e-4, warmup=40, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=100, log_every=10)
+    trainer = Trainer(tc)
+    final = trainer.run()
+    loss = final.get("ce_loss", final.get("loss"))
+    print(f"[e2e] final loss {loss:.3f} "
+          f"({'LEARNED' if loss < 6.5 else 'no signal?'}; random = 7.62)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

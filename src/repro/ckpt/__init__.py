@@ -1,0 +1,5 @@
+"""Checkpointing: atomic sharded save/restore with manifest + CRC,
+async save thread, restore-with-resharding (elastic re-mesh)."""
+from repro.ckpt import checkpoint
+
+__all__ = ["checkpoint"]

@@ -1,0 +1,27 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual MLP branch.
+
+35L d_model=7168 56H (GQA kv=8) expert d_ff=4864 vocab=32000, MoE 128e top-2
+[hf:Snowflake/snowflake-arctic-base; hf]
+"""
+from repro.configs.base import LoRAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    ffn_kind="swiglu",
+    moe=MoEConfig(
+        num_experts=128,
+        num_experts_per_tok=2,
+        expert_d_ff=4864,
+        # Arctic runs a dense residual MLP in parallel with the MoE branch.
+        dense_residual_d_ff=4864,
+    ),
+    lora=LoRAConfig(rank=16, targets=("q", "v")),
+)

@@ -1,0 +1,261 @@
+"""Config system for the TOM reproduction framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. Configs are
+pure dataclasses — no jax import at module scope — so that ``launch/dryrun.py``
+can set XLA flags before any device initialisation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    expert_d_ff: int = 0
+    # Arctic-style dense MLP residual branch running in parallel with the MoE.
+    dense_residual_d_ff: int = 0
+    # DeepSeek-style: first k layers use a dense FFN instead of MoE.
+    first_k_dense: int = 0
+    dense_d_ff: int = 0
+    # Router options
+    router_aux_free_bias: bool = True  # DeepSeek-V3-style aux-loss-free balancing term
+    capacity_factor: float = 1.25      # used by the dropping (EP) path
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block configuration."""
+
+    state_size: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    num_groups: int = 1
+    conv_width: int = 4
+    chunk_size: int = 256
+
+
+@dataclass(frozen=True)
+class LoRAConfig:
+    """Ternary QLoRA adapters (paper §IV-D.3, LoTA-QAF-style)."""
+
+    rank: int = 16
+    targets: Tuple[str, ...] = ("q", "v")  # which projections carry adapters
+    ternary_adapters: bool = True
+    alpha: float = 32.0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # --- attention options -------------------------------------------------
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    attention_kind: str = "gqa"  # gqa | mla | none
+    mla: Optional[MLAConfig] = None
+    # --- ffn ----------------------------------------------------------------
+    ffn_kind: str = "swiglu"  # swiglu | gelu | relu2
+    moe: Optional[MoEConfig] = None
+    # --- ssm / hybrid --------------------------------------------------------
+    ssm: Optional[SSMConfig] = None
+    # hybrid pattern: for every layer index, 'a' (attention block) or 'm'
+    # (mamba2 block). Empty → homogeneous per `family`.
+    block_pattern: str = ""
+    # zamba2: attention blocks share a single set of weights
+    shared_attention: bool = False
+    # --- embedding / head ----------------------------------------------------
+    tie_embeddings: bool = False
+    # modality frontend stub: if set, input_specs() provides pre-computed
+    # frame/patch embeddings of this dimension instead of token ids.
+    frontend_stub_dim: int = 0
+    # --- quantisation (the paper's technique) --------------------------------
+    ternary_weights: bool = True   # C1: pack every linear as 2-bit ternary
+    fp8_activations: bool = True   # activations/KV in e4m3 with scales
+    fp8_kv_cache: bool = True
+    # --- adapters -------------------------------------------------------------
+    lora: Optional[LoRAConfig] = None
+    # --- misc -----------------------------------------------------------------
+    max_seq_len: int = 32_768
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding-table vocab padded to a multiple of 128 so the
+        vocab-sharded embedding/head divide evenly across 16 lanes (only
+        mamba2-1.3b pads: 50280 → 50304). Logits at the pad positions are
+        masked to −inf; ``vocab_size`` stays the logical vocabulary."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Rough parameter count (embedding + blocks), used by roofline MODEL_FLOPS.
+    def param_count(self, active_only: bool = False) -> int:
+        d = self.d_model
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        n_attn, n_mamba = self._block_counts()
+        # attention params
+        if self.attention_kind == "gqa":
+            attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        elif self.attention_kind == "mla":
+            m = self.mla
+            qh = self.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+            attn = (
+                d * m.q_lora_rank
+                + m.q_lora_rank * qh
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + self.num_heads * m.v_head_dim * d
+            )
+        else:
+            attn = 0
+        # ffn params
+        if self.moe is not None:
+            e = self.moe
+            expert = self._ffn_params(d, e.expert_d_ff)
+            k_active = e.num_experts_per_tok + e.num_shared_experts
+            if active_only:
+                ffn = k_active * expert
+            else:
+                ffn = (e.num_experts + e.num_shared_experts) * expert
+            ffn += d * e.num_experts  # router
+            if e.dense_residual_d_ff:
+                ffn += self._ffn_params(d, e.dense_residual_d_ff)
+        else:
+            ffn = self._ffn_params(d, self.d_ff)
+        # mamba2 params
+        if self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            conv_dim = d_in + 2 * s.num_groups * s.state_size
+            mamba = (
+                d * (2 * d_in + 2 * s.num_groups * s.state_size + nheads)  # in_proj
+                + conv_dim * s.conv_width
+                + d_in * d  # out_proj
+                + 2 * nheads  # A_log, D
+            )
+        else:
+            mamba = 0
+
+        total = emb
+        total += n_attn * (attn + ffn)
+        total += n_mamba * mamba
+        # deepseek first-k-dense correction
+        if self.moe is not None and self.moe.first_k_dense:
+            moe_ffn_full = ffn
+            dense_ffn = self._ffn_params(d, self.moe.dense_d_ff)
+            total -= self.moe.first_k_dense * (moe_ffn_full - dense_ffn)
+        return total
+
+    def _ffn_params(self, d: int, dff: int) -> int:
+        if self.ffn_kind == "swiglu":
+            return 3 * d * dff
+        return 2 * d * dff
+
+    def _block_counts(self) -> Tuple[int, int]:
+        """(# attention blocks incl. their FFN, # mamba blocks)."""
+        if self.block_pattern:
+            n_a = self.block_pattern.count("a")
+            n_m = self.block_pattern.count("m")
+            return n_a, n_m
+        if self.family == "ssm":
+            return 0, self.num_layers
+        return self.num_layers, 0
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells (assigned per architecture)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "pixtral-12b",
+    "musicgen-large",
+    "qwen3-1.7b",
+    "mistral-large-123b",
+    "yi-34b",
+    "starcoder2-7b",
+    "arctic-480b",
+    "deepseek-v2-236b",
+    "mamba2-1.3b",
+    "zamba2-7b",
+)
+
+# Paper's own model is additionally available but not part of the assigned grid.
+EXTRA_ARCH_IDS = ("bitnet-2b",)
+
+_MODULE_FOR_ARCH = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS + EXTRA_ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULE_FOR_ARCH:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULE_FOR_ARCH)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR_ARCH[arch]}")
+    return mod.CONFIG
+
+
+def shapes_for_arch(cfg: ModelConfig) -> Sequence[ShapeConfig]:
+    """The assigned shape cells for an architecture.
+
+    ``long_500k`` needs sub-quadratic context handling: run it for SSM/hybrid
+    families only, skip for pure full-attention archs (noted in DESIGN.md §4).
+    """
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in ("ssm", "hybrid"):
+        names.append("long_500k")
+    return [SHAPES[n] for n in names]

@@ -1,0 +1,36 @@
+"""deepseek-v2-236b [moe] — MLA kv_lora=512, 2 shared + 160 routed top-6.
+
+60L d_model=5120 128H (MLA) expert d_ff=1536 vocab=102400, MoE 160e top-6
+[arXiv:2405.04434; hf]
+"""
+from repro.configs.base import LoRAConfig, MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,  # MLA: per-head keys are reconstructed from the latent
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=102400,
+    attention_kind="mla",
+    mla=MLAConfig(
+        kv_lora_rank=512,
+        q_lora_rank=1536,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    ffn_kind="swiglu",
+    moe=MoEConfig(
+        num_experts=160,
+        num_experts_per_tok=6,
+        num_shared_experts=2,
+        expert_d_ff=1536,
+        first_k_dense=1,
+        dense_d_ff=12288,
+    ),
+    lora=LoRAConfig(rank=16, targets=("q", "v")),
+)

@@ -1,0 +1,27 @@
+"""mamba2-1.3b [ssm] — SSD (state-space duality), attention-free.
+
+48L d_model=2048 d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; unverified]
+
+TOM applicability (DESIGN.md §4): the paper's two-phase decode attention (C3)
+is inapplicable — there is no attention. Ternary packing (C1), lane-tiled
+projections with tree reduction (C2) and ternary QLoRA (C4) apply unchanged.
+"""
+from repro.configs.base import LoRAConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    attention_kind="none",
+    ssm=SSMConfig(state_size=128, head_dim=64, expand=2, num_groups=1, conv_width=4),
+    tie_embeddings=True,
+    max_seq_len=1_048_576,
+    lora=LoRAConfig(rank=16, targets=("in_proj", "out_proj")),
+)

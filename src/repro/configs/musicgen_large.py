@@ -1,0 +1,23 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=2048 32H (GQA kv=32 == MHA) d_ff=8192 vocab=2048
+[arXiv:2306.05284; hf]
+"""
+from repro.configs.base import LoRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    ffn_kind="gelu",
+    # EnCodec frontend is a STUB: input_specs() provides pre-computed frame
+    # embeddings; the 4 codebooks are modelled as the flat vocab above.
+    frontend_stub_dim=2048,
+    lora=LoRAConfig(rank=16, targets=("q", "v")),
+)

@@ -1,0 +1,24 @@
+"""pixtral-12b [vlm] — Pixtral ViT frontend (stub) + Mistral-NeMo-style backbone.
+
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072
+[hf:mistralai/Pixtral-12B-2409; unverified]
+"""
+from repro.configs.base import LoRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    ffn_kind="swiglu",
+    rope_theta=1_000_000.0,
+    # Vision frontend is a STUB per the assignment: input_specs() provides
+    # pre-computed patch embeddings at d_model for the image prefix tokens.
+    frontend_stub_dim=5120,
+    lora=LoRAConfig(rank=16, targets=("q", "v")),
+)

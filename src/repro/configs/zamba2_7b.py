@@ -1,0 +1,34 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64
+[arXiv:2411.15242; unverified]
+
+Block pattern: every 6th block is the SHARED attention+MLP block (one set of
+weights reused at every attention position, Zamba2-style); the rest are
+Mamba2 blocks.
+"""
+from repro.configs.base import LoRAConfig, ModelConfig, SSMConfig
+
+
+def _pattern(n_layers: int, period: int = 6) -> str:
+    # m m m m m a | m m m m m a | ...
+    return "".join("a" if (i % period) == (period - 1) else "m" for i in range(n_layers))
+
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ffn_kind="gelu",
+    ssm=SSMConfig(state_size=64, head_dim=64, expand=2, num_groups=2, conv_width=4),
+    block_pattern=_pattern(81),
+    shared_attention=True,
+    max_seq_len=1_048_576,
+    lora=LoRAConfig(rank=16, targets=("q", "v")),
+)

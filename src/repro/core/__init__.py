@@ -1,0 +1,9 @@
+"""The paper's primary contribution as composable JAX modules.
+
+C1 ternary+ROM  -> `ternary` (quant/pack/STE), `rom` (density/area/power model)
+C2 lanes+tree   -> `lanes` (shard_map lane linears, tree_sum/tree_max)
+C3 attention    -> `attention` (two-phase flash-decode vs stock vs dense)
+C4 QLoRA        -> `qlora` (two-path execution, ternary adapters)
+C5 power gating -> `powergate` (schedule + Fig 12 model), `simulator` (SecV)
+plus `fp8` (heterogeneous-precision activations / KV cache).
+"""

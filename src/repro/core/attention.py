@@ -1,0 +1,269 @@
+"""TOM's two-phase distributed decode attention (paper C3, §IV-D.2 / Fig 7b).
+
+The paper adapts flash-decoding to its reduction-tree hardware: instead of
+each context tile maintaining rescaled partial outputs (the stock
+flash-decoding combine), TOM first establishes the *global* softmax max with
+one tree ``max`` round, then every lane rescales once and a single tree
+``sum`` round produces the output:
+
+    step 0: local scores sᵢ = q·Kᵢᵀ, local max mᵢ         (per lane)
+    step 1: m = tree_max(mᵢ)                               (reduction tree)
+    step 2: pᵢ = exp(sᵢ − m); dᵢ = Σ pᵢ                    (per lane)
+    step 3: oᵢ = pᵢ · Vᵢ                                   (per lane)
+    step 4: out = tree_sum(oᵢ) / tree_sum(dᵢ)              (reduction tree)
+
+Stock flash-decoding (the baseline we compare against) avoids the early max
+round by carrying (m, d, o) triples and combining with rescaling — optimal
+when the combine is expensive (GPU kernel launches), while TOM's variant is
+optimal when the tree is fast (on TPU: a pmax on a 16-wide ICI axis).
+
+All three variants below are mathematically identical (tests assert
+equivalence to the dense reference); KV may be fp8 (e4m3 + per-layer scale),
+which is the paper's Act./KV format.
+
+These functions run *inside* ``shard_map`` with the KV cache sharded along
+the context dimension over the ``model`` axis (the paper's "KV cache is
+distributed across the on-chip SRAMs, tiled across the context dimension").
+Outside shard_map (axis_name=None) they degenerate to single-device
+flash-decoding over one tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lanes import tree_max, tree_sum
+
+NEG_INF = -1e30
+
+
+def _widen(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference (oracle)
+# ---------------------------------------------------------------------------
+
+
+def dense_decode_attention(
+    q: jax.Array,          # (B, H, D)
+    k: jax.Array,          # (B, H, S, D)
+    v: jax.Array,          # (B, H, S, D)
+    mask: Optional[jax.Array] = None,  # (B, S) True = attend
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token decode attention, materialized softmax. Ground truth."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhd,bhsd->bhs", _widen(q), _widen(k)) * scale
+    if mask is not None:
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, _widen(v))
+
+
+# ---------------------------------------------------------------------------
+# TOM two-phase flash decode (paper-faithful, C3)
+# ---------------------------------------------------------------------------
+
+
+def tom_flash_decode(
+    q: jax.Array,               # (B, H, D)            replicated across lanes
+    k_local: jax.Array,         # (B, H, S_local, D)   this lane's context tile
+    v_local: jax.Array,         # (B, H, S_local, D)
+    *,
+    axis_name: Optional[str],
+    mask_local: Optional[jax.Array] = None,  # (B, S_local)
+    scale: Optional[float] = None,
+    kv_scale: Optional[jax.Array] = None,    # fp8 KV dequant scale
+) -> jax.Array:
+    """Fig 7(b) dataflow: global-max round first, single rescale, tree-sum."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    kf = _widen(k_local)
+    vf = _widen(v_local)
+    if kv_scale is not None:
+        kf = kf * kv_scale
+        vf = vf * kv_scale
+
+    # step 0: local scores + local max
+    s = jnp.einsum("bhd,bhsd->bhs", _widen(q), kf) * scale
+    if mask_local is not None:
+        s = jnp.where(mask_local[:, None, :], s, NEG_INF)
+    m_local = jnp.max(s, axis=-1)                      # (B, H)
+
+    # step 1: global max via the reduction tree
+    m = tree_max(m_local, axis_name)
+
+    # step 2: rescale once, local denominator
+    p = jnp.exp(s - m[..., None])                      # (B, H, S_local)
+    d_local = jnp.sum(p, axis=-1)                      # (B, H)
+
+    # step 3: local weighted values
+    o_local = jnp.einsum("bhs,bhsd->bhd", p, vf)       # (B, H, D)
+
+    # step 4: single tree-sum round for numerator and denominator
+    o = tree_sum(o_local, axis_name)
+    den = tree_sum(d_local, axis_name)
+    return o / jnp.maximum(den[..., None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Stock flash-decoding baseline (per-tile rescale + (m, d, o) combine)
+# ---------------------------------------------------------------------------
+
+
+def stock_flash_decode(
+    q: jax.Array,
+    k_local: jax.Array,
+    v_local: jax.Array,
+    *,
+    axis_name: Optional[str],
+    mask_local: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    kv_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Flash-decoding as on GPUs: each tile produces (m, d, o·d) with its own
+    max; the cross-tile combine rescales by exp(mᵢ − m). On the tree hardware
+    this costs the same collectives but extra lane-local exp/mul work — the
+    trade the paper calls out. Kept as the comparison baseline."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    kf = _widen(k_local)
+    vf = _widen(v_local)
+    if kv_scale is not None:
+        kf = kf * kv_scale
+        vf = vf * kv_scale
+
+    s = jnp.einsum("bhd,bhsd->bhs", _widen(q), kf) * scale
+    if mask_local is not None:
+        s = jnp.where(mask_local[:, None, :], s, NEG_INF)
+    m_local = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m_local[..., None])
+    d_local = jnp.sum(p, axis=-1)
+    o_local = jnp.einsum("bhs,bhsd->bhd", p, vf)
+
+    # combine: global max, rescale each tile's (d, o) by exp(m_local − m)
+    m = tree_max(m_local, axis_name)
+    corr = jnp.exp(m_local - m)
+    o = tree_sum(o_local * corr[..., None], axis_name)
+    den = tree_sum(d_local * corr, axis_name)
+    return o / jnp.maximum(den[..., None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Chunked single-device flash decode (used when context is lane-local, and by
+# the long-context path to bound VMEM)
+# ---------------------------------------------------------------------------
+
+
+def chunked_flash_decode(
+    q: jax.Array,               # (B, H, D)
+    k: jax.Array,               # (B, H, S, D)
+    v: jax.Array,
+    *,
+    chunk: int = 2048,
+    mask: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax decode over context chunks with lax.scan (O(chunk) live
+    scores). Mirrors what the Pallas flash_decode kernel does in VMEM."""
+    b, h, s_len, d = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    n_chunks = -(-s_len // chunk)
+    pad = n_chunks * chunk - s_len
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pad_mask = jnp.arange(n_chunks * chunk) < s_len
+        mask = pad_mask[None, :] & (mask if mask is not None else True)
+    kc = k.reshape(b, h, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    if mask is not None:
+        mc = jnp.broadcast_to(mask, (b, n_chunks * chunk)).reshape(b, n_chunks, chunk)
+        mc = mc.transpose(1, 0, 2)
+    else:
+        mc = jnp.ones((n_chunks, b, chunk), bool)
+
+    qf = _widen(q)
+
+    def step(carry, inp):
+        m_run, d_run, o_run = carry
+        k_i, v_i, msk = inp
+        s = jnp.einsum("bhd,bhsd->bhs", qf, _widen(k_i)) * scale
+        s = jnp.where(msk[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        d_new = d_run * corr + jnp.sum(p, axis=-1)
+        o_new = o_run * corr[..., None] + jnp.einsum("bhs,bhsd->bhd", p, _widen(v_i))
+        return (m_new, d_new, o_new), None
+
+    init = (
+        jnp.full((b, h), NEG_INF, jnp.float32),
+        jnp.zeros((b, h), jnp.float32),
+        jnp.zeros((b, h, d), jnp.float32),
+    )
+    (m_f, d_f, o_f), _ = jax.lax.scan(step, init, (kc, vc, mc))
+    return o_f / jnp.maximum(d_f[..., None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# GQA wrapper: expand KV heads to query heads lazily via reshape-free einsum
+# ---------------------------------------------------------------------------
+
+
+def gqa_decode(
+    q: jax.Array,             # (B, Hq, D)
+    k_local: jax.Array,       # (B, Hkv, S_local, D)
+    v_local: jax.Array,
+    *,
+    axis_name: Optional[str],
+    variant: str = "tom",     # tom | stock
+    mask_local: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    kv_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Grouped-query decode: Hq queries share Hkv KV heads (Hq % Hkv == 0).
+
+    Internally reshapes queries to (B, Hkv, G, D) and folds the group dim into
+    the score einsum so KV is never materialized per-query-head.
+    """
+    b, hq, d = q.shape
+    hkv = k_local.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    kf = _widen(k_local)
+    vf = _widen(v_local)
+    if kv_scale is not None:
+        kf = kf * kv_scale
+        vf = vf * kv_scale
+
+    s = jnp.einsum("bhgd,bhsd->bhgs", _widen(qg), kf) * scale
+    if mask_local is not None:
+        s = jnp.where(mask_local[:, None, None, :], s, NEG_INF)
+    m_local = jnp.max(s, axis=-1)
+
+    if variant == "tom":
+        m = tree_max(m_local, axis_name)
+        p = jnp.exp(s - m[..., None])
+        d_local = jnp.sum(p, axis=-1)
+        o_local = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+        o = tree_sum(o_local, axis_name)
+        den = tree_sum(d_local, axis_name)
+    else:
+        p = jnp.exp(s - m_local[..., None])
+        d_local = jnp.sum(p, axis=-1)
+        o_local = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+        m = tree_max(m_local, axis_name)
+        corr = jnp.exp(m_local - m)
+        o = tree_sum(o_local * corr[..., None], axis_name)
+        den = tree_sum(d_local * corr, axis_name)
+    out = o / jnp.maximum(den[..., None], 1e-30)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,37 @@
+"""FP8 (e4m3) activation / KV-cache quantisation.
+
+TOM's heterogeneous-precision scheme (§IV-C.c): linears run Ternary×FP8 and
+attention runs FP8×FP8. On TPU we keep values in ``float8_e4m3fn`` with
+per-tensor (or per-head) power-of-two-friendly scales, and widen to bf16 at
+the MXU boundary (fp8 dot is emulated on CPU; on TPU v5e+ the MXU consumes
+bf16 — fp8 here buys *bytes* in HBM/VMEM for the KV cache, which is the
+memory-roofline lever, mirroring the paper's SRAM-capacity argument).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+E4M3_MAX = 448.0
+EPS = 1e-12
+
+
+def quantize(x: jax.Array, axis=None) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric absmax quantisation to e4m3. Returns (x8, scale_f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, EPS) / E4M3_MAX
+    x8 = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    return x8, scale.astype(jnp.float32)
+
+
+def dequantize(x8: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (x8.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quantize(x: jax.Array, axis=None) -> jax.Array:
+    """Round-trip through e4m3 (QAT / accuracy studies). Differentiable via STE."""
+    x8, s = quantize(x, axis=axis)
+    xq = dequantize(x8, s, dtype=x.dtype)
+    return x + jax.lax.stop_gradient(xq - x)

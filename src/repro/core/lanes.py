@@ -1,0 +1,141 @@
+"""Distributed Processing Lanes + global reduction tree (paper C2, §IV-C).
+
+TOM's lane architecture maps 1:1 onto JAX SPMD over the ``model`` mesh axis
+(DESIGN.md §2.2):
+
+    Processing Lane      ≙ one device along the ``model`` axis
+    local ROM            ≙ the lane's shard of every packed-ternary weight
+    local SRAM           ≙ the lane's shard of the KV cache / adapters
+    global reduction tree≙ ``psum`` / ``pmax`` over the ``model`` axis
+    "no direct cross-lane communication"
+                         ≙ the paper-faithful path uses ONLY tree collectives
+                           (no all_to_all / ppermute on the model axis)
+
+Linear layers follow Fig 7(a): the weight is tiled along the *input hidden*
+(K, contracting) dimension; every lane computes a partial GEMV against its
+activation slice; the reduction tree sums the partials. The functions here
+are written to run *inside* ``shard_map`` (they take the axis name) with pure
+single-device reference versions alongside.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+
+@dataclass(frozen=True)
+class LaneConfig:
+    """The paper's Table I lane geometry (informational at JAX level; the mesh
+    decides real lane count — 16 on the production mesh, matching the paper)."""
+
+    n_lanes: int = 16
+    mvus_per_lane: int = 10
+
+
+# ---------------------------------------------------------------------------
+# Reduction tree
+# ---------------------------------------------------------------------------
+
+
+def tree_sum(x: jax.Array, axis_name: Optional[str]) -> jax.Array:
+    """Global reduction tree, sum port. Identity outside shard_map."""
+    return jax.lax.psum(x, axis_name) if axis_name else x
+
+
+def tree_max(x: jax.Array, axis_name: Optional[str]) -> jax.Array:
+    """Global reduction tree, max port (used by two-phase attention, C3)."""
+    return jax.lax.pmax(x, axis_name) if axis_name else x
+
+
+# ---------------------------------------------------------------------------
+# Lane-tiled linear layers (Fig 7a)
+# ---------------------------------------------------------------------------
+
+
+def lane_linear(
+    x_local: jax.Array,
+    w_local: jax.Array,
+    *,
+    axis_name: Optional[str],
+    scale: Optional[jax.Array] = None,
+    reduce: bool = True,
+) -> jax.Array:
+    """Input-dim-sharded linear: ``x_local (…, K/L) @ w_local (K/L, N)``.
+
+    Each lane holds a K-slice of the weight ("its ROM banks") and the matching
+    activation slice; partials are aggregated on the reduction tree. With
+    ``reduce=False`` the caller is responsible for the psum (used to fuse the
+    tree reduction of several projections into one collective).
+    """
+    y = jnp.einsum("...k,kn->...n", x_local, w_local.astype(x_local.dtype),
+                   preferred_element_type=jnp.float32)
+    if scale is not None:
+        y = y * scale
+    y = y.astype(x_local.dtype)
+    return tree_sum(y, axis_name) if reduce else y
+
+
+def lane_linear_ternary(
+    x_local: jax.Array,
+    packed_local: jax.Array,
+    scale: jax.Array,
+    *,
+    axis_name: Optional[str],
+    reduce: bool = True,
+    layout: str = "interleaved",
+    tile: int = 512,
+) -> jax.Array:
+    """Lane-tiled linear with the weight slice in packed 2-bit 'ROM' form.
+
+    The decode (2-bit → ±1/0) happens lane-locally — the analogue of each
+    MVU's combinational ROM logic feeding its own adder tree. This is the
+    XLA path; the Pallas kernel (`kernels/ternary_matmul`) is the fused path
+    selected by `ops.py` when shapes allow.
+    """
+    w = ternary.unpack2(packed_local, layout=layout, tile=tile)
+    y = jnp.einsum("...k,kn->...n", x_local.astype(jnp.float32),
+                   w.astype(jnp.float32), preferred_element_type=jnp.float32)
+    y = (y * scale).astype(x_local.dtype)
+    return tree_sum(y, axis_name) if reduce else y
+
+
+def lane_linear_out_sharded(
+    x_repl: jax.Array,
+    w_local: jax.Array,
+    *,
+    scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Output-dim-sharded linear: ``x (…, K) @ w_local (K, N/L)`` — no
+    collective (each lane produces its own N-slice).
+
+    The paper tiles K (Fig 7a) so the tree does one reduction per layer; an
+    N-tiled layout instead leaves the *activation* sharded, which composes as
+    reduce-scatter → the beyond-paper §Perf variant pairs K-tiled and N-tiled
+    layers back-to-back so only boundary reductions remain.
+    """
+    y = jnp.einsum("...k,kn->...n", x_repl, w_local.astype(x_repl.dtype),
+                   preferred_element_type=jnp.float32)
+    if scale is not None:
+        y = y * scale
+    return y.astype(x_repl.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers: how each weight kind is laid out over (data, model[, pod])
+# ---------------------------------------------------------------------------
+
+
+def shard_weight_k(k: int, n: int, n_lanes: int) -> Tuple[int, int]:
+    """Fig 7a layout: K tiled across lanes."""
+    assert k % n_lanes == 0, (k, n_lanes)
+    return k // n_lanes, n
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

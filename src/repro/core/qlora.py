@@ -1,0 +1,132 @@
+"""QLoRA two-path execution with ternary adapters (paper C4, §IV-D.3).
+
+TOM's hybrid ROM-SRAM split: the ternary base weight is *immutable* (ROM —
+here a packed uint8 `TernaryTensor` the optimizer never touches), while small
+LoRA adapters live in "SRAM" (ordinary trainable arrays) and are themselves
+ternary (LoTA-QAF-style), so the adapter path reuses the same Ternary×FP8
+compute as the base path. Because W cannot be merged with AB (ROM is
+read-only), execution is two-path:
+
+    base path   : h_base = (W_packed ⊛ x) · s_w          (ternary matmul)
+    adapter path: h_lora = B ⊛ (A ⊛ x) · (α / r)         (two small ternary matmuls)
+    VU sum      : h = h_base + h_lora
+
+Fine-tuning ("on-device adaptation") trains float master copies of A/B with a
+straight-through estimator so the *deployed* adapters are exactly ternary;
+`freeze()` packs them to 2-bit for serving. Gradients never reach the base.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+from repro.core.lanes import tree_sum
+
+
+@dataclass(frozen=True)
+class LoRASpec:
+    rank: int = 16
+    alpha: float = 32.0
+    ternary: bool = True
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+def init_adapter(key: jax.Array, k: int, n: int, spec: LoRASpec,
+                 dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """LoRA init: A ~ N(0, 1/r) (kaiming-ish), B = 0 ⇒ ΔW = 0 at start."""
+    ka, _ = jax.random.split(key)
+    a = jax.random.normal(ka, (k, spec.rank), dtype) * (1.0 / jnp.sqrt(spec.rank))
+    b = jnp.zeros((spec.rank, n), dtype)
+    return {"a": a, "b": b}
+
+
+def adapter_path(
+    x: jax.Array,
+    adapter: Dict[str, jax.Array],
+    spec: LoRASpec,
+    *,
+    train: bool = False,
+) -> jax.Array:
+    """h_lora = B·(A·x) · (α/r), with A/B fake-quantized to ternary when the
+    spec demands it (train=True keeps the STE path differentiable)."""
+    a, b = adapter["a"], adapter["b"]
+    if spec.ternary:
+        if train:
+            a = ternary.ste_quantize(a)
+            b = ternary.ste_quantize(b)
+        else:
+            ta, sa = ternary.quantize(a)
+            tb, sb = ternary.quantize(b)
+            a = ternary.dequantize(ta, sa, x.dtype)
+            b = ternary.dequantize(tb, sb, x.dtype)
+    z = jnp.einsum("...k,kr->...r", x, a.astype(x.dtype))
+    # rank from the adapter's own shape so a default spec scales correctly
+    scaling = spec.alpha / a.shape[-1]
+    return jnp.einsum("...r,rn->...n", z, b.astype(x.dtype)) * scaling
+
+
+def two_path_linear(
+    x: jax.Array,
+    base: ternary.TernaryTensor,
+    adapter: Optional[Dict[str, jax.Array]],
+    spec: Optional[LoRASpec] = None,
+    *,
+    train: bool = False,
+) -> jax.Array:
+    """The full §IV-D.3 dataflow on one device: ROM base + SRAM adapter + sum."""
+    w = jax.lax.stop_gradient(base.to_dense(x.dtype))  # ROM: no grads into W
+    h = jnp.einsum("...k,kn->...n", x, w)
+    if adapter is not None:
+        h = h + adapter_path(x, adapter, spec or LoRASpec(), train=train)
+    return h
+
+
+def lane_two_path_linear(
+    x_local: jax.Array,
+    packed_local: jax.Array,
+    w_scale: jax.Array,
+    adapter_local: Optional[Dict[str, jax.Array]],
+    spec: Optional[LoRASpec] = None,
+    *,
+    axis_name: Optional[str],
+    train: bool = False,
+) -> jax.Array:
+    """Distributed two-path: both paths are K-sharded across lanes (the
+    adapter's A matrix tiles its K dim alongside the base weight — 'sharing
+    SRAM with the KV cache' per lane), and ONE tree round sums base+adapter
+    partials together — the collective is fused, mirroring the single VU add."""
+    w = ternary.unpack2(packed_local)
+    h = jnp.einsum("...k,kn->...n", x_local.astype(jnp.float32),
+                   w.astype(jnp.float32)) * jax.lax.stop_gradient(w_scale)
+    h = h.astype(x_local.dtype)
+    if adapter_local is not None:
+        h = h + adapter_path(x_local, adapter_local, spec or LoRASpec(), train=train).astype(h.dtype)
+    return tree_sum(h, axis_name)
+
+
+def freeze_adapter(adapter: Dict[str, jax.Array]) -> Dict[str, ternary.TernaryTensor]:
+    """Pack trained adapters to 2-bit for deployment (they join the 'SRAM'
+    image next to the KV cache)."""
+    out = {}
+    for name, w in adapter.items():
+        k = w.shape[0]
+        pad = (-k) % 4
+        if pad:
+            w = jnp.pad(w, ((0, pad), (0, 0)))
+        out[name] = ternary.TernaryTensor.from_dense(w)
+    return out
+
+
+def adapter_bytes(k: int, n: int, spec: LoRASpec) -> int:
+    """SRAM footprint of one frozen adapter pair (drives Fig 15a overhead)."""
+    a_bytes = ternary.nbytes_packed((((k + 3) // 4) * 4, spec.rank))
+    b_bytes = ternary.nbytes_packed((((spec.rank + 3) // 4) * 4, n))
+    return a_bytes + b_bytes

@@ -1,0 +1,215 @@
+"""Ternary quantisation core (paper C1).
+
+Implements BitNet-style absmean ternary quantisation, the paper's 2-bit
+encoding (``+1='01'``, ``-1='10'``, ``0='00'`` — chosen over ``'11'`` for −1
+specifically to maximise the zero-*bit* ratio, §III-C / Fig 4), dense 2-bit
+packing (4 weights/byte — the HBM analogue of the sparsity-aware ROM), and a
+straight-through estimator for QAT.
+
+Layout note (TPU co-design): packing is along the *contracting* (input/K)
+dimension so that the Pallas matmul kernel can stream packed K-tiles
+HBM→VMEM and decode in-registers before hitting the MXU. Two layouts:
+
+- ``interleaved``: byte ``k`` of a column packs rows ``4k..4k+3``
+  (bits 0-1 = row 4k). Simple, reference layout.
+- ``strided``  : within each K-tile of ``tile`` rows, byte ``j`` packs rows
+  ``j, j+t/4, j+t/2, j+3t/4`` of the tile. Decoding is then a plain
+  concatenate along sublanes — no interleaving reshape — which lowers to
+  cheaper Mosaic ops. Used by the optimized kernel path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-8
+
+# ---------------------------------------------------------------------------
+# absmean quantisation (BitNet b1.58)
+# ---------------------------------------------------------------------------
+
+
+def absmean_scale(w: jax.Array, axis=None) -> jax.Array:
+    """BitNet b1.58 scale: mean of |w| (per-tensor by default)."""
+    return jnp.mean(jnp.abs(w).astype(jnp.float32), axis=axis, keepdims=axis is not None)
+
+
+def quantize(w: jax.Array, axis=None) -> Tuple[jax.Array, jax.Array]:
+    """absmean ternary quantisation.
+
+    Returns ``(t, scale)`` with ``t`` int8 in {-1, 0, +1} and ``w ≈ t*scale``.
+    """
+    s = absmean_scale(w, axis=axis)
+    t = jnp.clip(jnp.round(w.astype(jnp.float32) / (s + EPS)), -1, 1).astype(jnp.int8)
+    return t, s.astype(jnp.float32)
+
+
+def dequantize(t: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (t.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ste_quantize(w: jax.Array, axis=None) -> jax.Array:
+    """Straight-through-estimator fake-quant: forward = t*scale, grad = id.
+
+    This is the QAT path (BitNet training / LoTA-QAF ternary adapters).
+    """
+    t, s = quantize(w, axis=axis)
+    wq = dequantize(t, s, dtype=w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit encoding & bit statistics (paper Fig 4)
+# ---------------------------------------------------------------------------
+
+
+def encode2(t: jax.Array) -> jax.Array:
+    """Ternary {-1,0,+1} → 2-bit code {2,0,1} (uint8): +1→'01', -1→'10', 0→'00'."""
+    ti = t.astype(jnp.int8)
+    return jnp.where(ti == 1, jnp.uint8(1), jnp.where(ti == -1, jnp.uint8(2), jnp.uint8(0)))
+
+
+def decode2(c: jax.Array) -> jax.Array:
+    """2-bit code → ternary int8: the paper's conditional-negation decode."""
+    ci = c.astype(jnp.int8)
+    return ((ci & 1) - ((ci >> 1) & 1)).astype(jnp.int8)
+
+
+def zero_value_ratio(t: jax.Array) -> jax.Array:
+    """Fraction of zero-valued weights."""
+    return jnp.mean((t == 0).astype(jnp.float32))
+
+
+def zero_bit_ratio(t: jax.Array) -> jax.Array:
+    """Fraction of zero BITS under the paper's encoding.
+
+    Each zero weight contributes 2 zero-bits; each ±1 weight exactly one
+    (this is why '10' encodes −1 instead of '11'). So
+    ``zbr = 1 − (1 − zvr)/2``; e.g. BitNet's ~40% zero weights → ~70%
+    zero-bits (paper §V-B.b).
+    """
+    zvr = zero_value_ratio(t)
+    return 1.0 - (1.0 - zvr) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# Dense 2-bit packing (4 weights / byte) along the K (contracting) axis
+# ---------------------------------------------------------------------------
+
+
+def pack2(t: jax.Array, layout: str = "interleaved", tile: int = 512) -> jax.Array:
+    """Pack ternary int8 ``(..., K, N)`` → uint8 ``(..., K//4, N)``.
+
+    ``K`` (second-to-last axis) must be divisible by 4 (and by ``tile`` for the
+    strided layout).
+    """
+    k = t.shape[-2]
+    if k % 4:
+        raise ValueError(f"K={k} not divisible by 4")
+    c = encode2(t)
+    if layout == "interleaved":
+        g = c.reshape(*c.shape[:-2], k // 4, 4, c.shape[-1])
+        return (
+            g[..., 0, :]
+            | (g[..., 1, :] << 2)
+            | (g[..., 2, :] << 4)
+            | (g[..., 3, :] << 6)
+        ).astype(jnp.uint8)
+    elif layout == "strided":
+        if k % tile:
+            raise ValueError(f"K={k} not divisible by tile={tile}")
+        q = tile // 4
+        # (.., n_tiles, 4, q, N): slot s of byte j in tile covers row s*q + j
+        g = c.reshape(*c.shape[:-2], k // tile, 4, q, c.shape[-1])
+        packed = (
+            g[..., 0, :, :]
+            | (g[..., 1, :, :] << 2)
+            | (g[..., 2, :, :] << 4)
+            | (g[..., 3, :, :] << 6)
+        )
+        return packed.reshape(*c.shape[:-2], k // 4, c.shape[-1]).astype(jnp.uint8)
+    raise ValueError(f"unknown layout {layout!r}")
+
+
+def unpack2(p: jax.Array, layout: str = "interleaved", tile: int = 512) -> jax.Array:
+    """Inverse of :func:`pack2`: uint8 ``(..., K//4, N)`` → int8 ``(..., K, N)``."""
+    kq = p.shape[-2]
+    if layout == "interleaved":
+        slots = [decode2((p >> (2 * i)) & 3) for i in range(4)]
+        st = jnp.stack(slots, axis=-2)  # (..., K//4, 4, N)
+        return st.reshape(*p.shape[:-2], kq * 4, p.shape[-1])
+    elif layout == "strided":
+        q = tile // 4
+        if kq % q:
+            raise ValueError(f"packed K={kq} not divisible by tile//4={q}")
+        pt = p.reshape(*p.shape[:-2], kq // q, q, p.shape[-1])
+        slots = [decode2((pt >> (2 * i)) & 3) for i in range(4)]
+        st = jnp.concatenate(slots, axis=-2)  # (..., n_tiles, tile, N)
+        return st.reshape(*p.shape[:-2], kq * 4, p.shape[-1])
+    raise ValueError(f"unknown layout {layout!r}")
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight container used by the model layers
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class TernaryTensor:
+    """A ternary weight in its 'ROM' (packed) form.
+
+    ``packed``: uint8 (K//4, N); ``scale``: f32 scalar (absmean);
+    ``shape`` = logical (K, N). The optimizer never touches this — it is the
+    immutable 'knowledge foundation'; tunability goes through QLoRA adapters.
+    """
+
+    __slots__ = ("packed", "scale", "k", "layout", "tile")
+
+    def __init__(self, packed: jax.Array, scale: jax.Array, k: int,
+                 layout: str = "interleaved", tile: int = 512):
+        self.packed = packed
+        self.scale = scale
+        self.k = int(k)
+        self.layout = layout
+        self.tile = int(tile)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.k, self.packed.shape[-1])
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, layout: str = "interleaved", tile: int = 512
+                   ) -> "TernaryTensor":
+        t, s = quantize(w)
+        return cls(pack2(t, layout=layout, tile=tile), s, w.shape[-2], layout, tile)
+
+    def to_dense(self, dtype=jnp.bfloat16) -> jax.Array:
+        t = unpack2(self.packed, layout=self.layout, tile=self.tile)
+        return dequantize(t, self.scale, dtype=dtype)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.k, self.layout, self.tile)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale = children
+        k, layout, tile = aux
+        return cls(packed, scale, k, layout, tile)
+
+    def __repr__(self):
+        return f"TernaryTensor(shape={self.shape}, layout={self.layout!r})"
+
+
+def nbytes_packed(shape: Tuple[int, int]) -> int:
+    k, n = shape
+    return (k // 4) * n + 4  # + scale
+
+
+def compression_ratio_vs(dtype_bytes: float, shape: Tuple[int, int]) -> float:
+    k, n = shape
+    return (k * n * dtype_bytes) / nbytes_packed(shape)

@@ -1,0 +1,4 @@
+"""Data substrate: deterministic sharded token pipeline with exact resume."""
+from repro.data.pipeline import DataConfig, MmapCorpus, SyntheticCorpus, TokenPipeline, write_token_file
+
+__all__ = ["DataConfig", "MmapCorpus", "SyntheticCorpus", "TokenPipeline", "write_token_file"]

@@ -1,0 +1,55 @@
+"""Public jit'd wrapper for the flash-decode kernel: padding, GQA folding,
+fp8 KV handling and backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import flash_decode as _pallas_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "use_kernel", "interpret", "out_dtype"))
+def decode_attention(
+    q: jax.Array,          # (B, Hq, D)
+    k: jax.Array,          # (B, Hkv, S, D)  (fp8 or bf16/f32)
+    v: jax.Array,
+    length: jax.Array,     # int32 ()
+    kv_scale: jax.Array = 1.0,
+    *,
+    block_s: int = 512,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Single-token GQA decode attention over a (padded) KV cache.
+
+    Pads S to a block multiple (masked via `length`), folds query groups so
+    the kernel's score matmul has M=G, and widens fp8 KV inside the kernel.
+    """
+    b, hq, d = q.shape
+    _, hkv, s_len, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    bs = min(block_s, max(128, s_len))
+    pad = (-s_len) % bs
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k.astype(jnp.float32) if k.dtype == jnp.float8_e4m3fn else k, widths)
+        v = jnp.pad(v.astype(jnp.float32) if v.dtype == jnp.float8_e4m3fn else v, widths)
+
+    if use_kernel:
+        out = _pallas_decode(
+            qg, k, v, length, kv_scale,
+            block_s=bs, out_dtype=out_dtype, interpret=interpret,
+        )
+    else:
+        out = flash_decode_ref(qg, k, v, length, kv_scale, out_dtype=out_dtype)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(
+    q: jax.Array,        # (B, Hkv, G, D)
+    k: jax.Array,        # (B, Hkv, S, D)
+    v: jax.Array,
+    length,              # int — live context length
+    kv_scale=1.0,
+    *,
+    scale: float | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Materialized-softmax GQA decode attention with length masking."""
+    b, hkv, g, d = q.shape
+    s_len = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    kf = k.astype(jnp.float32) * kv_scale
+    vf = v.astype(jnp.float32) * kv_scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), kf) * scale
+    mask = jnp.arange(s_len) < length
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, vf).astype(out_dtype)

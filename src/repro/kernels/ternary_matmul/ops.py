@@ -1,0 +1,88 @@
+"""Public jit'd wrapper for the packed-ternary matmul kernel.
+
+Handles padding to block multiples, batched inputs, backend dispatch (Pallas
+on TPU; interpret-mode Pallas or the XLA decode path on CPU), and block-size
+selection tuned for v5e VMEM (128 KB per buffer budget; see §Perf log).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+from repro.kernels.ternary_matmul.ref import ternary_matmul_ref
+from repro.kernels.ternary_matmul.ternary_matmul import ternary_matmul as _pallas_matmul
+
+
+def _pick_blocks(m: int, k: int, n: int):
+    """VMEM-aware block selection. Working set per grid step:
+    x(bm·bk·2B) + packed(bk/4·bn) + acc(bm·bn·4B) ≤ ~4 MB with double buffer.
+    MXU wants multiples of 128 on bm/bn and the packed decode wants bk % 512 == 0.
+    """
+    bm = min(128, max(8, m))
+    bk = 512 if k >= 512 else max(4, k)
+    bn = 256 if n >= 256 else max(128, n)
+    return bm, bk, bn
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "use_kernel", "interpret", "out_dtype"))
+def ternary_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    layout: str = "interleaved",
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """``x (..., K) @ unpack(packed) (K, N) * scale`` → ``(..., N)``.
+
+    The fused Pallas path streams 2-bit tiles and decodes in-kernel; the
+    fallback decodes via XLA ops (still packed in HBM — the bandwidth win is
+    identical, the decode is just unfused).
+    """
+    *lead, k = x.shape
+    kq, n = packed.shape
+    assert kq * 4 == k, (kq, k)
+    m = 1
+    for s in lead:
+        m *= s
+    x2 = x.reshape(m, k)
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    bm, bk, bn = _pick_blocks(m, k, n)
+    shapes_ok = (k % bk == 0) and (bk % 4 == 0)
+    if use_kernel and shapes_ok:
+        xp = _pad_axis(x2, 0, bm)
+        pp = _pad_axis(packed, 1, bn)
+        out = _pallas_matmul(
+            xp, pp, scale,
+            layout=layout, block_m=bm, block_n=bn, block_k=bk,
+            out_dtype=out_dtype, interpret=interpret,
+        )[:m, :n]
+    else:
+        out = ternary_matmul_ref(x2, packed, scale, layout=layout, out_dtype=out_dtype)
+    return out.reshape(*lead, n)
+
+
+def linear(x: jax.Array, w: ternary.TernaryTensor, *, out_dtype=None) -> jax.Array:
+    """Model-layer entry point: activation × TernaryTensor."""
+    out_dtype = out_dtype or x.dtype
+    return ternary_matmul(
+        x, w.packed, w.scale, layout=w.layout, out_dtype=out_dtype,
+    )

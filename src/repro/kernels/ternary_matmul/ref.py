@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the packed-ternary matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+
+def ternary_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    layout: str = "interleaved",
+    tile: int = 512,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """``x (M,K) @ unpack(packed) (K,N) * scale`` in f32.
+
+    The oracle decodes the 2-bit 'ROM' to a dense ternary matrix and runs a
+    plain matmul — the ground truth the Pallas kernel must match exactly
+    (ternary values are exact in every float dtype; accumulation is f32 in
+    both paths).
+    """
+    w = ternary.unpack2(packed, layout=layout, tile=tile).astype(jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return (out * scale).astype(out_dtype)

@@ -1,0 +1,5 @@
+"""Launch layer: production mesh, dry-run, train/serve drivers.
+
+NOTE: dryrun must be executed as `python -m repro.launch.dryrun` so its
+XLA_FLAGS line runs before jax initializes; do not import it from here.
+"""

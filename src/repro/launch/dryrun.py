@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh, record memory/cost/collective artifacts for §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 32 cells, 1 pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both     # 64 compile checks
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>[__<strategy>].json
+with per-device bytes, HLO FLOPs/bytes, and per-collective byte counts — the
+roofline analysis (benchmarks/roofline.py) and EXPERIMENTS.md read them.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shapes_for_arch
+from repro.launch import hlo_analysis
+from repro.launch import mesh as mesh_mod
+from repro.launch import steps as steps_mod
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             strategy: str = "paper_tree", moe_sharding: str = "tp",
+             seq_shard: bool = True, head_shard: bool = False,
+             fuse_proj: bool = False, kv_widen: str = "f32",
+             save: bool = True, verbose: bool = True, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+
+    t0 = time.time()
+    cell = steps_mod.build_cell(cfg, shape, mesh, strategy=strategy,
+                                moe_sharding=moe_sharding, seq_shard=seq_shard,
+                                head_shard=head_shard, fuse_proj=fuse_proj,
+                                kv_widen=kv_widen)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    # Collectives only exist after SPMD partitioning, and scan bodies must be
+    # weighted by their trip counts → structural analysis of the compiled HLO
+    # (hlo_analysis.py), not raw cost_analysis() (which counts loops once).
+    hstats = hlo_analysis.analyze(compiled.as_text())
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_dev = mesh.devices.size
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "strategy": strategy,
+        "moe_sharding": moe_sharding,
+        "seq_shard": seq_shard,
+        # per-device totals (loop-weighted structural analysis)
+        "flops": hstats["flops"],
+        "bytes_accessed": hstats["bytes"],
+        "collectives": hstats["collectives"],
+        "collective_payload_bytes": hstats["collective_payload_bytes"],
+        "collective_wire_bytes": hstats["collective_wire_bytes"],
+        # raw XLA numbers (loop bodies counted once — cross-check only)
+        "xla_flops_once": float(cost.get("flops", 0.0)),
+        "xla_bytes_once": float(cost.get("bytes accessed", 0.0)),
+        "hbm_bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", 0),
+            "output": getattr(mem, "output_size_in_bytes", 0),
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "peak": (getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+    }
+
+    if save:
+        ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = ARTIFACT_DIR / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        path.write_text(json.dumps(result, indent=1))
+        result["artifact"] = str(path)
+
+    if verbose:
+        arg_gb = result["hbm_bytes_per_device"]["argument"] / 2 ** 30
+        tmp_gb = result["hbm_bytes_per_device"]["temp"] / 2 ** 30
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name} ({strategy}) OK "
+              f"| lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"| args {arg_gb:.2f} GiB + temp {tmp_gb:.2f} GiB /device "
+              f"| {result['flops']:.3e} FLOPs "
+              f"| coll wire {result['collective_wire_bytes'] / 2 ** 30:.3f} GiB")
+        sys.stdout.flush()
+    return result
+
+
+def iter_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for_arch(cfg):
+            yield arch, shape.name
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true", help="run 1-pod AND 2-pod")
+    ap.add_argument("--strategy", default="paper_tree",
+                    choices=("paper_tree", "megatron"))
+    ap.add_argument("--moe-sharding", default="tp",
+                    choices=("tp", "ep", "megatron"))
+    ap.add_argument("--head-shard", action="store_true")
+    ap.add_argument("--fuse-proj", action="store_true")
+    ap.add_argument("--kv-widen", default="f32", choices=("f32", "bf16"))
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    pods = [False, True] if args.both else [args.multi_pod]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in pods:
+            try:
+                run_cell(arch, shape, mp, strategy=args.strategy,
+                         moe_sharding=args.moe_sharding,
+                         seq_shard=not args.no_seq_shard,
+                         head_shard=args.head_shard, fuse_proj=args.fuse_proj,
+                         kv_widen=args.kv_widen, tag=args.tag)
+            except Exception as e:  # noqa: BLE001 — report, continue
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[dryrun] {arch} × {shape} × multi_pod={mp} FAILED: {e}")
+                if not args.continue_on_error:
+                    traceback.print_exc()
+                    return 1
+    if failures:
+        print(f"[dryrun] {len(failures)} failures:")
+        for f in failures:
+            print("   ", *f)
+        return 1
+    print(f"[dryrun] all {len(cells) * len(pods)} cells compiled clean.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

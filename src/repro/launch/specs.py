@@ -1,0 +1,132 @@
+"""ShapeDtypeStruct input stand-ins + sharding trees per (arch × shape) cell.
+
+This is the shannon/kernels pattern: every model input is described as a
+``jax.ShapeDtypeStruct`` (weak-type-correct, shardable, zero allocation) so
+``dryrun.py`` can ``.lower().compile()`` the full production configuration on
+placeholder devices.
+
+Cell kinds (configs/base.SHAPES):
+  * ``train``   → ``train_step``  inputs: params, opt_state, batch
+  * ``prefill`` → ``prefill_step`` inputs: params, batch (tokens/embeds)
+  * ``decode``  → ``serve_step``  inputs: params, cache, token, pos
+    (one new token against a seq_len-deep KV cache — NOT a full forward)
+
+``[vlm]``/``[audio]`` archs take precomputed patch/frame embeddings from the
+stub frontend (``embeds`` instead of ``tokens``), per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import sharding as shard_rules
+from repro.models.transformer import Model
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# batch-axis helper: shard batch over dp only when it divides evenly
+# (long_500k has global_batch=1 → replicated)
+# ---------------------------------------------------------------------------
+
+
+def batch_axis(mesh: Mesh, global_batch: int):
+    dp = shard_rules.logical_to_mesh_axes(mesh)["dp"]
+    if dp is None:
+        return None
+    names = dp if isinstance(dp, tuple) else (dp,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return dp if global_batch % size == 0 and global_batch >= size else None
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+
+def _uses_stub_frontend(cfg: ModelConfig) -> bool:
+    return cfg.family in ("vlm", "audio")
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, jax.ShapeDtypeStruct] = {
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if _uses_stub_frontend(cfg):
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    if _uses_stub_frontend(cfg):
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig
+                  ) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+    """(token, pos) for one serve step; the cache spec comes from the model."""
+    b = shape.global_batch
+    if _uses_stub_frontend(cfg):
+        tok = jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16)
+    else:
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return tok, jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    batch_tree: Tree) -> Tree:
+    dp = batch_axis(mesh, shape.global_batch)
+
+    def spec(path_leaf):
+        nd = len(path_leaf.shape)
+        return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: everything dryrun/train/serve need for one (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    model: Model
+    fn: Any                  # the jit-able step function
+    args: Tuple[Any, ...]    # ShapeDtypeStructs (or spec trees)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(self.fn,
+                         in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums,
+                         static_argnums=self.static_argnums)
+        return jitted.lower(*self.args)
+
+
+def replicated(mesh: Mesh, tree: Tree) -> Tree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def named(mesh: Mesh, spec_tree: Tree) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

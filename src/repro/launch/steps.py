@@ -1,0 +1,267 @@
+"""Step functions (train / prefill / serve-decode) + their Cell assembly.
+
+These are the exact functions the dry-run lowers against the production mesh
+and the train/serve drivers execute on real devices. One definition serves
+both paths so the dry-run proves precisely what would run.
+
+Paper mapping: ``strategy="paper_tree"`` lays every linear out per Fig 7(a)
+(K over lanes, reduction-tree psum); the serve decode step's context-sharded
+KV + stable softmax lowers to the paper's two-phase tree dataflow (C3).
+``strategy="megatron"`` is the beyond-paper §Perf variant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import specs as specs_mod
+from repro.launch.specs import Cell
+from repro.models import sharding as shard_rules
+from repro.models.transformer import Model
+from repro.optim import AdamW, warmup_cosine
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt: AdamW):
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    qat mode: every leaf is float and trainable (BitNet training-from-scratch
+    with STE fake-quant inside the layers)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **aux, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_qlora_step(model: Model, opt: AdamW, mask: Tree):
+    """QLoRA on-device tuning step (C4): the packed ROM base is frozen —
+    autodiff runs over the adapter (+norm) leaves only."""
+    from repro.optim import combine, partition
+
+    def qlora_step(params, opt_state, batch):
+        train_p, frozen_p = partition(params, mask)
+
+        def loss_fn(tp):
+            return model.loss_fn(combine(tp, frozen_p), batch)
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(train_p)
+        train_p, opt_state, opt_metrics = opt.update(grads, opt_state, train_p,
+                                                     mask=None)
+        params = combine(train_p, frozen_p)
+        metrics = {"loss": loss, **aux, **opt_metrics}
+        return params, opt_state, metrics
+
+    return qlora_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    """One new token for the whole batch against the existing KV cache —
+    what ``decode_*`` / ``long_*`` cells lower (serve_step, not train_step)."""
+
+    def decode_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        return logits, cache
+
+    return decode_step
+
+
+def make_greedy_decode_step(model: Model):
+    def step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly per cell
+# ---------------------------------------------------------------------------
+
+
+def act_sharding_for(mesh: Mesh, shape: ShapeConfig, seq_shard: bool = True):
+    """Residual-stream sharding: batch over dp, sequence over model (SP)."""
+    dp = specs_mod.batch_axis(mesh, shape.global_batch)
+    sp = "model" if (seq_shard and shape.seq_len % mesh.shape.get("model", 1) == 0) \
+        else None
+    return NamedSharding(mesh, P(dp, sp, None))
+
+
+def head_sharding_for(mesh: Mesh, shape: ShapeConfig):
+    """(B, S, H, D) attention-tensor sharding: heads over lanes (§Perf A).
+    act_sharding.constrain() skips it per-tensor when H % lanes != 0."""
+    dp = specs_mod.batch_axis(mesh, shape.global_batch)
+    return NamedSharding(mesh, P(dp, None, "model", None))
+
+
+def _moment_shardings(params_specs, params_shardings, opt, mesh):
+    """Optimizer moments inherit the parameter sharding (ZeRO-for-free with
+    2-D sharded weights); scalar placeholders for frozen leaves replicate."""
+    state_specs = opt.state_specs(params_specs)
+
+    def fix(mspec, pshard):
+        if mspec.shape == ():
+            return NamedSharding(mesh, P())
+        return pshard
+
+    m = jax.tree.map(fix, state_specs.m, params_shardings)
+    v = jax.tree.map(fix, state_specs.v, params_shardings)
+    return state_specs, type(state_specs)(step=NamedSharding(mesh, P()), m=m, v=v)
+
+
+# ---------------------------------------------------------------------------
+# Cell builders (used by dryrun.py and by the real drivers)
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+               strategy: str = "paper_tree",
+               moe_sharding: str = "tp",
+               seq_shard: bool = True,
+               head_shard: bool = False,
+               fuse_proj: bool = False,
+               kv_widen: str = "f32",
+               remat: bool = True) -> Cell:
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, strategy=strategy,
+                                moe_sharding=moe_sharding, seq_shard=seq_shard,
+                                head_shard=head_shard, remat=remat)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, strategy=strategy,
+                                  moe_sharding=moe_sharding, seq_shard=seq_shard,
+                                  head_shard=head_shard, remat=remat)
+    return build_decode_cell(cfg, shape, mesh, strategy=strategy,
+                             moe_sharding=moe_sharding, fuse_proj=fuse_proj,
+                             kv_widen=kv_widen)
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                     strategy: str = "paper_tree", moe_sharding: str = "tp",
+                     seq_shard: bool = True, head_shard: bool = False,
+                     remat: bool = True) -> Cell:
+    model = Model(cfg, mode="qat", remat=remat,
+                  act_shard=act_sharding_for(mesh, shape, seq_shard),
+                  head_shard=head_sharding_for(mesh, shape) if head_shard else None)
+    opt = AdamW(schedule=warmup_cosine(3e-4, 1000, 100_000))
+
+    params_specs = model.param_specs()
+    p_shard = specs_mod.named(
+        mesh, shard_rules.param_spec_tree(params_specs, mesh, strategy=strategy,
+                                          mode="qat", fsdp=True,
+                                          moe_sharding=moe_sharding))
+    opt_specs, opt_shard = _moment_shardings(params_specs, p_shard, opt, mesh)
+
+    batch = specs_mod.train_inputs(cfg, shape)
+    b_shard = specs_mod.batch_shardings(cfg, shape, mesh, batch)
+
+    metrics_shard = None  # replicated scalars; let jit infer
+    step = make_train_step(model, opt)
+    return Cell(
+        cfg=cfg, shape=shape, mesh=mesh, model=model, fn=step,
+        args=(params_specs, opt_specs, batch),
+        in_shardings=(p_shard, opt_shard, b_shard),
+        out_shardings=(p_shard, opt_shard, metrics_shard),
+        donate_argnums=(0, 1),
+    )
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                       strategy: str = "paper_tree", moe_sharding: str = "tp",
+                       seq_shard: bool = True, head_shard: bool = False,
+                       remat: bool = False) -> Cell:
+    model = Model(cfg, mode="serve", remat=remat,
+                  act_shard=act_sharding_for(mesh, shape, seq_shard),
+                  head_shard=head_sharding_for(mesh, shape) if head_shard else None)
+    params_specs = model.param_specs()
+    p_shard = specs_mod.named(
+        mesh, shard_rules.param_spec_tree(params_specs, mesh, strategy=strategy,
+                                          mode="serve", fsdp=False,
+                                          moe_sharding=moe_sharding))
+    batch = specs_mod.prefill_inputs(cfg, shape)
+    b_shard = specs_mod.batch_shardings(cfg, shape, mesh, batch)
+
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+    c_shard = _cache_shardings(cache_specs, mesh, shape)
+    dp = specs_mod.batch_axis(mesh, shape.global_batch)
+    logits_shard = NamedSharding(mesh, P(dp, None))
+
+    step = make_prefill_step(model, shape.seq_len)
+    return Cell(
+        cfg=cfg, shape=shape, mesh=mesh, model=model, fn=step,
+        args=(params_specs, batch),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, c_shard),
+    )
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                      strategy: str = "paper_tree", moe_sharding: str = "tp",
+                      fuse_proj: bool = False, kv_widen: str = "f32",
+                      ) -> Cell:
+    model = Model(cfg, mode="serve", remat=False, fuse_proj=fuse_proj,
+                  kv_widen=kv_widen)
+    params_specs = model.param_specs()
+    p_shard = specs_mod.named(
+        mesh, shard_rules.param_spec_tree(params_specs, mesh, strategy=strategy,
+                                          mode="serve", fsdp=False,
+                                          moe_sharding=moe_sharding))
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+    c_shard = _cache_shardings(cache_specs, mesh, shape)
+
+    token, pos = specs_mod.decode_inputs(cfg, shape)
+    dp = specs_mod.batch_axis(mesh, shape.global_batch)
+    tok_shard = NamedSharding(mesh, P(dp, *([None] * (len(token.shape) - 1))))
+    pos_shard = NamedSharding(mesh, P())
+    logits_shard = NamedSharding(mesh, P(dp, None))
+
+    step = make_decode_step(model)
+    return Cell(
+        cfg=cfg, shape=shape, mesh=mesh, model=model, fn=step,
+        args=(params_specs, cache_specs, token, pos),
+        in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+    )
+
+
+def _is_dp_part(p) -> bool:
+    names = p if isinstance(p, tuple) else (p,)
+    return all(n in ("pod", "data", "replica") for n in names)
+
+
+def _cache_shardings(cache_specs, mesh: Mesh, shape: ShapeConfig):
+    tree = shard_rules.kv_cache_spec_tree(cache_specs, mesh)
+    dp = specs_mod.batch_axis(mesh, shape.global_batch)
+
+    # kv_cache_spec_tree puts dp on the batch dim unconditionally; strip it
+    # when the cell's batch doesn't divide the dp extent (long_500k, B=1).
+    def fix(spec):
+        if dp is None:
+            parts = tuple(None if (p is not None and _is_dp_part(p)) else p
+                          for p in spec)
+            return NamedSharding(mesh, P(*parts))
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, P))

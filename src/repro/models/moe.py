@@ -1,0 +1,201 @@
+"""Mixture-of-Experts FFN (arctic-480b, deepseek-v2-236b).
+
+Routing: softmax router with top-k selection, optional DeepSeek-V3-style
+aux-loss-free bias (added for *selection* only), optional load-balance aux
+loss for training, and capacity-based token dropping.
+
+Dispatch is sort-based (MegaBlocks/MaxText-style): token→expert assignments
+are argsorted by expert id, written into a static (E, C, D) buffer, processed
+by stacked expert FFNs, and combined with the gate weights. No (T, E, C)
+one-hot dispatch tensor is ever materialized.
+
+Sharding (models/sharding.py):
+  * ``tp`` (paper-faithful): every expert's weight is K-sharded over the
+    ``model`` axis like any other linear — lanes synchronize via the
+    reduction tree only (psum), exactly the paper's constraint.
+  * ``ep`` (beyond-paper §Perf variant): the stacked expert dim is sharded
+    over ``model``; XLA turns the dispatch scatter into an all-to-all.
+One flag flips the PartitionSpec; the math here is identical.
+
+TOM applicability: every expert weight is ternary-packed ROM (C1) and the
+shared/dense branches follow Fig 7a tiling (C2). See DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import ternary
+from repro.models import layers
+from repro.models.layers import Params, apply_linear, init_linear, linear_spec
+
+
+# ---------------------------------------------------------------------------
+# Stacked expert linears (E experts as one leading axis)
+# ---------------------------------------------------------------------------
+
+
+def init_expert_linear(key: jax.Array, e: int, k: int, n: int, mode: str,
+                       dtype=jnp.bfloat16) -> Params:
+    if mode == "qat":
+        w = jax.random.normal(key, (e, k, n), jnp.float32) * (k ** -0.5)
+        return {"w": w.astype(dtype)}
+    w = jax.random.normal(key, (e, k, n), jnp.float32) * (k ** -0.5)
+    t, s = jax.vmap(ternary.quantize)(w)
+    return {"packed": jax.vmap(ternary.pack2)(t), "scale": s.reshape(e, 1, 1)}
+
+
+def expert_linear_spec(e: int, k: int, n: int, mode: str, dtype=jnp.bfloat16) -> Params:
+    if mode == "qat":
+        return {"w": jax.ShapeDtypeStruct((e, k, n), dtype)}
+    return {"packed": jax.ShapeDtypeStruct((e, k // 4, n), jnp.uint8),
+            "scale": jax.ShapeDtypeStruct((e, 1, 1), jnp.float32)}
+
+
+def apply_expert_linear(p: Params, x: jax.Array, mode: str) -> jax.Array:
+    """x: (E, C, K) → (E, C, N), expert-stacked weights."""
+    if mode == "qat":
+        w = ternary.ste_quantize(p["w"].astype(jnp.float32))
+        return jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32), w).astype(x.dtype)
+    # stop-grad the (dequantized) weight only — x-path gradients must survive.
+    # bf16 decode: ternary is exact in bf16; scale applied after the f32-accum
+    # dot (halves expert-dequant HBM traffic, §Perf B).
+    w = jax.lax.stop_gradient(ternary.unpack2(p["packed"]).astype(jnp.bfloat16))
+    y = jnp.einsum("eck,ekn->ecn", x.astype(jnp.bfloat16), w,
+                   preferred_element_type=jnp.float32)
+    y = y * jax.lax.stop_gradient(p["scale"])
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, mode: str, dtype=jnp.bfloat16) -> Params:
+    e = cfg.moe
+    d = cfg.d_model
+    dff = e.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "router": {"w": jax.random.normal(ks[0], (d, e.num_experts), jnp.float32) * 0.02},
+        "up": init_expert_linear(ks[1], e.num_experts, d, dff, mode, dtype),
+        "gate": init_expert_linear(ks[2], e.num_experts, d, dff, mode, dtype),
+        "down": init_expert_linear(ks[3], e.num_experts, dff, d, mode, dtype),
+    }
+    if e.router_aux_free_bias:
+        p["router"]["bias"] = jnp.zeros((e.num_experts,), jnp.float32)
+    if e.num_shared_experts:
+        p["shared"] = layers.init_ffn(ks[4], d, e.num_shared_experts * dff,
+                                      "swiglu", mode, dtype=dtype)
+    if e.dense_residual_d_ff:
+        p["dense_residual"] = layers.init_ffn(ks[5], d, e.dense_residual_d_ff,
+                                              "swiglu", mode, dtype=dtype)
+    return p
+
+
+def moe_spec(cfg: ModelConfig, mode: str, dtype=jnp.bfloat16) -> Params:
+    e = cfg.moe
+    d = cfg.d_model
+    dff = e.expert_d_ff or cfg.d_ff
+    p: Params = {
+        "router": {"w": jax.ShapeDtypeStruct((d, e.num_experts), jnp.float32)},
+        "up": expert_linear_spec(e.num_experts, d, dff, mode, dtype),
+        "gate": expert_linear_spec(e.num_experts, d, dff, mode, dtype),
+        "down": expert_linear_spec(e.num_experts, dff, d, mode, dtype),
+    }
+    if e.router_aux_free_bias:
+        p["router"]["bias"] = jax.ShapeDtypeStruct((e.num_experts,), jnp.float32)
+    if e.num_shared_experts:
+        p["shared"] = layers.ffn_spec(d, e.num_shared_experts * dff, "swiglu", mode,
+                                      dtype=dtype)
+    if e.dense_residual_d_ff:
+        p["dense_residual"] = layers.ffn_spec(d, e.dense_residual_d_ff, "swiglu", mode,
+                                              dtype=dtype)
+    return p
+
+
+def route(p_router: Params, x: jax.Array, e: MoEConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (top-k expert ids (T,k), gates (T,k), aux_loss ())."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p_router["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = logits + p_router.get("bias", 0.0)  # aux-free bias: selection only
+    _, idx = jax.lax.top_k(select, e.num_experts_per_tok)          # (T, k)
+    gates = jnp.take_along_axis(probs, idx, axis=-1)               # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss (reported; weighted by the trainer)
+    t = x.shape[0]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e.num_experts,)).at[idx.reshape(-1)].add(1.0) / (t * e.num_experts_per_tok)
+    aux = e.num_experts * jnp.sum(me * ce)
+    return idx, gates.astype(x.dtype), aux
+
+
+def capacity(tokens: int, e: MoEConfig) -> int:
+    c = int(tokens * e.num_experts_per_tok * e.capacity_factor / e.num_experts)
+    return max(4, -(-c // 4) * 4)  # pad to a lane-friendly multiple
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dispatch / combine
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, mode: str,
+            **kw) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., D) → (..., D), plus the load-balance aux loss.
+
+    Flattens tokens, routes, sort-dispatches into the (E, C, D) buffer,
+    runs the stacked-expert SwiGLU, combines, and adds shared / dense-residual
+    branches (arctic / deepseek variants).
+    """
+    e = cfg.moe
+    d = cfg.d_model
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    c = capacity(t, e)
+
+    idx, gates, aux = route(p["router"], xt, e)                    # (T,k)
+    k = e.num_experts_per_tok
+
+    te = idx.reshape(-1)                                           # (T*k,)
+    tok = jnp.repeat(jnp.arange(t), k)                             # (T*k,)
+    gate_flat = gates.reshape(-1)
+
+    order = jnp.argsort(te, stable=True)
+    te_s, tok_s, gate_s = te[order], tok[order], gate_flat[order]
+    counts = jnp.zeros((e.num_experts,), jnp.int32).at[te].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[te_s]
+    valid = pos_in_e < c
+    dest = jnp.where(valid, te_s * c + pos_in_e, e.num_experts * c)  # drop slot
+
+    buf = jnp.zeros((e.num_experts * c + 1, d), xt.dtype)
+    buf = buf.at[dest].set(xt[tok_s], mode="drop")
+    buf = buf[:-1].reshape(e.num_experts, c, d)
+
+    up = apply_expert_linear(p["up"], buf, mode)
+    gate_h = apply_expert_linear(p["gate"], buf, mode)
+    h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(up.dtype) * up
+    y = apply_expert_linear(p["down"], h, mode)                    # (E, C, D)
+
+    y_flat = y.reshape(e.num_experts * c, d)
+    picked = jnp.where(valid[:, None], y_flat[jnp.clip(dest, 0, e.num_experts * c - 1)], 0.0)
+    # combine in bf16: the (T·k, D) gate-weighted buffer is what crosses the
+    # reduction tree when experts are sharded — f32 here doubled the largest
+    # collective payload in the MoE cells (§Perf B).
+    out = jnp.zeros((t, d), x.dtype).at[tok_s].add(
+        picked * gate_s[:, None].astype(picked.dtype))
+
+    if "shared" in p:
+        out = out + layers.apply_ffn(p["shared"], xt, "swiglu", mode, **kw)
+    if "dense_residual" in p:
+        out = out + layers.apply_ffn(p["dense_residual"], xt, "swiglu", mode, **kw)
+    return out.reshape(*lead, d), aux

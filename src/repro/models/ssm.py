@@ -1,0 +1,253 @@
+"""Mamba2 / SSD block (mamba2-1.3b, zamba2-7b hybrid).
+
+State-space duality form (arXiv:2405.21060): per head, a scalar decay
+``a_t = exp(dt_t·A)`` and rank-1 input ``dt_t·x_t⊗B_t`` drive the state
+``S ∈ (P, N)``; output ``y_t = S_t·C_t + D·x_t``.
+
+* **train/prefill** — chunked SSD: within a chunk the quadratic
+  "attention-like" form (masked (L×L) decay matmul), across chunks a
+  lax.scan carries the state. O(S·L) instead of O(S²): this is why the
+  ``long_500k`` cell runs for the SSM/hybrid archs only.
+* **decode** — O(1) recurrent update of (state, conv window).
+
+TOM applicability (DESIGN.md §4): no attention → C3 inapplicable; the in/out
+projections are ternary-packed lane-tiled linears (C1/C2) and the SSD state
+update maps to the Vector-Unit class of ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers
+from repro.models.layers import Params, apply_linear, init_linear, linear_spec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.num_groups * s.state_size
+    proj_out = 2 * d_in + 2 * s.num_groups * s.state_size + nheads
+    return s, d_in, nheads, conv_dim, proj_out
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig, mode: str, dtype=jnp.bfloat16) -> Params:
+    s, d_in, nheads, conv_dim, proj_out = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, proj_out, mode, dtype=dtype,
+                               lora=layers.lora_for(cfg, "in_proj", mode)),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "gate_norm": layers.init_rms_norm(d_in),
+        "out_proj": init_linear(ks[2], d_in, cfg.d_model, mode, dtype=dtype,
+                                lora=layers.lora_for(cfg, "out_proj", mode)),
+    }
+
+
+def mamba2_spec(cfg: ModelConfig, mode: str, dtype=jnp.bfloat16) -> Params:
+    s, d_in, nheads, conv_dim, proj_out = _dims(cfg)
+    f32 = jnp.float32
+    return {
+        "in_proj": linear_spec(cfg.d_model, proj_out, mode, dtype=dtype),
+        "conv_w": jax.ShapeDtypeStruct((s.conv_width, conv_dim), f32),
+        "conv_b": jax.ShapeDtypeStruct((conv_dim,), f32),
+        "a_log": jax.ShapeDtypeStruct((nheads,), f32),
+        "d_skip": jax.ShapeDtypeStruct((nheads,), f32),
+        "dt_bias": jax.ShapeDtypeStruct((nheads,), f32),
+        "gate_norm": {"w": jax.ShapeDtypeStruct((d_in,), f32)},
+        "out_proj": linear_spec(d_in, cfg.d_model, mode, dtype=dtype),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    s, d_in, nheads, _, _ = _dims(cfg)
+    gn = s.num_groups * s.state_size
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * gn]
+    dt = proj[..., -nheads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-channel causal conv over time. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):  # tiny static loop (W=4)
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * w[width - 1 - i]
+    return jax.nn.silu(out + b).astype(xbc.dtype)
+
+
+def _expand_groups(bc: jax.Array, nheads: int, g: int) -> jax.Array:
+    """(B, S, G, N) → (B, S, H, N) by repeating each group over its heads."""
+    return jnp.repeat(bc, nheads // g, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+                c_in: jax.Array, d_skip: jax.Array, chunk: int
+                ) -> jax.Array:
+    """SSD over a full sequence with chunked state passing.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) negative; b_in/c_in: (B, S, H, N).
+    Returns y: (B, S, H, P).
+    """
+    bsz, s_len, h, p = x.shape
+    n = b_in.shape[-1]
+    assert s_len % chunk == 0, (s_len, chunk)
+    nc = s_len // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_in.astype(jnp.float32)
+    cf = c_in.astype(jnp.float32)
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, bc, cc = map(to_chunks, (xf, dtf, bf, cf))  # (nc, B, L, ...)
+
+    log_a = dtc * a[None, None, None, :]                 # (nc, B, L, H) ≤ 0
+    cum = jnp.cumsum(log_a, axis=2)                      # within-chunk cumulative
+
+    def chunk_step(state, inp):
+        x_i, dt_i, b_i, c_i, la_i, cum_i = inp           # (B, L, ...)
+        # inter-chunk: y_prev[t] = exp(cum[t]) · C_t · S_prev
+        decay_in = jnp.exp(cum_i)                        # (B, L, H)
+        y_inter = jnp.einsum("blhn,bhpn->blhp", c_i * decay_in[..., None], state)
+        # intra-chunk quadratic form
+        scores = jnp.einsum("blhn,bshn->bhls", c_i, b_i)         # (B,H,L,L)
+        rel = cum_i.transpose(0, 2, 1)[..., :, None] - cum_i.transpose(0, 2, 1)[..., None, :]
+        causal = jnp.tril(jnp.ones((x_i.shape[1], x_i.shape[1]), bool))
+        # mask the EXPONENT, not exp's output: above the diagonal rel > 0 can
+        # overflow exp to +inf, and where(mask, inf, 0) back-propagates
+        # 0·inf = NaN into every gradient. (On the causal side rel ≤ 0 always.)
+        rel = jnp.where(causal[None, None], rel, -1e30)
+        gamma = jnp.exp(rel)                                      # (B,H,L,L)
+        y_intra = jnp.einsum("bhls,bsh,bshp->blhp", scores * gamma, dt_i, x_i)
+        # state update: S_new = S·exp(cum_L) + Σ_s exp(cum_L − cum_s)·dt_s·x_s⊗B_s
+        tail = jnp.exp(cum_i[:, -1:, :] - cum_i)          # (B, L, H)
+        s_new = state * jnp.exp(cum_i[:, -1])[..., None, None]
+        s_new = s_new + jnp.einsum("blh,blhp,blhn->bhpn", tail * dt_i, x_i, b_i)
+        return s_new, y_inter + y_intra
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, yc = jax.lax.scan(chunk_step, init, (xc, dtc, bc, cc, log_a, cum))
+    y = yc.swapaxes(0, 1).reshape(bsz, s_len, h, p)
+    y = y + xf * d_skip[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_sequential_ref(x, dt, a, b_in, c_in, d_skip):
+    """O(S) sequential oracle for tests."""
+    bsz, s_len, h, p = x.shape
+    n = b_in.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * a)                        # (B, H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt_t, x_t, b_t)
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y
+
+    xs = (x.astype(jnp.float32).swapaxes(0, 1), dt.astype(jnp.float32).swapaxes(0, 1),
+          b_in.astype(jnp.float32).swapaxes(0, 1), c_in.astype(jnp.float32).swapaxes(0, 1))
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, init, xs)
+    y = ys.swapaxes(0, 1) + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-level apply
+# ---------------------------------------------------------------------------
+
+
+def mamba2_train(p: Params, xin: jax.Array, cfg: ModelConfig, mode: str,
+                 **kw) -> jax.Array:
+    """Full-sequence Mamba2 block. xin: (B, S, D)."""
+    s, d_in, nheads, conv_dim, _ = _dims(cfg)
+    bsz, s_len, _ = xin.shape
+    proj = apply_linear(p["in_proj"], xin, mode, **kw)
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    gn = s.num_groups * s.state_size
+    x = xbc[..., :d_in].reshape(bsz, s_len, nheads, s.head_dim)
+    b_in = xbc[..., d_in:d_in + gn].reshape(bsz, s_len, s.num_groups, s.state_size)
+    c_in = xbc[..., d_in + gn:].reshape(bsz, s_len, s.num_groups, s.state_size)
+    b_in = _expand_groups(b_in, nheads, s.num_groups)
+    c_in = _expand_groups(c_in, nheads, s.num_groups)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    chunk = min(s.chunk_size, s_len)
+    y = ssd_chunked(x, dt, a, b_in, c_in, p["d_skip"], chunk)
+    y = y.reshape(bsz, s_len, d_in)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["gate_norm"]["w"], cfg.norm_eps)
+    return apply_linear(p["out_proj"], y, mode, **kw)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int) -> Params:
+    s, d_in, nheads, conv_dim, _ = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((n_layers, batch, nheads, s.head_dim, s.state_size), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, s.conv_width - 1, conv_dim), jnp.float32),
+    }
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int, n_layers: int) -> Params:
+    s, d_in, nheads, conv_dim, _ = _dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((n_layers, batch, nheads, s.head_dim, s.state_size),
+                                    jnp.float32),
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, s.conv_width - 1, conv_dim),
+                                     jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, xin: jax.Array, ssm_state: jax.Array,
+                  conv_state: jax.Array, cfg: ModelConfig, mode: str, **kw
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrent update. xin: (B, D); states are this layer's."""
+    s, d_in, nheads, conv_dim, _ = _dims(cfg)
+    bsz, _ = xin.shape
+    proj = apply_linear(p["in_proj"], xin, mode, **kw)
+    z, xbc, dt = _split_proj(proj, cfg)
+    window = jnp.concatenate([conv_state, xbc[:, None].astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out).astype(xin.dtype)
+    new_conv = window[:, 1:]
+
+    gn = s.num_groups * s.state_size
+    x = xbc[..., :d_in].reshape(bsz, nheads, s.head_dim)
+    b_in = xbc[..., d_in:d_in + gn].reshape(bsz, s.num_groups, s.state_size)
+    c_in = xbc[..., d_in + gn:].reshape(bsz, s.num_groups, s.state_size)
+    b_in = jnp.repeat(b_in, nheads // s.num_groups, axis=1)
+    c_in = jnp.repeat(c_in, nheads // s.num_groups, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    decay = jnp.exp(dt * a)                              # (B, H)
+    new_state = ssm_state * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32), b_in.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_in.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, d_in).astype(xin.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["gate_norm"]["w"], cfg.norm_eps)
+    out = apply_linear(p["out_proj"], y, mode, **kw)
+    return out, new_state, new_conv

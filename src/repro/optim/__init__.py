@@ -1,0 +1,26 @@
+"""Optimizer substrate: AdamW, schedules, clipping, QLoRA masking,
+gradient compression (distributed-optimization trick for the `pod` axis)."""
+from repro.optim.adamw import (
+    AdamW,
+    AdamWState,
+    clip_by_global_norm,
+    combine,
+    constant,
+    global_norm,
+    linear_decay,
+    partition,
+    trainable_mask,
+    warmup_cosine,
+)
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    error_feedback_update,
+)
+
+__all__ = [
+    "AdamW", "AdamWState", "clip_by_global_norm", "combine", "constant",
+    "global_norm", "linear_decay", "partition", "trainable_mask",
+    "warmup_cosine", "compress_int8", "decompress_int8",
+    "error_feedback_update",
+]

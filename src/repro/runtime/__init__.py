@@ -1,0 +1,10 @@
+"""Distributed runtime: fault tolerance (retry/preemption/straggler) and
+elastic re-mesh."""
+from repro.runtime.fault import (
+    PreemptionHandler,
+    RetryPolicy,
+    StepRunner,
+    StragglerWatchdog,
+)
+
+__all__ = ["PreemptionHandler", "RetryPolicy", "StepRunner", "StragglerWatchdog"]

@@ -1,0 +1,95 @@
+"""Elastic re-mesh: restart training/serving on a different device count.
+
+The scenario: a pod loses nodes (or gains them back) and the job must resume
+on a new mesh shape without invalidating the checkpoint. Checkpoints store
+full logical arrays (ckpt/), so re-meshing is:
+
+    1. build the new mesh,
+    2. rebuild the model/optimizer spec trees (pure shape metadata),
+    3. derive the new PartitionSpec trees from models/sharding.py,
+    4. restore: each leaf is device_put against its *new* sharding.
+
+The batch size / steps bookkeeping is the trainer's job (global batch is
+kept constant — per-device batch grows when devices shrink, as long as
+divisibility holds; otherwise the caller picks a new global batch).
+
+``plan_remesh`` validates divisibility up front so a bad elastic event
+fails before any state is touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.ckpt import checkpoint as ckpt_mod
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_mod
+from repro.launch import specs as specs_mod
+from repro.models import sharding as shard_rules
+
+
+@dataclasses.dataclass
+class RemeshPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    new_mesh: Mesh
+    notes: Dict[str, Any]
+
+
+def plan_remesh(cfg: ModelConfig, new_shape: Tuple[int, ...],
+                axes: Tuple[str, ...] = ("data", "model"),
+                global_batch: Optional[int] = None,
+                old_shape: Tuple[int, ...] = ()) -> RemeshPlan:
+    """Validate that the architecture shards onto the new mesh."""
+    notes: Dict[str, Any] = {}
+    tp = dict(zip(axes, new_shape)).get("model", 1)
+    dp = 1
+    for name, extent in zip(axes, new_shape):
+        if name in ("pod", "data", "replica"):
+            dp *= extent
+    for dim, label in ((cfg.d_model, "d_model"), (cfg.d_ff or tp, "d_ff")):
+        if dim % tp:
+            raise ValueError(f"{label}={dim} not divisible by model axis {tp}")
+    if cfg.vocab_padded % tp:
+        raise ValueError(f"vocab_padded={cfg.vocab_padded} not divisible by {tp}")
+    if global_batch is not None and global_batch % dp:
+        notes["batch"] = (f"global_batch={global_batch} not divisible by dp={dp};"
+                          " batch will be replicated or must be re-chosen")
+    mesh = mesh_mod.make_mesh(new_shape, axes)
+    return RemeshPlan(old_shape=old_shape, new_shape=new_shape, new_mesh=mesh,
+                      notes=notes)
+
+
+def restore_on_mesh(ckpt_dir: str, step: int, target_specs: Any, plan: RemeshPlan,
+                    *, strategy: str = "paper_tree", mode: str = "qat",
+                    fsdp: bool = True) -> Tuple[Any, Dict[str, Any]]:
+    """Restore a checkpoint onto the new mesh with freshly derived shardings.
+
+    ``target_specs`` is the {params, opt_state} spec tree (eval_shape'd);
+    parameter leaves get param rules, everything else inherits the matching
+    parameter leaf's sharding where shapes allow, else replicates."""
+    mesh = plan.new_mesh
+    p_specs = target_specs["params"]
+    p_shard = specs_mod.named(
+        mesh, shard_rules.param_spec_tree(p_specs, mesh, strategy=strategy,
+                                          mode=mode, fsdp=fsdp))
+    shardings = {"params": p_shard}
+    if "opt_state" in target_specs:
+        o = target_specs["opt_state"]
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def fix(mspec, pshard):
+            if getattr(mspec, "shape", ()) == ():
+                return NamedSharding(mesh, P())
+            return pshard
+
+        shardings["opt_state"] = type(o)(
+            step=NamedSharding(mesh, P()),
+            m=jax.tree.map(fix, o.m, p_shard),
+            v=jax.tree.map(fix, o.v, p_shard))
+    state, meta = ckpt_mod.restore(ckpt_dir, step, target_specs,
+                                   shardings=shardings)
+    return state, meta

@@ -1,0 +1,5 @@
+"""Serving: continuous-batching decode engine over the paper's
+context-sharded fp8 KV cache."""
+from repro.serving.engine import EngineStats, Request, ServeEngine
+
+__all__ = ["EngineStats", "Request", "ServeEngine"]

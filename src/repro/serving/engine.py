@@ -1,0 +1,231 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+The paper's deployment is single-stream edge decode (batch = 1, token by
+token, weights in ROM). This engine generalizes it to the production mesh:
+
+  * ``max_slots`` concurrent sequences share one jitted ``decode_step`` whose
+    KV cache is the paper's "distributed SRAM" — context-sharded over the
+    ``model`` axis, fp8 payload (C2/C3). Every tick decodes one token for
+    every active slot (B = max_slots, static shapes — no recompiles).
+  * **continuous batching**: slots free as sequences finish and are refilled
+    from the queue mid-flight; per-slot positions drive the cache scatter and
+    attention masks.
+  * **prefill** is either ``token`` mode — feed the prompt through
+    decode_step one token at a time (the paper's own prefill: "executes all
+    operations token-by-token, eliminating the prefill/decoding
+    distinction") — or ``batched`` mode, a bucketed full-sequence prefill
+    per request that splices the resulting cache rows into the live batch
+    (beyond-paper; amortizes long prompts).
+  * sampling: greedy or temperature/top-k, jitted with a per-engine PRNG.
+
+SSM/hybrid archs serve through the same interface (their "cache" is the
+recurrent state; positions only gate the attention blocks, if any).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Model
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 → greedy
+    top_k: int = 0                  # 0 → full softmax
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class EngineStats:
+    ticks: int = 0
+    tokens_out: int = 0
+    completed: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tps(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Params, *, max_slots: int = 8,
+                 max_len: int = 1024, prefill: str = "token", seed: int = 0):
+        assert model.mode in ("serve", "qlora")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prefill_mode = prefill
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = model.init_cache(max_slots, max_len)
+        self.pos = np.zeros((max_slots,), np.int32)       # next write position
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.pending_prompt: List[List[int]] = [[] for _ in range(max_slots)]
+        self.queue: Deque[Request] = deque()
+        self.stats = EngineStats()
+        self._uid = 0
+
+        self._decode = jax.jit(self._decode_fn)
+        self._sample = jax.jit(self._sample_fn, static_argnums=(3,))
+
+    # -- jitted kernels --------------------------------------------------------
+    def _decode_fn(self, params, cache, tokens, pos):
+        logits, cache = self.model.decode_step(params, cache, tokens, pos)
+        return logits, cache
+
+    def _sample_fn(self, logits, key, temperature, top_k: int):
+        greedy = jnp.argmax(logits, axis=-1)
+        if top_k:
+            vals, idx = jax.lax.top_k(logits, top_k)
+            masked = jnp.full_like(logits, -1e30).at[
+                jnp.arange(logits.shape[0])[:, None], idx].set(vals)
+        else:
+            masked = logits
+        scaled = masked / jnp.maximum(temperature[:, None], 1e-6)
+        sampled = jax.random.categorical(key, scaled, axis=-1)
+        use_greedy = temperature <= 0.0
+        return jnp.where(use_greedy, greedy, sampled).astype(jnp.int32)
+
+    # -- public API ---------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 32,
+               temperature: float = 0.0, top_k: int = 0,
+               eos_id: Optional[int] = None) -> Request:
+        self._uid += 1
+        req = Request(self._uid, list(prompt), max_new_tokens, temperature,
+                      top_k, eos_id, t_submit=time.time())
+        self.queue.append(req)
+        return req
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> EngineStats:
+        t0 = time.time()
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.stats.ticks < max_ticks:
+            self.tick()
+        self.stats.wall_s += time.time() - t0
+        return self.stats
+
+    # -- engine internals ------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            if len(req.prompt) + req.max_new_tokens > self.max_len:
+                req.prompt = req.prompt[-(self.max_len - req.max_new_tokens):]
+            self.slot_req[slot] = req
+            self.pos[slot] = 0
+            # SSM/hybrid prefill must thread recurrent state → token mode
+            # (model.prefill fills the KV cache only; see models/transformer).
+            batched_ok = self.cfg.family not in ("ssm", "hybrid")
+            if self.prefill_mode == "batched" and batched_ok and len(req.prompt) > 1:
+                self._batched_prefill(slot, req)
+                self.pending_prompt[slot] = [req.prompt[-1]]
+            else:
+                # paper mode: prompt tokens stream through decode_step
+                self.pending_prompt[slot] = list(req.prompt)
+
+    def _batched_prefill(self, slot: int, req: Request) -> None:
+        """Run full-sequence prefill for one request (bucketed length) and
+        splice its cache rows into the live batch cache at ``slot``."""
+        n = len(req.prompt) - 1          # last prompt token goes through decode
+        if n <= 0:
+            return
+        bucket = 1 << max(4, (n - 1).bit_length())
+        bucket = min(bucket, self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt[:n]
+        _, sub_cache = self.model.prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                          self.max_len)
+        self.cache = _splice_cache(self.cache, sub_cache, slot)
+        self.pos[slot] = n
+
+    def tick(self) -> None:
+        """One decode step for the whole slot batch."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+
+        tokens = np.zeros((self.max_slots,), np.int32)
+        temps = np.zeros((self.max_slots,), np.float32)
+        topk = 0
+        for i in active:
+            req = self.slot_req[i]
+            if self.pending_prompt[i]:
+                tokens[i] = self.pending_prompt[i][0]
+            else:
+                tokens[i] = req.output[-1]
+            temps[i] = req.temperature
+            topk = max(topk, req.top_k)
+
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(self.pos))
+        self.key, sub = jax.random.split(self.key)
+        nxt = np.asarray(self._sample(logits, sub, jnp.asarray(temps), topk))
+
+        now = time.time()
+        self.stats.ticks += 1
+        for i in active:
+            req = self.slot_req[i]
+            self.pos[i] += 1
+            if self.pending_prompt[i]:
+                self.pending_prompt[i].pop(0)
+                if self.pending_prompt[i]:
+                    continue  # still consuming the prompt
+            # the model has now seen the full prompt → this is an output token
+            if not req.output:
+                req.t_first = now
+            req.output.append(int(nxt[i]))
+            self.stats.tokens_out += 1
+            done = (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and req.output[-1] == req.eos_id)
+                    or self.pos[i] >= self.max_len)
+            if done:
+                req.t_done = now
+                self.stats.completed += 1
+                self.slot_req[i] = None
+
+
+def _splice_cache(cache, sub_cache, slot: int):
+    """Insert a (batch=1) cache into the batch cache at ``slot`` (batch is
+    always axis 1 across all cache layouts: k/v, latent, ssm, conv)."""
+
+    def one(full, sub):
+        idx = [0] * full.ndim
+        idx[1] = slot
+        return jax.lax.dynamic_update_slice(full, sub.astype(full.dtype),
+                                            tuple(idx))
+
+    return jax.tree.map(one, cache, sub_cache)

