@@ -20,7 +20,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_asic, bench_bandwidth, bench_c3_variants,
                             bench_e2e, bench_kernels, bench_power,
-                            bench_rom_density, bench_scaling, bench_sparsity)
+                            bench_rom_density, bench_scaling, bench_serving,
+                            bench_sparsity)
 
     benches = {
         "sparsity": bench_sparsity.run,                       # Fig 4
@@ -32,6 +33,7 @@ def main(argv=None) -> int:
         "scaling": bench_scaling.run,                         # Fig 15
         "kernels": lambda: bench_kernels.run(quick=args.quick),
         "c3_variants": lambda: bench_c3_variants.run(quick=args.quick),  # §IV-D.2 ablation
+        "serving": lambda: bench_serving.run(quick=args.quick),  # gateway TTFT/TPS
     }
     if args.only:
         keep = set(args.only.split(","))

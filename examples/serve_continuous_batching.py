@@ -1,4 +1,4 @@
-"""Serving example: continuous batching over the packed-ternary model.
+"""Serving example: the gateway over the packed-ternary model.
 
     PYTHONPATH=src python examples/serve_continuous_batching.py
 
@@ -7,7 +7,10 @@ Demonstrates the production serving path on a reduced BitNet-2B:
   * slots free and refill mid-flight (continuous batching),
   * both prefill modes: the paper's token-by-token ("eliminates the
     prefill/decoding distinction", §IV-D.2) and the beyond-paper batched
-    prefill — outputs are identical under greedy decoding.
+    prefill — outputs are identical under greedy decoding,
+  * the paged-KV gateway: block-table pool instead of per-slot max_len
+    reservations, per-token streaming callbacks, priority scheduling, and a
+    prefix cache that lets a shared system prompt skip prefill entirely.
 """
 import sys
 
@@ -16,7 +19,9 @@ sys.path.insert(0, "src")
 import numpy as np  # noqa: E402
 
 from repro.launch.serve import build_engine  # noqa: E402
+from repro.serving.gateway import Gateway  # noqa: E402
 
+# --- 1. continuous batching, dense KV, both prefill modes --------------------
 for prefill in ("token", "batched"):
     rng = np.random.default_rng(0)   # identical workload for both modes
     eng = build_engine("bitnet-2b", "tiny", slots=4, max_len=128,
@@ -37,3 +42,29 @@ for prefill in ("token", "batched"):
     print(f"TTFT p50 {ttfts[len(ttfts)//2]*1e3:.0f} ms, "
           f"p max {ttfts[-1]*1e3:.0f} ms")
     print("sample output:", reqs[0].output)
+
+# --- 2. the serving gateway: paged KV + prefix cache + streaming --------------
+print("\n=== gateway: paged KV, prefix cache, streaming ===")
+eng = build_engine("bitnet-2b", "tiny", slots=4, max_len=128,
+                   prefill="token", kv="paged", page=16, prefix_cache=True)
+gw = Gateway(eng)
+rng = np.random.default_rng(1)
+system_prompt = list(rng.integers(0, 1000, size=32))   # 2 full pages, shared
+
+# first request pays the system-prompt prefill and commits its pages
+first = gw.submit(system_prompt + [7, 8, 9], max_new_tokens=8)
+print("streamed:", list(gw.stream(first)))
+
+# later requests hit the prefix cache: the shared span costs 0 prefill ticks
+later = [gw.submit(system_prompt + list(rng.integers(0, 1000, size=4)),
+                   max_new_tokens=8, priority=i % 2) for i in range(6)]
+gw.run_until_drained()
+for r in later[:2]:
+    print(f"req {r.uid}: prefix_hit={r.prefix_hit_tokens} tokens, "
+          f"prefill_ticks={r.prefill_ticks}, out={r.output[:4]}...")
+
+m = gw.metrics_dict()
+print("TTFT p50 %.0f ms | pool occupancy %.1f%% | prefix hits %d tokens"
+      % (m["histograms"]["ttft_ms"]["p50"],
+         100 * m["gauges"]["pool_occupancy"],
+         m["counters"].get("prefix_hit_tokens", 0)))

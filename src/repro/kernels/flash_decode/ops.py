@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_decode.flash_decode import flash_decode as _pallas_decode
+from repro.kernels.flash_decode.paged import (paged_flash_decode,
+                                              paged_flash_decode_ref)
 from repro.kernels.flash_decode.ref import flash_decode_ref
 
 
@@ -52,4 +54,45 @@ def decode_attention(
         )
     else:
         out = flash_decode_ref(qg, k, v, length, kv_scale, out_dtype=out_dtype)
+    return out.reshape(b, hq, d)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "out_dtype"))
+def paged_decode_attention(
+    q: jax.Array,          # (B, Hq, D)
+    k_pool: jax.Array,     # (n_pages, Hkv, page, D)  shared PagePool layer
+    v_pool: jax.Array,
+    tables: jax.Array,     # (B, n_p) int32 block tables (pad → scratch page)
+    lengths: jax.Array,    # (B,) int32 live context length per sequence
+    kv_scale: jax.Array = 1.0,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Single-token GQA decode attention straight off the paged KV pool.
+
+    The serving engine's block tables (`PagePool.batch_tables`) drive the
+    kernel's page-shaped context loop via scalar prefetch — no contiguous
+    gather. fp8 pools are widened per-tile inside the kernel."""
+    b, hq, d = q.shape
+    _, hkv, _, _ = k_pool.shape
+    assert hq % hkv == 0, (hq, hkv)
+    qg = q.reshape(b, hkv, hq // hkv, d)
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    if k_pool.dtype == jnp.float8_e4m3fn:
+        # interpret-mode dot_generals reject fp8 inputs; widen outside
+        if interpret:
+            k_pool = k_pool.astype(jnp.float32)
+            v_pool = v_pool.astype(jnp.float32)
+
+    if use_kernel:
+        out = paged_flash_decode(qg, k_pool, v_pool, tables, lengths, kv_scale,
+                                 out_dtype=out_dtype, interpret=interpret)
+    else:
+        out = paged_flash_decode_ref(qg, k_pool, v_pool, tables, lengths,
+                                     kv_scale, out_dtype=out_dtype)
     return out.reshape(b, hq, d)

@@ -1,10 +1,14 @@
 """Serving driver: load (or init) a packed-ternary model and run a batched
-request stream through the continuous-batching engine.
+request stream through the gateway (scheduler → engine → metrics).
 
 CPU-scale usage (end-to-end example path):
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --arch bitnet-2b --preset tiny --requests 16 --slots 4 --max-new 16
+        --arch bitnet-2b --preset tiny --requests 16 --slots 4 --max-new 16 \
+        --kv paged --page 32 --prefix-cache
+
+Prints one JSON blob: request-level latency stats plus the gateway metrics
+registry (TTFT/TBT histograms, queue depth, pool occupancy, preemptions).
 
 Cluster posture: the same engine runs with the model jit-sharded over the
 production mesh (the decode_32k dry-run cells prove those graphs compile);
@@ -27,11 +31,14 @@ from repro.configs.base import get_config
 from repro.launch.train import reduce_config
 from repro.models.transformer import Model
 from repro.serving import ServeEngine
+from repro.serving.gateway import Gateway
 
 
 def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                  prefill: str, ckpt_dir: Optional[str] = None,
-                 seed: int = 0) -> ServeEngine:
+                 seed: int = 0, kv: str = "dense", page: int = 64,
+                 n_pages: Optional[int] = None,
+                 prefix_cache: bool = False) -> ServeEngine:
     cfg = reduce_config(get_config(arch), preset)
     model = Model(cfg, mode="serve")
     params = model.init(jax.random.PRNGKey(seed))
@@ -42,7 +49,8 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
             params = state["params"]
             print(f"[serve] restored packed weights from step {step}")
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
-                       prefill=prefill, seed=seed)
+                       prefill=prefill, seed=seed, kv=kv, page=page,
+                       n_pages=n_pages, prefix_cache=prefix_cache)
 
 
 def main(argv=None) -> int:
@@ -56,28 +64,47 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--prefill", default="token", choices=("token", "batched"))
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv", default="dense", choices=("dense", "paged"))
+    ap.add_argument("--page", type=int, default=64)
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="pool capacity (default: slots * max_len / page)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical prompt prefixes via the page trie "
+                         "(requires --kv paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical system-prompt tokens "
+                         "to every request (exercises the prefix cache)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO deadline (EDF scheduling)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     eng = build_engine(args.arch, args.preset, slots=args.slots,
                        max_len=args.max_len, prefill=args.prefill,
-                       ckpt_dir=args.ckpt_dir, seed=args.seed)
+                       ckpt_dir=args.ckpt_dir, seed=args.seed, kv=args.kv,
+                       page=args.page, n_pages=args.n_pages,
+                       prefix_cache=args.prefix_cache)
+    gw = Gateway(eng)
     rng = np.random.default_rng(args.seed)
     vocab = eng.cfg.vocab_size
+    system = list(rng.integers(0, min(vocab, 1000), size=args.shared_prefix))
     reqs = []
-    for _ in range(args.requests):
+    for i in range(args.requests):
         plen = int(rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1))
-        prompt = list(rng.integers(0, min(vocab, 1000), size=plen))
-        reqs.append(eng.submit(prompt, max_new_tokens=args.max_new,
-                               temperature=args.temperature))
+        prompt = system + list(rng.integers(0, min(vocab, 1000), size=plen))
+        reqs.append(gw.submit(prompt, max_new_tokens=args.max_new,
+                              temperature=args.temperature,
+                              priority=i % 2,            # mixed SLO classes
+                              deadline_ms=args.deadline_ms))
 
     t0 = time.time()
-    stats = eng.run_until_drained()
+    stats = gw.run_until_drained()
     wall = time.time() - t0
 
-    ttfts = [r.ttft_s for r in reqs]
-    lats = [r.latency_s for r in reqs]
+    done = [r for r in reqs if r.state == "done"]
+    ttfts = [r.ttft_s for r in done] or [0.0]
+    lats = [r.latency_s for r in done] or [0.0]
     out = {
         "requests": len(reqs),
         "completed": stats.completed,
@@ -87,6 +114,7 @@ def main(argv=None) -> int:
         "ttft_p50_ms": round(float(np.median(ttfts)) * 1e3, 1),
         "ttft_p99_ms": round(float(np.quantile(ttfts, 0.99)) * 1e3, 1),
         "latency_p50_ms": round(float(np.median(lats)) * 1e3, 1),
+        "metrics": gw.metrics_dict(),
     }
     print("[serve]", json.dumps(out))
     return 0

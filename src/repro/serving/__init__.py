@@ -1,5 +1,7 @@
 """Serving: continuous-batching decode engine over the paper's
-context-sharded fp8 KV cache."""
+context-sharded fp8 KV cache, plus the gateway layer (scheduler, prefix
+cache, streaming frontend, metrics) in `repro.serving.gateway`."""
 from repro.serving.engine import EngineStats, Request, ServeEngine
+from repro.serving.paged_kv import PagePool, PagedConfig
 
-__all__ = ["EngineStats", "Request", "ServeEngine"]
+__all__ = ["EngineStats", "PagePool", "PagedConfig", "Request", "ServeEngine"]

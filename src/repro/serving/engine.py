@@ -10,23 +10,45 @@ token, weights in ROM). This engine generalizes it to the production mesh:
   * **continuous batching**: slots free as sequences finish and are refilled
     from the queue mid-flight; per-slot positions drive the cache scatter and
     attention masks.
+  * **KV backends** (``kv=``): ``"dense"`` reserves a contiguous
+    (L, B, H, max_len, D) cache row per slot — the paper's fixed on-chip SRAM
+    budget. ``"paged"`` replaces it with the shared `PagePool`
+    (serving/paged_kv.py): slots own block tables of fp8 pages, the jitted
+    decode gathers a bucketed page view, runs the same ``decode_step``, and
+    scatters the new token's k/v back into its page — so paged and dense
+    produce token-identical greedy outputs. Paged mode unlocks admission
+    control, preemption and the prefix cache (gateway/).
+  * **scheduling** is delegated to a pluggable scheduler (default FIFO via
+    `gateway.scheduler.Scheduler`): priority classes, per-request deadlines
+    (EDF), admission control backed by ``PagePool.can_admit`` and preemption
+    of low-priority slots when the pool runs dry — the preempted request
+    re-enters the queue with its generated tokens as prompt, so resumed
+    decode replays prefill but loses no tokens.
+  * **prefix cache**: with ``prefix_cache=True`` (paged only), committed
+    prompt pages are shared copy-on-write across requests via a token trie
+    (gateway/prefix_cache.py); shared spans skip prefill ticks entirely.
   * **prefill** is either ``token`` mode — feed the prompt through
     decode_step one token at a time (the paper's own prefill: "executes all
     operations token-by-token, eliminating the prefill/decoding
     distinction") — or ``batched`` mode, a bucketed full-sequence prefill
     per request that splices the resulting cache rows into the live batch
     (beyond-paper; amortizes long prompts).
-  * sampling: greedy or temperature/top-k, jitted with a per-engine PRNG.
+  * sampling: greedy or temperature/top-k — top-k is per-slot (a vector
+    argument; 0 = full softmax), so one request's narrow top-k never leaks
+    into its batch neighbours.
+  * **events**: ``on_token / on_done / on_admit / on_preempt / on_expire``
+    hooks fire inline; the gateway (gateway/gateway.py) wires them to
+    streaming callbacks and the metrics registry.
 
 SSM/hybrid archs serve through the same interface (their "cache" is the
-recurrent state; positions only gate the attention blocks, if any).
+recurrent state; positions only gate the attention blocks, if any). Paged KV
+requires a GQA KV cache — ssm/hybrid/MLA families use ``kv="dense"``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +56,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import Model
+from repro.serving import paged_kv
+from repro.serving.paged_kv import PagePool, PagedConfig
 
 Params = Any
+NEG_INF = -1e30
 
 
 @dataclasses.dataclass
@@ -46,11 +71,20 @@ class Request:
     temperature: float = 0.0        # 0 → greedy
     top_k: int = 0                  # 0 → full softmax
     eos_id: Optional[int] = None
+    priority: int = 1               # lower = more urgent (class 0: interactive)
+    deadline_s: Optional[float] = None   # absolute time.time() deadline (SLO)
     # filled by the engine
+    state: str = "queued"  # queued|running|preempted|done|cancelled|expired|rejected
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
+    t_admit: float = 0.0
     t_first: float = 0.0
+    t_last: float = 0.0
     t_done: float = 0.0
+    n_preempts: int = 0
+    prefix_hit_tokens: int = 0      # prompt tokens served from the prefix cache
+    prefill_ticks: int = 0          # decode ticks spent consuming the prompt
+    _seq: int = 0                   # scheduler arrival order
 
     @property
     def ttft_s(self) -> float:
@@ -66,6 +100,10 @@ class EngineStats:
     ticks: int = 0
     tokens_out: int = 0
     completed: int = 0
+    preemptions: int = 0
+    cancelled: int = 0
+    expired: int = 0
+    prefix_hit_tokens: int = 0
     wall_s: float = 0.0
 
     @property
@@ -75,40 +113,101 @@ class EngineStats:
 
 class ServeEngine:
     def __init__(self, model: Model, params: Params, *, max_slots: int = 8,
-                 max_len: int = 1024, prefill: str = "token", seed: int = 0):
+                 max_len: int = 1024, prefill: str = "token", seed: int = 0,
+                 kv: str = "dense", page: int = 64,
+                 n_pages: Optional[int] = None, prefix_cache: bool = False,
+                 scheduler=None):
         assert model.mode in ("serve", "qlora")
+        assert kv in ("dense", "paged"), kv
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_mode = prefill
+        self.kv_mode = kv
         self.key = jax.random.PRNGKey(seed)
 
-        self.cache = model.init_cache(max_slots, max_len)
+        if scheduler is None:
+            from repro.serving.gateway.scheduler import Scheduler
+            scheduler = Scheduler()
+        self.scheduler = scheduler
+
+        self.pool: Optional[PagePool] = None
+        self.prefix = None
+        if kv == "paged":
+            assert self.cfg.family not in ("ssm", "hybrid"), \
+                "paged KV needs an attention KV cache (use kv='dense')"
+            assert self.cfg.attention_kind != "mla", \
+                "paged KV supports GQA caches only (use kv='dense')"
+            spec = model.cache_specs(1, 1)
+            pcfg = PagedConfig(
+                n_layers=spec["k"].shape[0],
+                n_kv_heads=self.cfg.num_kv_heads,
+                head_dim=self.cfg.head_dim,
+                page=page,
+                n_pages=n_pages or max_slots * (-(-max_len // page)),
+                dtype=spec["k"].dtype,
+            )
+            self.pool = PagePool(pcfg, max_slots)
+            if prefix_cache:
+                from repro.serving.gateway.prefix_cache import PrefixCache
+                self.prefix = PrefixCache(page)
+            self.cache = None
+            self._paged_decode = jax.jit(self._paged_decode_fn)
+        else:
+            assert not prefix_cache, "prefix_cache requires kv='paged'"
+            self.cache = model.init_cache(max_slots, max_len)
+            self._decode = jax.jit(self._decode_fn)
+
         self.pos = np.zeros((max_slots,), np.int32)       # next write position
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.pending_prompt: List[List[int]] = [[] for _ in range(max_slots)]
-        self.queue: Deque[Request] = deque()
+        self.slot_feed: List[List[int]] = [[] for _ in range(max_slots)]
+        self.slot_keys: List[List] = [[] for _ in range(max_slots)]
+        self.slot_cached: List[int] = [0] * max_slots     # cache-owned lead pages
         self.stats = EngineStats()
         self._uid = 0
 
-        self._decode = jax.jit(self._decode_fn)
-        self._sample = jax.jit(self._sample_fn, static_argnums=(3,))
+        self._sample = jax.jit(self._sample_fn)
+
+        # event hooks (wired by the gateway; req-first signatures)
+        self.on_token: Optional[Callable[[Request, int, float], None]] = None
+        self.on_done: Optional[Callable[[Request], None]] = None
+        self.on_admit: Optional[Callable[[Request, int], None]] = None
+        self.on_preempt: Optional[Callable[[Request], None]] = None
+        self.on_expire: Optional[Callable[[Request], None]] = None
 
     # -- jitted kernels --------------------------------------------------------
     def _decode_fn(self, params, cache, tokens, pos):
         logits, cache = self.model.decode_step(params, cache, tokens, pos)
         return logits, cache
 
-    def _sample_fn(self, logits, key, temperature, top_k: int):
+    def _paged_decode_fn(self, params, pool_k, pool_v, tables, tokens, pos,
+                         page_ids, offsets):
+        """Gather the bucketed page view, run the same decode_step as dense
+        mode, then scatter the new token's k/v back into its page. Inactive
+        slots' rows target the pool's scratch page."""
+        cache = {"k": paged_kv.gather_pages(pool_k, tables),
+                 "v": paged_kv.gather_pages(pool_v, tables)}
+        logits, new_cache = self.model.decode_step(params, cache, tokens, pos)
+        idx = pos.reshape(1, -1, 1, 1, 1).astype(jnp.int32)
+        k_tok = jnp.take_along_axis(new_cache["k"], idx, axis=3)[:, :, :, 0]
+        v_tok = jnp.take_along_axis(new_cache["v"], idx, axis=3)[:, :, :, 0]
+        pool_k = paged_kv.scatter_tokens(pool_k, page_ids, offsets, k_tok)
+        pool_v = paged_kv.scatter_tokens(pool_v, page_ids, offsets, v_tok)
+        return logits, pool_k, pool_v
+
+    def _sample_fn(self, logits, key, temperature, top_k):
+        """Per-slot sampling: temperature (B,) f32, top_k (B,) int32 — each
+        slot masks to its *own* top-k (0 = full softmax)."""
         greedy = jnp.argmax(logits, axis=-1)
-        if top_k:
-            vals, idx = jax.lax.top_k(logits, top_k)
-            masked = jnp.full_like(logits, -1e30).at[
-                jnp.arange(logits.shape[0])[:, None], idx].set(vals)
-        else:
-            masked = logits
+        vocab = logits.shape[-1]
+        sorted_desc = -jnp.sort(-logits, axis=-1)
+        k_idx = jnp.clip(top_k - 1, 0, vocab - 1)
+        thresh = jnp.take_along_axis(sorted_desc, k_idx[:, None], axis=-1)
+        masked = jnp.where((top_k[:, None] > 0) & (logits < thresh),
+                           NEG_INF, logits)
         scaled = masked / jnp.maximum(temperature[:, None], 1e-6)
         sampled = jax.random.categorical(key, scaled, axis=-1)
         use_greedy = temperature <= 0.0
@@ -117,18 +216,44 @@ class ServeEngine:
     # -- public API ---------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 32,
                temperature: float = 0.0, top_k: int = 0,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None, priority: int = 1,
+               deadline_s: Optional[float] = None) -> Request:
         self._uid += 1
         req = Request(self._uid, list(prompt), max_new_tokens, temperature,
-                      top_k, eos_id, t_submit=time.time())
-        self.queue.append(req)
+                      top_k, eos_id, priority=priority, deadline_s=deadline_s,
+                      t_submit=time.time())
+        if not self.scheduler.push(req):
+            req.state = "rejected"
         return req
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a queued or running request. Returns False if unknown."""
+        req = self.scheduler.remove(uid)
+        if req is not None:
+            req.state = "cancelled"
+            self.stats.cancelled += 1
+            return True
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.uid == uid:
+                r.state = "cancelled"
+                self.stats.cancelled += 1
+                self._release_slot(slot)
+                return True
+        return False
 
     def run_until_drained(self, max_ticks: int = 100_000) -> EngineStats:
         t0 = time.time()
-        while (self.queue or any(r is not None for r in self.slot_req)) \
+        while (len(self.scheduler) or any(r is not None for r in self.slot_req)) \
                 and self.stats.ticks < max_ticks:
+            before = self.stats.ticks
             self.tick()
+            if self.stats.ticks == before \
+                    and not any(r is not None for r in self.slot_req):
+                # nothing running and nothing admissible (e.g. a queued
+                # request larger than the page pool): no tick will ever
+                # change that, so bail instead of spinning — callers can
+                # inspect the still-queued requests
+                break
         self.stats.wall_s += time.time() - t0
         return self.stats
 
@@ -136,39 +261,230 @@ class ServeEngine:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
-            if len(req.prompt) + req.max_new_tokens > self.max_len:
-                req.prompt = req.prompt[-(self.max_len - req.max_new_tokens):]
-            self.slot_req[slot] = req
-            self.pos[slot] = 0
-            # SSM/hybrid prefill must thread recurrent state → token mode
-            # (model.prefill fills the KV cache only; see models/transformer).
-            batched_ok = self.cfg.family not in ("ssm", "hybrid")
-            if self.prefill_mode == "batched" and batched_ok and len(req.prompt) > 1:
-                self._batched_prefill(slot, req)
-                self.pending_prompt[slot] = [req.prompt[-1]]
-            else:
-                # paper mode: prompt tokens stream through decode_step
-                self.pending_prompt[slot] = list(req.prompt)
+    def _active_pairs(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
 
-    def _batched_prefill(self, slot: int, req: Request) -> None:
+    def _feed_tokens(self, req: Request) -> List[int]:
+        """Token history a (re-)admitted request must replay: the prompt
+        plus anything generated before a preemption."""
+        return list(req.prompt) + list(req.output)
+
+    def _clamped_feed(self, req: Request) -> Tuple[List[int], int]:
+        """(feed, remaining_new) after the max_len truncation clamp — the
+        single source of truth shared by admission accounting and _place:
+        the generation budget is clamped first (a request can never produce
+        more than max_len - 1 new tokens), then the prompt keeps its tail."""
+        feed = self._feed_tokens(req)
+        remaining_new = max(1, req.max_new_tokens - len(req.output))
+        if len(feed) + remaining_new > self.max_len:
+            remaining_new = min(remaining_new, self.max_len - 1)
+            feed = feed[-(self.max_len - remaining_new):]
+        return feed, remaining_new
+
+    def _pages_needed(self, req: Request) -> int:
+        """Free pages required to *start* the request (prompt + 1 token)."""
+        feed, _ = self._clamped_feed(req)
+        hit = self.prefix.lookup(feed) if self.prefix is not None else 0
+        return self.pool.pages_for(len(feed) + 1) - hit
+
+    def _pages_lifetime(self, req: Request) -> int:
+        """Pool pages the request's slot will hold at its *final* context
+        length (prefix hits included — shared pages still occupy the pool).
+        Must fit total capacity or the request can never complete."""
+        feed, remaining_new = self._clamped_feed(req)
+        return self.pool.pages_for(min(len(feed) + remaining_new, self.max_len))
+
+    def _can_admit(self, req: Request) -> bool:
+        if self.kv_mode != "paged":
+            return True
+        # a request whose final context exceeds the whole pool would only
+        # crash mid-flight — keep it queued instead of admitting it
+        if self._pages_lifetime(req) > self.pool.cfg.n_pages:
+            return False
+        return self.pool.pages_free >= self._pages_needed(req)
+
+    def _admit(self) -> None:
+        now = time.time()
+        for req in self.scheduler.drop_expired(now):
+            req.state = "expired"
+            self.stats.expired += 1
+            if self.on_expire:
+                self.on_expire(req)
+        for slot in self._free_slots():
+            if not len(self.scheduler):
+                break
+            req = self.scheduler.pop_next(self._can_admit)
+            if req is None and self.kv_mode == "paged":
+                req = self._admit_under_pressure()
+            if req is None:
+                break
+            self._place(slot, req, now)
+
+    def _admit_under_pressure(self) -> Optional[Request]:
+        """Nothing fits the pool: evict resident prefix pages, then preempt
+        lower-priority active slots for the most urgent queued request —
+        but only if the reclaimed pages actually make it admissible.
+        Preempting without that check livelocks: the victim is re-admitted
+        by the very next pop and zero progress is made every tick."""
+        head = self.scheduler.peek(
+            lambda r: self._pages_lifetime(r) <= self.pool.cfg.n_pages)
+        if head is None:
+            return None
+        needed = self._pages_needed(head)
+        short = needed - self.pool.pages_free
+        if short > 0 and self.prefix is not None:
+            self.pool.free_pages(self.prefix.evict(short))
+        if not self._can_admit(head):
+            # plan the victim set first: count only pages release() actually
+            # frees (owned pages — cache-shared ones stay resident)
+            budget = self.pool.pages_free
+            pairs = self._active_pairs()
+            victims: List[int] = []
+            while budget < needed:
+                slot = self.scheduler.pick_victim(
+                    pairs, below_priority=head.priority)
+                if slot is None:
+                    return None          # preemption can't help → no thrash
+                budget += (len(self.pool.tables[slot])
+                           - self.slot_cached[slot])
+                victims.append(slot)
+                pairs = [(i, r) for i, r in pairs if i != slot]
+            for slot in victims:
+                self._preempt(slot)
+        return self.scheduler.pop_next(self._can_admit)
+
+    def _place(self, slot: int, req: Request, now: float) -> None:
+        req.state = "running"
+        req.t_admit = now
+        feed, remaining_new = self._clamped_feed(req)
+        req.max_new_tokens = len(req.output) + remaining_new
+        self.slot_req[slot] = req
+        self.slot_feed[slot] = feed
+        self.pos[slot] = 0
+        matched = 0
+        if self.prefix is not None:
+            ids, keys = self.prefix.match(feed)
+            self.slot_keys[slot] = keys
+            self.slot_cached[slot] = len(ids)
+            if ids:
+                self.pool.append_shared(slot, ids)
+                matched = len(ids) * self.pool.cfg.page
+                self.pos[slot] = matched
+                self.pool.lengths[slot] = matched
+                req.prefix_hit_tokens = matched
+                self.stats.prefix_hit_tokens += matched
+        if self.kv_mode == "paged":
+            # eager reservation: claim the prompt's pages (plus the first
+            # output token) now, so admission control sees the true footprint
+            # of already-placed requests instead of racing lazy allocation.
+            self.pool.reserve(slot, len(feed) + 1)
+        remainder = feed[matched:]
+        # SSM/hybrid prefill must thread recurrent state → token mode
+        # (model.prefill fills the KV cache only; see models/transformer).
+        # A prefix hit also forces token mode: model.prefill bakes positions
+        # starting at 0, but the remainder starts at ``matched``.
+        batched_ok = (self.cfg.family not in ("ssm", "hybrid")
+                      and matched == 0 and len(remainder) > 1)
+        if self.prefill_mode == "batched" and batched_ok:
+            self._batched_prefill(slot, remainder)
+            self.pending_prompt[slot] = [remainder[-1]]
+        else:
+            # paper mode: prompt tokens stream through decode_step
+            self.pending_prompt[slot] = list(remainder)
+        if self.on_admit:
+            self.on_admit(req, slot)
+
+    def _batched_prefill(self, slot: int, feed: List[int]) -> None:
         """Run full-sequence prefill for one request (bucketed length) and
-        splice its cache rows into the live batch cache at ``slot``."""
-        n = len(req.prompt) - 1          # last prompt token goes through decode
+        splice its cache rows into the live batch cache at ``slot`` (dense)
+        or write them into the slot's pages (paged)."""
+        n = len(feed) - 1          # last prompt token goes through decode
         if n <= 0:
             return
         bucket = 1 << max(4, (n - 1).bit_length())
         bucket = min(bucket, self.max_len)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :n] = req.prompt[:n]
+        toks[0, :n] = feed[:n]
         _, sub_cache = self.model.prefill(self.params, {"tokens": jnp.asarray(toks)},
                                           self.max_len)
-        self.cache = _splice_cache(self.cache, sub_cache, slot)
+        if self.kv_mode == "paged":
+            self.pool.write_span(slot, 0, sub_cache["k"][:, 0, :, :n],
+                                 sub_cache["v"][:, 0, :, :n])
+        else:
+            self.cache = _splice_cache(self.cache, sub_cache, slot)
         self.pos[slot] = n
+
+    # -- paged capacity / preemption ----------------------------------------------
+    def _ensure_capacity(self, active: List[int]) -> List[int]:
+        """Guarantee every active slot can write its next token. Evicts
+        resident prefix pages first, then preempts victims (pages released,
+        request re-queued with its generated tokens as prompt)."""
+        while True:
+            need = sum(
+                max(0, self.pool.pages_for(int(self.pos[i]) + 1)
+                    - len(self.pool.tables[i]))
+                for i in active)
+            short = need - self.pool.pages_free
+            if short <= 0:
+                return active
+            if self.prefix is not None:
+                self.pool.free_pages(self.prefix.evict(short))
+                if need <= self.pool.pages_free:
+                    return active
+            victim = self.scheduler.pick_victim(
+                [(i, self.slot_req[i]) for i in active])
+            if victim is None or len(active) <= 1:
+                raise MemoryError(
+                    "page pool exhausted: a single request's context exceeds "
+                    "pool capacity (grow n_pages)")
+            self._preempt(victim)
+            active = [i for i in active if i != victim]
+
+    def _preempt(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.state = "preempted"
+        req.n_preempts += 1
+        self.stats.preemptions += 1
+        self._release_slot(slot)
+        self.scheduler.requeue(req)
+        if self.on_preempt:
+            self.on_preempt(req)
+
+    def _release_slot(self, slot: int) -> None:
+        if self.kv_mode == "paged":
+            if self.prefix is not None:
+                self.prefix.decref(self.slot_keys[slot])
+            self.pool.release(slot, keep=self.slot_cached[slot])
+        self.slot_req[slot] = None
+        self.pending_prompt[slot] = []
+        self.slot_feed[slot] = []
+        self.slot_keys[slot] = []
+        self.slot_cached[slot] = 0
+        self.pos[slot] = 0
+
+    # -- decode ---------------------------------------------------------------------
+    def _paged_tick_decode(self, active: List[int], tokens: np.ndarray):
+        pool = self.pool
+        for i in active:
+            pool.reserve(i, int(self.pos[i]) + 1)
+        max_pages = max(len(pool.tables[i]) for i in active)
+        view = 1 << max(0, (max_pages - 1).bit_length())
+        view = min(view, pool.pages_for(self.max_len))
+        view = max(view, max_pages)
+        tables = pool.batch_tables(active, view, self.max_slots)
+        page_ids = np.full((self.max_slots,), pool.scratch_page, np.int32)
+        offsets = np.zeros((self.max_slots,), np.int32)
+        for i in active:
+            p = int(self.pos[i])
+            page_ids[i] = pool.tables[i][p // pool.cfg.page]
+            offsets[i] = p % pool.cfg.page
+        logits, pool.k, pool.v = self._paged_decode(
+            self.params, pool.k, pool.v, jnp.asarray(tables),
+            jnp.asarray(tokens), jnp.asarray(self.pos),
+            jnp.asarray(page_ids), jnp.asarray(offsets))
+        for i in active:
+            pool.lengths[i] = max(int(pool.lengths[i]), int(self.pos[i]) + 1)
+        return logits
 
     def tick(self) -> None:
         """One decode step for the whole slot batch."""
@@ -176,10 +492,14 @@ class ServeEngine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
+        if self.kv_mode == "paged":
+            active = self._ensure_capacity(active)
+            if not active:
+                return
 
         tokens = np.zeros((self.max_slots,), np.int32)
         temps = np.zeros((self.max_slots,), np.float32)
-        topk = 0
+        topks = np.zeros((self.max_slots,), np.int32)
         for i in active:
             req = self.slot_req[i]
             if self.pending_prompt[i]:
@@ -187,13 +507,17 @@ class ServeEngine:
             else:
                 tokens[i] = req.output[-1]
             temps[i] = req.temperature
-            topk = max(topk, req.top_k)
+            topks[i] = req.top_k
 
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(self.pos))
+        if self.kv_mode == "paged":
+            logits = self._paged_tick_decode(active, tokens)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens),
+                                              jnp.asarray(self.pos))
         self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(self._sample(logits, sub, jnp.asarray(temps), topk))
+        nxt = np.asarray(self._sample(logits, sub, jnp.asarray(temps),
+                                      jnp.asarray(topks)))
 
         now = time.time()
         self.stats.ticks += 1
@@ -202,20 +526,35 @@ class ServeEngine:
             self.pos[i] += 1
             if self.pending_prompt[i]:
                 self.pending_prompt[i].pop(0)
+                req.prefill_ticks += 1
                 if self.pending_prompt[i]:
                     continue  # still consuming the prompt
+                # prompt fully in the cache → donate its full pages to the trie
+                if self.prefix is not None:
+                    keys = self.prefix.commit(self.slot_feed[i],
+                                              self.pool.tables[i],
+                                              self.slot_cached[i])
+                    self.slot_keys[i].extend(keys)
+                    self.slot_cached[i] += len(keys)
             # the model has now seen the full prompt → this is an output token
+            tok = int(nxt[i])
             if not req.output:
                 req.t_first = now
-            req.output.append(int(nxt[i]))
+            req.output.append(tok)
             self.stats.tokens_out += 1
+            if self.on_token:
+                self.on_token(req, tok, now)
+            req.t_last = now
             done = (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and req.output[-1] == req.eos_id)
                     or self.pos[i] >= self.max_len)
             if done:
                 req.t_done = now
+                req.state = "done"
                 self.stats.completed += 1
-                self.slot_req[i] = None
+                self._release_slot(i)
+                if self.on_done:
+                    self.on_done(req)
 
 
 def _splice_cache(cache, sub_cache, slot: int):

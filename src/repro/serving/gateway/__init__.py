@@ -1,0 +1,8 @@
+"""Serving gateway: SLO scheduler, prefix cache, frontend + metrics over the
+continuous-batching engine (see gateway.py for the dataflow diagram)."""
+from repro.serving.gateway.gateway import Gateway
+from repro.serving.gateway.metrics import Histogram, Metrics
+from repro.serving.gateway.prefix_cache import PrefixCache
+from repro.serving.gateway.scheduler import Scheduler
+
+__all__ = ["Gateway", "Histogram", "Metrics", "PrefixCache", "Scheduler"]

@@ -1,0 +1,147 @@
+"""Serving gateway frontend: submit / stream / cancel + metrics.
+
+The gateway is the request-facing layer above `ServeEngine`:
+
+    client ──submit/stream/cancel──▶ Gateway ──schedules──▶ ServeEngine
+                                       │                        │
+                                       ├── Scheduler (SLO)      ├── decode_step
+                                       ├── PrefixCache          └── PagePool
+                                       └── Metrics (JSON)
+
+It wires the engine's event hooks (`on_token` …) to per-request streaming
+callbacks and a metrics registry (TTFT / time-between-tokens histograms,
+queue depth, pool occupancy, preemption counters), and drives the tick loop.
+Synchronous by design — the engine is one jitted decode per tick — but the
+callback surface is what an async transport (HTTP/SSE) would attach to.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.gateway.metrics import Metrics
+
+TokenCallback = Callable[[Request, int], None]
+
+
+class Gateway:
+    def __init__(self, engine: ServeEngine, metrics: Optional[Metrics] = None):
+        self.engine = engine
+        self.metrics = metrics if metrics is not None else Metrics()
+        self._stream_cbs: Dict[int, TokenCallback] = {}
+        engine.on_token = self._on_token
+        engine.on_done = self._on_done
+        engine.on_admit = self._on_admit
+        engine.on_preempt = self._on_preempt
+        engine.on_expire = self._on_expire
+
+    # -- frontend API ---------------------------------------------------------
+    def submit(self, prompt: List[int], *, max_new_tokens: int = 32,
+               temperature: float = 0.0, top_k: int = 0,
+               eos_id: Optional[int] = None, priority: int = 1,
+               deadline_ms: Optional[float] = None,
+               stream_cb: Optional[TokenCallback] = None) -> Request:
+        """Enqueue a request. ``deadline_ms`` is an SLO relative to now;
+        ``stream_cb(req, token)`` fires for every generated token."""
+        deadline_s = (time.time() + deadline_ms / 1e3
+                      if deadline_ms is not None else None)
+        req = self.engine.submit(prompt, max_new_tokens=max_new_tokens,
+                                 temperature=temperature, top_k=top_k,
+                                 eos_id=eos_id, priority=priority,
+                                 deadline_s=deadline_s)
+        self.metrics.inc("requests_submitted")
+        if req.state == "rejected":
+            self.metrics.inc("requests_rejected")
+        elif stream_cb is not None:
+            self._stream_cbs[req.uid] = stream_cb
+        return req
+
+    def cancel(self, uid: int) -> bool:
+        ok = self.engine.cancel(uid)
+        if ok:
+            self.metrics.inc("requests_cancelled")
+            self._stream_cbs.pop(uid, None)
+        return ok
+
+    def stream(self, req: Request, max_ticks: int = 100_000
+               ) -> Iterator[int]:
+        """Generator of ``req``'s tokens, driving the engine as needed —
+        co-scheduled requests keep decoding in the same ticks."""
+        emitted = 0
+        ticks = 0
+        while req.state not in ("done", "cancelled", "expired", "rejected") \
+                or emitted < len(req.output):
+            while emitted < len(req.output):
+                yield req.output[emitted]
+                emitted += 1
+            if req.state in ("done", "cancelled", "expired", "rejected"):
+                return
+            if ticks >= max_ticks:
+                return
+            self.step()
+            ticks += 1
+
+    def step(self) -> None:
+        """One engine tick + gauge refresh."""
+        self.engine.tick()
+        self._sample_gauges()
+
+    def run_until_drained(self, max_ticks: int = 100_000):
+        stats = self.engine.run_until_drained(max_ticks)
+        self._sample_gauges()
+        return stats
+
+    # -- engine event hooks ----------------------------------------------------
+    def _on_token(self, req: Request, tok: int, now: float) -> None:
+        self.metrics.inc("tokens_out")
+        if len(req.output) == 1:
+            self.metrics.observe("ttft_ms", (now - req.t_submit) * 1e3)
+            self.metrics.observe("queue_wait_ms",
+                                 (req.t_admit - req.t_submit) * 1e3)
+        else:
+            self.metrics.observe("tbt_ms", (now - req.t_last) * 1e3)
+        cb = self._stream_cbs.get(req.uid)
+        if cb is not None:
+            cb(req, tok)
+
+    def _on_done(self, req: Request) -> None:
+        self.metrics.inc("requests_completed")
+        self.metrics.observe("e2e_ms", req.latency_s * 1e3)
+        if req.deadline_s is not None and req.t_done > req.deadline_s:
+            self.metrics.inc("slo_misses")
+        if req.prefix_hit_tokens:
+            self.metrics.inc("prefix_hit_tokens", req.prefix_hit_tokens)
+            self.metrics.inc("prefill_ticks_saved", req.prefix_hit_tokens)
+        self._stream_cbs.pop(req.uid, None)
+
+    def _on_admit(self, req: Request, slot: int) -> None:
+        self.metrics.inc("admissions")
+
+    def _on_preempt(self, req: Request) -> None:
+        self.metrics.inc("preemptions")
+
+    def _on_expire(self, req: Request) -> None:
+        self.metrics.inc("requests_expired")
+        self._stream_cbs.pop(req.uid, None)
+
+    # -- observability ---------------------------------------------------------
+    def _sample_gauges(self) -> None:
+        eng = self.engine
+        self.metrics.set_gauge("queue_depth", len(eng.scheduler))
+        self.metrics.set_gauge(
+            "active_slots",
+            sum(1 for r in eng.slot_req if r is not None))
+        if eng.pool is not None:
+            total = eng.pool.cfg.n_pages
+            self.metrics.set_gauge("pool_pages_free", eng.pool.pages_free)
+            self.metrics.set_gauge(
+                "pool_occupancy",
+                round(1.0 - eng.pool.pages_free / max(total, 1), 4))
+            if eng.prefix is not None:
+                self.metrics.set_gauge("prefix_cache_pages",
+                                       eng.prefix.n_pages)
+
+    def metrics_dict(self) -> Dict:
+        self._sample_gauges()
+        return self.metrics.to_dict()

@@ -1,0 +1,105 @@
+"""Serving metrics registry: counters, gauges, histograms → one JSON blob.
+
+Prometheus-shaped (monotonic counters, point-in-time gauges, bucketed
+histograms) but in-process and dependency-free: the gateway observes
+TTFT / time-between-tokens / queue depth / pool occupancy here and
+`launch/serve.py` + `benchmarks/bench_serving.py` dump `to_dict()` as JSON.
+Exact percentiles come from retained samples (serving runs here are
+bench-scale; a reservoir cap bounds memory for long soaks).
+"""
+from __future__ import annotations
+
+import bisect
+import random
+from typing import Dict, List, Optional, Sequence
+
+DEFAULT_MS_BUCKETS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
+                      500.0, 1000.0, 2000.0, 5000.0, 10000.0)
+
+
+class Histogram:
+    def __init__(self, buckets: Sequence[float] = DEFAULT_MS_BUCKETS,
+                 sample_cap: int = 65536):
+        self.buckets = tuple(sorted(buckets))
+        self.bucket_counts = [0] * (len(self.buckets) + 1)  # +inf tail
+        self.count = 0
+        self.sum = 0.0
+        self._samples: List[float] = []
+        self._cap = sample_cap
+        self._rng = random.Random(0)
+        self._max = float("-inf")
+
+    def observe(self, value: float) -> None:
+        self.count += 1
+        self.sum += value
+        self._max = max(self._max, value)
+        self.bucket_counts[bisect.bisect_left(self.buckets, value)] += 1
+        # uniform reservoir: percentiles stay representative of the whole
+        # stream on long soaks, not frozen on the first cap observations
+        if len(self._samples) < self._cap:
+            self._samples.append(value)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < self._cap:
+                self._samples[j] = value
+
+    def percentile(self, p: float) -> float:
+        """Exact percentile over retained samples (p in [0, 100])."""
+        if not self._samples:
+            return 0.0
+        s = sorted(self._samples)
+        idx = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
+        return s[idx]
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "count": self.count,
+            "mean": round(self.mean, 3),
+            "p50": round(self.percentile(50), 3),
+            "p90": round(self.percentile(90), 3),
+            "p99": round(self.percentile(99), 3),
+            "max": round(self._max, 3) if self.count else 0.0,
+        }
+
+
+class Metrics:
+    """Flat named registry. Conventional names used by the gateway:
+
+    counters:  requests_submitted / rejected / expired / cancelled /
+               completed / preempted, tokens_out, prefix_hit_tokens,
+               prefill_ticks_saved
+    gauges:    queue_depth, active_slots, pool_pages_free, pool_occupancy
+    histograms (ms): ttft_ms, tbt_ms, e2e_ms, queue_wait_ms
+    """
+
+    def __init__(self):
+        self.counters: Dict[str, float] = {}
+        self.gauges: Dict[str, float] = {}
+        self.histograms: Dict[str, Histogram] = {}
+
+    def inc(self, name: str, n: float = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def set_gauge(self, name: str, value: float) -> None:
+        self.gauges[name] = value
+
+    def observe(self, name: str, value: float,
+                buckets: Optional[Sequence[float]] = None) -> None:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(buckets or DEFAULT_MS_BUCKETS)
+        h.observe(value)
+
+    def counter(self, name: str) -> float:
+        return self.counters.get(name, 0)
+
+    def to_dict(self) -> Dict:
+        return {
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "histograms": {k: h.to_dict() for k, h in self.histograms.items()},
+        }

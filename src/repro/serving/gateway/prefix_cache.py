@@ -1,0 +1,141 @@
+"""Prefix cache: a token trie over committed KV pages with refcounts.
+
+Shared system prompts dominate multi-user serving traffic; their KV is
+identical across requests, so re-running prefill for them wastes both ticks
+(TTFT) and pool pages. This cache maps *full pages* of prompt tokens to the
+page ids that already hold their k/v:
+
+  * keys are exact token prefixes (tuple of the first ``i*page`` tokens) —
+    a trie flattened into a dict, collision-free by construction;
+  * ``match`` walks the longest cached prefix and hands the pages to a new
+    slot **copy-on-write**: shared pages are always full, so the slot's own
+    writes land in freshly allocated pages after the shared span and the
+    shared pages are never mutated;
+  * ``commit`` adopts a slot's prompt pages into the cache once its prefill
+    finishes (ownership transfers; the pool must not free them on release);
+  * refcounts track live slot users; nodes with no users are *resident* and
+    evictable LRU, leaf-first, when the pool runs dry.
+
+Only full pages are cacheable, and at least one trailing prompt token is
+always left un-matched so the decode path has a token to feed (its logits
+produce the first output token).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+Key = Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class _Node:
+    page_id: int
+    active: int = 0            # live slot users
+    children: int = 0
+    last_use: int = 0
+
+
+class PrefixCache:
+    def __init__(self, page: int):
+        self.page = page
+        self.nodes: Dict[Key, _Node] = {}
+        self._clock = itertools.count(1)
+        self.hits = 0
+        self.misses = 0
+
+    # -- internals ------------------------------------------------------------
+    def _key(self, tokens: Sequence[int], n_pages: int) -> Key:
+        return tuple(tokens[: n_pages * self.page])
+
+    def _walk(self, tokens: Sequence[int]) -> int:
+        """Longest cached page span, capped so ≥1 token stays for decode."""
+        limit = max(0, (len(tokens) - 1) // self.page)
+        n = 0
+        while n < limit and self._key(tokens, n + 1) in self.nodes:
+            n += 1
+        return n
+
+    # -- read side ------------------------------------------------------------
+    def lookup(self, tokens: Sequence[int]) -> int:
+        """Matched page count without taking references (admission peek)."""
+        return self._walk(tokens)
+
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], List[Key]]:
+        """Longest-prefix hit: increfs every matched node and returns
+        (page_ids, keys). The caller attaches the pages to its slot table
+        and must ``decref(keys)`` when the slot ends."""
+        n = self._walk(tokens)
+        ids, keys = [], []
+        now = next(self._clock)
+        for i in range(1, n + 1):
+            node = self.nodes[self._key(tokens, i)]
+            node.active += 1
+            node.last_use = now
+            ids.append(node.page_id)
+            keys.append(self._key(tokens, i))
+        if n:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return ids, keys
+
+    # -- write side -----------------------------------------------------------
+    def commit(self, tokens: Sequence[int], table: Sequence[int],
+               start_pages: int) -> List[Key]:
+        """Adopt a slot's freshly-prefilled prompt pages, from page index
+        ``start_pages`` (the slot's shared-prefix span) up to the last full
+        page. Stops at the first already-cached key (a concurrent request
+        committed the same prefix first; the slot keeps its duplicate page).
+        Returns the committed keys — the slot holds a reference to each."""
+        n_full = len(tokens) // self.page
+        committed: List[Key] = []
+        now = next(self._clock)
+        for i in range(start_pages, n_full):
+            key = self._key(tokens, i + 1)
+            if key in self.nodes:
+                break
+            self.nodes[key] = _Node(page_id=table[i], active=1, last_use=now)
+            if i > 0:
+                parent = self.nodes.get(self._key(tokens, i))
+                if parent is not None:
+                    parent.children += 1
+            committed.append(key)
+        return committed
+
+    def decref(self, keys: Sequence[Key]) -> None:
+        for key in keys:
+            node = self.nodes.get(key)
+            if node is not None and node.active > 0:
+                node.active -= 1
+
+    # -- eviction -------------------------------------------------------------
+    def evict(self, n_pages: int) -> List[int]:
+        """Free up to ``n_pages`` resident pages, LRU leaf-first. Returns the
+        freed page ids (caller returns them to the PagePool)."""
+        freed: List[int] = []
+        while len(freed) < n_pages:
+            leaves = [(k, nd) for k, nd in self.nodes.items()
+                      if nd.active == 0 and nd.children == 0]
+            if not leaves:
+                break
+            key, node = min(leaves, key=lambda kn: kn[1].last_use)
+            del self.nodes[key]
+            parent_key = key[: len(key) - self.page]
+            parent = self.nodes.get(parent_key)
+            if parent is not None:
+                parent.children -= 1
+            freed.append(node.page_id)
+        return freed
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return len(self.nodes)
+
+    def stats(self) -> Dict[str, int]:
+        return {"pages": self.n_pages, "hits": self.hits,
+                "misses": self.misses,
+                "resident": sum(1 for n in self.nodes.values()
+                                if n.active == 0)}

@@ -1,0 +1,104 @@
+"""SLO-aware request scheduler: priority classes, deadlines, preemption.
+
+Policy (documented, deliberately simple — the engine is tick-synchronous):
+
+  * **priority classes**: lower number = more urgent. Class 0 is "interactive",
+    higher classes are batch/background. Strict priority across classes.
+  * **EDF within a class**: entries order by (deadline, arrival). Requests
+    without a deadline sort after all deadlined ones.
+  * **admission control**: ``pop_next(can_admit)`` hands out the best entry
+    whose KV footprint fits the page pool *right now* (the engine passes a
+    ``PagePool.can_admit``-backed predicate). A blocked head does not wedge
+    the queue: later/lower entries may bypass it, so small requests flow
+    while a huge one waits for pages.
+  * **expiry**: a queued request whose deadline already passed is dropped
+    (counted by the gateway) rather than admitted to miss its SLO.
+  * **preemption**: when the pool runs dry mid-decode, ``pick_victim``
+    names the youngest request of the lowest-priority class; the engine
+    releases its pages and ``requeue``s it (generated tokens re-enter as
+    prompt, so no work is lost beyond the re-prefill).
+"""
+from __future__ import annotations
+
+import bisect
+import itertools
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.serving.engine import Request
+
+
+class Scheduler:
+    def __init__(self, max_queue: int = 4096):
+        self.max_queue = max_queue
+        # kept sorted by _key (keys are immutable per request), so pop/peek
+        # are in-order scans rather than per-call sorts
+        self._entries: List[Request] = []
+        self._seq = itertools.count()
+
+    # -- queue ----------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _key(self, req: Request) -> Tuple:
+        deadline = req.deadline_s if req.deadline_s is not None else math.inf
+        return (req.priority, deadline, req._seq)
+
+    def push(self, req: Request) -> bool:
+        """Enqueue; False (rejected) when the queue is at capacity."""
+        if len(self._entries) >= self.max_queue:
+            return False
+        req._seq = next(self._seq)
+        bisect.insort(self._entries, req, key=self._key)
+        return True
+
+    def requeue(self, req: Request) -> None:
+        """Re-admit a preempted request ahead of its class (keeps its
+        original arrival order via the old _seq)."""
+        bisect.insort(self._entries, req, key=self._key)
+
+    def remove(self, uid: int) -> Optional[Request]:
+        for i, r in enumerate(self._entries):
+            if r.uid == uid:
+                return self._entries.pop(i)
+        return None
+
+    # -- scheduling decisions -------------------------------------------------
+    def drop_expired(self, now: float) -> List[Request]:
+        """Remove queued requests whose deadline already passed."""
+        dead = [r for r in self._entries
+                if r.deadline_s is not None and now > r.deadline_s]
+        if dead:
+            gone = {id(r) for r in dead}
+            self._entries = [r for r in self._entries if id(r) not in gone]
+        return dead
+
+    def peek(self, pred: Optional[Callable[[Request], bool]] = None
+             ) -> Optional[Request]:
+        """Best entry (optionally the best one satisfying ``pred``)."""
+        for req in self._entries:
+            if pred is None or pred(req):
+                return req
+        return None
+
+    def pop_next(self, can_admit: Callable[[Request], bool] = lambda r: True
+                 ) -> Optional[Request]:
+        """Best admissible entry in (priority, deadline, arrival) order."""
+        for i, req in enumerate(self._entries):
+            if can_admit(req):
+                del self._entries[i]
+                return req
+        return None
+
+    def pick_victim(self, active: Sequence[Tuple[int, Request]],
+                    below_priority: Optional[int] = None) -> Optional[int]:
+        """Slot to preempt: youngest request of the lowest-priority class.
+        ``below_priority`` restricts victims to classes strictly less urgent
+        than the given one (admission-time preemption); None allows any
+        (mid-decode pool pressure — somebody must yield)."""
+        candidates = [(slot, r) for slot, r in active
+                      if below_priority is None or r.priority > below_priority]
+        if not candidates:
+            return None
+        slot, _ = max(candidates, key=lambda sr: (sr[1].priority, sr[1].t_admit))
+        return slot

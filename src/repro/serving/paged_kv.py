@@ -39,17 +39,26 @@ class PagedConfig:
 
 
 class PagePool:
-    """Shared fp8 KV page pool + per-slot block tables."""
+    """Shared fp8 KV page pool + per-slot block tables.
+
+    One extra *scratch* page (id ``cfg.n_pages``) is allocated past the pool:
+    it is never handed out and soaks up the batched decode writes of inactive
+    slots, so the engine's jitted scatter needs no mask.
+    """
 
     def __init__(self, cfg: PagedConfig, max_slots: int):
         self.cfg = cfg
-        shape = (cfg.n_layers, cfg.n_pages, cfg.n_kv_heads, cfg.page,
+        shape = (cfg.n_layers, cfg.n_pages + 1, cfg.n_kv_heads, cfg.page,
                  cfg.head_dim)
         self.k = jnp.zeros(shape, cfg.dtype)
         self.v = jnp.zeros(shape, cfg.dtype)
         self.free: List[int] = list(range(cfg.n_pages))
         self.tables: List[List[int]] = [[] for _ in range(max_slots)]
         self.lengths = np.zeros((max_slots,), np.int32)
+
+    @property
+    def scratch_page(self) -> int:
+        return self.cfg.n_pages
 
     # -- allocator (host control plane) --------------------------------------
     @property
@@ -70,10 +79,23 @@ class PagePool:
                 raise MemoryError("page pool exhausted")
             self.tables[slot].append(self.free.pop())
 
-    def release(self, slot: int) -> None:
-        self.free.extend(self.tables[slot])
+    def release(self, slot: int, keep: int = 0) -> None:
+        """Free the slot's pages and clear its table. ``keep`` leading pages
+        are *not* returned to the free list — they belong to the prefix cache
+        (which refcounts them and frees them on eviction)."""
+        self.free.extend(self.tables[slot][keep:])
         self.tables[slot] = []
         self.lengths[slot] = 0
+
+    def free_pages(self, page_ids: List[int]) -> None:
+        """Return cache-owned pages (e.g. evicted prefix pages) to the pool."""
+        self.free.extend(page_ids)
+
+    def append_shared(self, slot: int, page_ids: List[int]) -> None:
+        """Attach already-allocated pages (prefix-cache hits) to a slot's
+        table. The pages stay owned by the cache; ``release(keep=...)`` must
+        skip them."""
+        self.tables[slot].extend(page_ids)
 
     def fragmentation_savings(self, max_len: int, active_lengths) -> float:
         """Bytes saved vs per-slot max_len reservation (the paged-lite win)."""
@@ -101,6 +123,32 @@ class PagePool:
             ).transpose(0, 1, 2, 3, 4)
 
         return gather(self.k), gather(self.v)
+
+    def batch_tables(self, slots: List[int], n_pages: int,
+                     batch: int) -> np.ndarray:
+        """(batch, n_pages) int32 block-table matrix; rows of inactive slots
+        (and padding beyond a slot's table) point at the scratch page."""
+        out = np.full((batch, n_pages), self.scratch_page, np.int32)
+        for s in slots:
+            t = self.tables[s][:n_pages]
+            out[s, :len(t)] = t
+        return out
+
+    def gather_batch(self, tables: np.ndarray) -> Tuple[jax.Array, jax.Array]:
+        """Materialize batched contiguous (L, B, H, P*page, D) k/v views from
+        a (B, P) block-table matrix (the pure-JAX decode integration path)."""
+        return (gather_pages(self.k, jnp.asarray(tables, jnp.int32)),
+                gather_pages(self.v, jnp.asarray(tables, jnp.int32)))
+
+    def write_tokens(self, page_ids: np.ndarray, offsets: np.ndarray,
+                     k_toks: jax.Array, v_toks: jax.Array) -> None:
+        """Batched single-token scatter: write (L, B, H, D) k/v entries at
+        (page_ids[b], offsets[b]). Inactive rows should target the scratch
+        page. Callers must have reserved the pages already."""
+        self.k = scatter_tokens(self.k, jnp.asarray(page_ids, jnp.int32),
+                                jnp.asarray(offsets, jnp.int32), k_toks)
+        self.v = scatter_tokens(self.v, jnp.asarray(page_ids, jnp.int32),
+                                jnp.asarray(offsets, jnp.int32), v_toks)
 
     def write_token(self, slot: int, pos: int, k_tok: jax.Array,
                     v_tok: jax.Array) -> None:
@@ -133,3 +181,23 @@ class PagePool:
                 (0, page_id, 0, off, 0))
             done += n
         self.lengths[slot] = max(self.lengths[slot], start + t)
+
+
+# -- jit-friendly functional forms (used from the engine's jitted decode) -----
+
+
+def gather_pages(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """pool (L, N, H, page, D) × tables (B, P) → contiguous (L, B, H, P*page, D)."""
+    l, _, h, page, d = pool.shape
+    b, p = tables.shape
+    pages = pool[:, tables]                        # (L, B, P, H, page, D)
+    return pages.transpose(0, 1, 3, 2, 4, 5).reshape(l, b, h, p * page, d)
+
+
+def scatter_tokens(pool: jax.Array, page_ids: jax.Array, offsets: jax.Array,
+                   toks: jax.Array) -> jax.Array:
+    """Write toks (L, B, H, D) at (page_ids[b], offsets[b]) in pool
+    (L, N, H, page, D). The separated advanced indices put the broadcast
+    batch dim first, so the value is fed as (B, L, H, D)."""
+    return pool.at[:, page_ids, :, offsets].set(
+        toks.astype(pool.dtype).transpose(1, 0, 2, 3))

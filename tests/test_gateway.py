@@ -1,0 +1,354 @@
+"""Serving gateway tests: SLO scheduler, admission/preemption under pool
+exhaustion, prefix-cache reuse (identical outputs vs cold path), paged-vs-
+dense engine equivalence, per-slot sampling, truncation regression."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.train import reduce_config
+from repro.models.transformer import Model
+from repro.serving import ServeEngine
+from repro.serving.engine import Request
+from repro.serving.gateway import Gateway, Metrics, PrefixCache, Scheduler
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _req(uid, prompt_len=4, **kw):
+    defaults = dict(prompt=list(range(prompt_len)), t_submit=time.time())
+    defaults.update(kw)
+    return Request(uid, **defaults)
+
+
+class TestScheduler:
+    def test_priority_classes_strict_order(self):
+        s = Scheduler()
+        s.push(_req(1, priority=2))
+        s.push(_req(2, priority=0))
+        s.push(_req(3, priority=1))
+        assert [s.pop_next().uid for _ in range(3)] == [2, 3, 1]
+
+    def test_edf_within_class(self):
+        s = Scheduler()
+        now = time.time()
+        s.push(_req(1, priority=1, deadline_s=now + 9.0))
+        s.push(_req(2, priority=1, deadline_s=now + 1.0))
+        s.push(_req(3, priority=1))                       # no deadline → last
+        assert [s.pop_next().uid for _ in range(3)] == [2, 1, 3]
+
+    def test_admission_bypasses_blocked_head(self):
+        """A huge head must not wedge the queue: smaller entries flow."""
+        s = Scheduler()
+        s.push(_req(1, prompt_len=100, priority=0))
+        s.push(_req(2, prompt_len=2, priority=1))
+        got = s.pop_next(lambda r: len(r.prompt) < 10)
+        assert got.uid == 2 and len(s) == 1
+
+    def test_queue_cap_rejects(self):
+        s = Scheduler(max_queue=1)
+        assert s.push(_req(1))
+        assert not s.push(_req(2))
+
+    def test_drop_expired(self):
+        s = Scheduler()
+        now = time.time()
+        s.push(_req(1, deadline_s=now - 1.0))
+        s.push(_req(2, deadline_s=now + 60.0))
+        dead = s.drop_expired(now)
+        assert [r.uid for r in dead] == [1] and len(s) == 1
+
+    def test_pick_victim_youngest_lowest_priority(self):
+        a = _req(1, priority=0); a.t_admit = 1.0
+        b = _req(2, priority=2); b.t_admit = 2.0
+        c = _req(3, priority=2); c.t_admit = 3.0
+        s = Scheduler()
+        assert s.pick_victim([(0, a), (1, b), (2, c)]) == 2
+        # admission-time preemption: only classes below the demander's
+        assert s.pick_victim([(0, a)], below_priority=0) is None
+
+
+class TestPrefixCacheUnit:
+    def test_match_commit_refcount_evict(self):
+        pc = PrefixCache(page=4)
+        toks = list(range(12))                    # 3 full pages
+        assert pc.lookup(toks) == 0
+        keys = pc.commit(toks, table=[7, 8, 9], start_pages=0)
+        assert len(keys) == 3
+        ids, mkeys = pc.match(toks + [99])
+        assert ids == [7, 8, 9]
+        # active refs pin pages: nothing evictable
+        assert pc.evict(10) == []
+        pc.decref(mkeys)
+        pc.decref(keys)
+        # now resident-only → LRU leaf-first cascade frees all three
+        freed = pc.evict(10)
+        assert sorted(freed) == [7, 8, 9] and pc.n_pages == 0
+
+    def test_match_leaves_one_token_for_decode(self):
+        pc = PrefixCache(page=4)
+        pc.commit(list(range(8)), table=[1, 2], start_pages=0)
+        # prompt exactly == cached span: must not match the last page
+        ids, _ = pc.match(list(range(8)))
+        assert ids == [1]
+
+
+class TestPagedVsDense:
+    def test_token_identical_greedy(self, model_params):
+        """Acceptance: ServeEngine(kv='paged') == kv='dense' greedy outputs."""
+        model, params = model_params
+        rng = np.random.default_rng(0)
+        prompts = [list(rng.integers(0, 100, size=int(rng.integers(2, 14))))
+                   for _ in range(7)]
+        outs = {}
+        for kv in ("dense", "paged"):
+            eng = ServeEngine(model, params, max_slots=3, max_len=64, kv=kv,
+                              page=8)
+            reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+            stats = eng.run_until_drained()
+            assert stats.completed == len(prompts)
+            outs[kv] = [r.output for r in reqs]
+        assert outs["dense"] == outs["paged"]
+
+    def test_paged_batched_prefill_matches_token(self, model_params):
+        model, params = model_params
+        prompt = list(range(5, 30))
+        outs = []
+        for mode in ("token", "batched"):
+            eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                              kv="paged", page=8, prefill=mode)
+            r = eng.submit(prompt, max_new_tokens=5)
+            eng.run_until_drained()
+            outs.append(r.output)
+        assert outs[0] == outs[1]
+
+
+class TestPrefixCacheReuse:
+    def test_warm_hit_identical_outputs_and_skipped_prefill(self, model_params):
+        model, params = model_params
+        shared = list(range(10, 26))              # 2 full pages of 8
+        tails = [[3, 4, 5], [6, 7], [8, 9, 1]]
+
+        cold = ServeEngine(model, params, max_slots=2, max_len=64,
+                           kv="paged", page=8)
+        cold_reqs = [cold.submit(shared + t, max_new_tokens=5) for t in tails]
+        cold.run_until_drained()
+
+        warm = ServeEngine(model, params, max_slots=2, max_len=64,
+                           kv="paged", page=8, prefix_cache=True)
+        r0 = warm.submit(shared + tails[0], max_new_tokens=5)
+        warm.run_until_drained()                  # commits the shared pages
+        r1 = warm.submit(shared + tails[1], max_new_tokens=5)
+        r2 = warm.submit(shared + tails[2], max_new_tokens=5)
+        warm.run_until_drained()
+
+        assert [r.output for r in cold_reqs] == [r.output for r in (r0, r1, r2)]
+        assert r0.prefix_hit_tokens == 0
+        assert r1.prefix_hit_tokens == 16 and r2.prefix_hit_tokens == 16
+        # the shared span costs zero prefill ticks on the warm path
+        assert r1.prefill_ticks == cold_reqs[1].prefill_ticks - 16
+        assert warm.stats.prefix_hit_tokens == 32
+
+    def test_shared_pages_not_freed_while_resident(self, model_params):
+        model, params = model_params
+        warm = ServeEngine(model, params, max_slots=1, max_len=64,
+                           kv="paged", page=4, prefix_cache=True)
+        r = warm.submit(list(range(9)), max_new_tokens=3)
+        warm.run_until_drained()
+        # 2 full pages committed → resident in the trie, off the free list
+        assert warm.prefix.n_pages == 2
+        assert warm.pool.pages_free == warm.pool.cfg.n_pages - 2
+
+
+class TestAdmissionPreemption:
+    def test_preemption_under_pool_exhaustion(self, model_params):
+        """Two long requests can't fit a 6-page pool together: the
+        low-priority one is preempted, re-queued with its generated tokens,
+        and both still complete with full outputs."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv="paged", page=8, n_pages=6)
+        hi = eng.submit(list(range(1, 20)), max_new_tokens=10, priority=0)
+        lo = eng.submit(list(range(30, 49)), max_new_tokens=10, priority=2)
+        stats = eng.run_until_drained()
+        assert stats.completed == 2
+        assert stats.preemptions >= 1 and lo.n_preempts >= 1
+        assert hi.n_preempts == 0
+        assert len(hi.output) == 10 and len(lo.output) == 10
+
+    def test_preempted_output_matches_unpreempted(self, model_params):
+        """Preemption must not corrupt the resumed request's tokens."""
+        model, params = model_params
+        base = ServeEngine(model, params, max_slots=1, max_len=64,
+                           kv="paged", page=8)
+        ref = base.submit(list(range(30, 49)), max_new_tokens=10)
+        base.run_until_drained()
+
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv="paged", page=8, n_pages=6)
+        eng.submit(list(range(1, 20)), max_new_tokens=10, priority=0)
+        lo = eng.submit(list(range(30, 49)), max_new_tokens=10, priority=2)
+        eng.run_until_drained()
+        assert lo.n_preempts >= 1
+        assert lo.output == ref.output
+
+    def test_oversized_request_never_thrashes(self, model_params):
+        """A request bigger than the whole pool stays queued (bypassed by
+        smaller ones) instead of triggering preemption churn."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv="paged", page=8, n_pages=2)   # 16-token pool
+        giant = eng.submit(list(range(30)), max_new_tokens=8, priority=0)
+        small = eng.submit([1, 2, 3], max_new_tokens=4, priority=1)
+        eng.run_until_drained(max_ticks=200)   # must bail, not spin forever
+        assert small.state == "done"
+        assert giant.state == "queued"
+        assert eng.stats.preemptions == 0
+
+    def test_lifetime_footprint_gates_admission(self, model_params):
+        """Regression: a short-prompt request whose *final* context exceeds
+        the pool used to be admitted (admission only counted prompt + 1)
+        and then crashed the whole run with MemoryError mid-generation."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv="paged", page=8, n_pages=2)   # 16-token pool
+        doomed = eng.submit([1, 2, 3], max_new_tokens=20)  # grows to 23 toks
+        small = eng.submit([4, 5], max_new_tokens=4)
+        eng.run_until_drained(max_ticks=200)               # must not raise
+        assert small.state == "done"
+        assert doomed.state == "queued"
+
+    def test_no_preemption_when_it_cannot_help(self, model_params):
+        """Regression: preempting a victim whose pages still don't make the
+        head admissible livelocked (victim re-admitted every tick, head
+        starved, preemption counter unbounded)."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          kv="paged", page=8, n_pages=6)
+        a = eng.submit(list(range(28)), max_new_tokens=12, priority=0)  # 4 pages now, 5 lifetime
+        v = eng.submit([1, 2, 3, 4], max_new_tokens=3, priority=2)     # 1 page
+        eng.tick()
+        # head needs 3 pages; free=1, victim v owns 1 → preemption can't help
+        h = eng.submit(list(range(40, 57)), max_new_tokens=6, priority=1)
+        for _ in range(4):
+            eng.tick()
+        assert eng.stats.preemptions == 0
+        assert v.state in ("running", "done")   # not thrashed
+        stats = eng.run_until_drained(max_ticks=500)
+        assert stats.completed == 3             # h admitted once pages free
+        assert len(h.output) == 6
+
+    def test_pool_admission_control_queues_when_full(self, model_params):
+        """A request whose KV can't fit free pages waits in the queue even
+        while a slot is free."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv="paged", page=8, n_pages=3)
+        big = eng.submit(list(range(1, 18)), max_new_tokens=4)   # 3 pages
+        small = eng.submit([1, 2, 3], max_new_tokens=4)          # 1 page
+        eng.tick()   # big admitted (3 pages), small must wait
+        assert big.state == "running"
+        assert small.state == "queued"
+        eng.run_until_drained()
+        assert big.state == "done" and small.state == "done"
+
+
+class TestGatewayFrontend:
+    def test_stream_yields_all_tokens(self, model_params):
+        model, params = model_params
+        gw = Gateway(ServeEngine(model, params, max_slots=2, max_len=64))
+        r = gw.submit([3, 4, 5], max_new_tokens=6)
+        assert list(gw.stream(r)) == r.output
+        assert len(r.output) == 6
+
+    def test_stream_callback_and_metrics(self, model_params):
+        model, params = model_params
+        gw = Gateway(ServeEngine(model, params, max_slots=2, max_len=64,
+                                 kv="paged", page=8))
+        seen = []
+        r = gw.submit([3, 4, 5], max_new_tokens=5,
+                      stream_cb=lambda req, tok: seen.append(tok))
+        gw.run_until_drained()
+        assert seen == r.output
+        m = gw.metrics_dict()
+        assert m["counters"]["requests_completed"] == 1
+        assert m["counters"]["tokens_out"] == 5
+        assert m["histograms"]["ttft_ms"]["count"] == 1
+        assert m["histograms"]["tbt_ms"]["count"] == 4
+        assert 0.0 <= m["gauges"]["pool_occupancy"] <= 1.0
+
+    def test_cancel_queued_and_running(self, model_params):
+        model, params = model_params
+        gw = Gateway(ServeEngine(model, params, max_slots=1, max_len=64))
+        a = gw.submit([1, 2, 3], max_new_tokens=8)
+        b = gw.submit([4, 5, 6], max_new_tokens=8)
+        gw.step()                         # a running, b queued
+        assert gw.cancel(b.uid) and b.state == "cancelled"
+        assert gw.cancel(a.uid) and a.state == "cancelled"
+        assert not gw.cancel(999)
+        gw.run_until_drained()
+        assert gw.metrics.counter("requests_cancelled") == 2
+
+    def test_deadline_expiry(self, model_params):
+        model, params = model_params
+        gw = Gateway(ServeEngine(model, params, max_slots=1, max_len=64))
+        gw.submit([1, 2], max_new_tokens=4)                    # occupies slot
+        late = gw.submit([3, 4], max_new_tokens=4, deadline_ms=-1.0)
+        gw.run_until_drained()
+        assert late.state == "expired"
+        assert gw.metrics.counter("requests_expired") == 1
+
+
+class TestSamplingAndTruncation:
+    def test_top_k_is_per_slot(self, model_params):
+        """Regression: one slot's top_k=1 must not collapse a co-scheduled
+        full-softmax slot to greedy (the old code applied
+        max(top_k over batch) to everyone)."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64, seed=7)
+        logits = jnp.asarray(
+            np.tile(np.linspace(0.0, 3.0, 32, dtype=np.float32), (2, 1)))
+        temps = jnp.asarray([5.0, 5.0], jnp.float32)
+        topks = jnp.asarray([0, 1], jnp.int32)
+        key = jax.random.PRNGKey(0)
+        toks0, toks1 = set(), set()
+        for i in range(50):
+            key, sub = jax.random.split(key)
+            t = np.asarray(eng._sample(logits, sub, temps, topks))
+            toks0.add(int(t[0]))
+            toks1.add(int(t[1]))
+        assert toks1 == {31}, "top_k=1 slot must always emit the argmax"
+        assert len(toks0) > 1, "top_k=0 slot must sample the full softmax"
+
+    def test_truncation_keeps_prompt_tail(self, model_params):
+        """Regression: max_new_tokens >= max_len used to keep the prompt
+        *head* (or everything); it must clamp the budget and keep the tail."""
+        model, params = model_params
+        prompt = list(range(30))
+        eng = ServeEngine(model, params, max_slots=1, max_len=16)
+        r = eng.submit(prompt, max_new_tokens=20)
+        eng.run_until_drained()
+        assert r.max_new_tokens == 15           # clamped to max_len - 1
+        assert len(r.output) == 15
+        # equivalent direct submission of the kept tail
+        eng2 = ServeEngine(model, params, max_slots=1, max_len=16)
+        r2 = eng2.submit([prompt[-1]], max_new_tokens=15)
+        eng2.run_until_drained()
+        assert r.output == r2.output
+
+    def test_truncation_exact_fit_unchanged(self, model_params):
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=1, max_len=32)
+        r = eng.submit(list(range(8)), max_new_tokens=24)   # 8 + 24 == 32
+        eng.run_until_drained()
+        assert len(r.output) == 24 and r.max_new_tokens == 24

@@ -4,8 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
 
 from repro.optim import (AdamW, clip_by_global_norm, combine, constant,
                          global_norm, linear_decay, partition, trainable_mask,

@@ -70,6 +70,133 @@ class TestRoundTrip:
             np.asarray(k[:, 0, :, :20], np.float32),
             np.asarray(span.astype(cfg.dtype), np.float32))
 
+    def test_span_write_unaligned_start_crosses_boundary(self):
+        """A span starting mid-page and ending mid-page two pages later must
+        land token-exact (the per-page loop splits at both boundaries)."""
+        pool, cfg = make_pool()
+        rng = np.random.default_rng(3)
+        head = jnp.asarray(rng.normal(size=(2, 2, 5, 16)), jnp.float32)
+        span = jnp.asarray(rng.normal(size=(2, 2, 14, 16)), jnp.float32)
+        pool.write_span(0, 0, head, head)          # positions 0..4
+        pool.write_span(0, 5, span, span * 3)      # positions 5..18: 3 pages
+        assert len(pool.tables[0]) == 3 and int(pool.lengths[0]) == 19
+        k, v = pool.gather_slot(0)
+        np.testing.assert_allclose(
+            np.asarray(k[:, 0, :, 5:19], np.float32),
+            np.asarray(span.astype(cfg.dtype), np.float32))
+        np.testing.assert_allclose(
+            np.asarray(v[:, 0, :, 5:19], np.float32),
+            np.asarray((span * 3).astype(cfg.dtype), np.float32))
+        # the head must survive the second write untouched
+        np.testing.assert_allclose(
+            np.asarray(k[:, 0, :, :5], np.float32),
+            np.asarray(head.astype(cfg.dtype), np.float32))
+
+
+class TestBatchedOps:
+    def test_batch_tables_pads_with_scratch(self):
+        pool, cfg = make_pool()
+        pool.reserve(0, 20)          # 3 pages
+        pool.reserve(2, 5)           # 1 page
+        t = pool.batch_tables([0, 2], n_pages=4, batch=4)
+        assert t.shape == (4, 4)
+        assert list(t[0, :3]) == pool.tables[0] and t[0, 3] == pool.scratch_page
+        assert t[2, 0] == pool.tables[2][0]
+        assert (t[1] == pool.scratch_page).all()  # inactive row
+
+    def test_write_tokens_gather_batch_roundtrip(self):
+        pool, cfg = make_pool()
+        rng = np.random.default_rng(4)
+        pool.reserve(0, 10)
+        pool.reserve(1, 3)
+        for pos0, pos1 in [(0, 0), (1, 1), (9, 2)]:
+            toks = jnp.asarray(rng.normal(size=(2, 4, 2, 16)), jnp.float32)
+            page_ids = np.asarray(
+                [pool.tables[0][pos0 // cfg.page], pool.tables[1][pos1 // cfg.page],
+                 pool.scratch_page, pool.scratch_page], np.int32)
+            offs = np.asarray([pos0 % cfg.page, pos1 % cfg.page, 0, 0], np.int32)
+            pool.write_tokens(page_ids, offs, toks, toks * 2)
+        tables = pool.batch_tables([0, 1], n_pages=2, batch=4)
+        k, v = pool.gather_batch(tables)
+        assert k.shape == (2, 4, 2, 2 * cfg.page, 16)
+        # last written token of slot 0 (pos 9) and slot 1 (pos 2)
+        np.testing.assert_allclose(np.asarray(k[:, 0, :, 9], np.float32),
+                                   np.asarray(toks[:, 0].astype(cfg.dtype),
+                                              np.float32))
+        np.testing.assert_allclose(np.asarray(v[:, 1, :, 2], np.float32),
+                                   np.asarray((toks[:, 1] * 2).astype(cfg.dtype),
+                                              np.float32))
+
+    def test_scratch_page_never_allocated(self):
+        pool, cfg = make_pool()
+        pool.reserve(0, cfg.n_pages * cfg.page)   # drain the whole pool
+        assert pool.scratch_page not in pool.tables[0]
+
+    def test_release_keep_skips_cache_owned_pages(self):
+        pool, cfg = make_pool()
+        pool.reserve(0, 24)                       # 3 pages
+        cached = pool.tables[0][:2]
+        pool.release(0, keep=2)
+        assert pool.pages_free == cfg.n_pages - 2
+        assert not (set(cached) & set(pool.free))
+        pool.free_pages(cached)                   # cache eviction path
+        assert pool.pages_free == cfg.n_pages
+
+
+class TestPagedFlashDecode:
+    """Block tables threaded into the Pallas kernel's page-shaped context
+    loop (scalar prefetch) == contiguous-gather oracle."""
+
+    def _case(self, seed, dtype):
+        from repro.kernels.flash_decode.ops import paged_decode_attention
+        from repro.kernels.flash_decode.paged import paged_flash_decode_ref
+        rng = np.random.default_rng(seed)
+        b, hq, hkv, d, page, n_pages, n_p = 3, 8, 2, 32, 16, 10, 4
+        q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(n_pages + 1, hkv, page, d)),
+                         jnp.float32).astype(dtype)
+        vp = jnp.asarray(rng.normal(size=(n_pages + 1, hkv, page, d)),
+                         jnp.float32).astype(dtype)
+        tables = jnp.asarray(rng.integers(0, n_pages, size=(b, n_p)), jnp.int32)
+        lengths = jnp.asarray([page * n_p, 17, 1], jnp.int32)
+        out = paged_decode_attention(q, kp, vp, tables, lengths, 1.0,
+                                     use_kernel=True, interpret=True)
+        ref = paged_flash_decode_ref(
+            q.reshape(b, hkv, hq // hkv, d), kp.astype(jnp.float32),
+            vp.astype(jnp.float32), tables, lengths, 1.0
+        ).reshape(b, hq, d)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_kernel_matches_gather_oracle_f32(self):
+        self._case(0, jnp.float32)
+
+    def test_kernel_matches_gather_oracle_fp8(self):
+        self._case(1, jnp.float8_e4m3fn)
+
+    def test_kernel_matches_engine_view_path(self):
+        """The kernel over a live PagePool == attention over gather_batch's
+        contiguous view (the engine's pure-JAX decode path)."""
+        from repro.core import attention as CA
+        from repro.kernels.flash_decode.ops import paged_decode_attention
+        pool, cfg = make_pool(dtype=jnp.float32)
+        rng = np.random.default_rng(5)
+        n_tok = 19
+        ks = jnp.asarray(rng.normal(size=(2, 2, n_tok, 16)), jnp.float32)
+        vs = jnp.asarray(rng.normal(size=(2, 2, n_tok, 16)), jnp.float32)
+        pool.write_span(0, 0, ks, vs)
+        tables = pool.batch_tables([0], n_pages=3, batch=1)
+        kb, vb = pool.gather_batch(tables)          # (L, 1, H, 24, D)
+        q = jnp.asarray(rng.normal(size=(1, 2, 16)), jnp.float32)
+        out_kernel = paged_decode_attention(
+            q, pool.k[0], pool.v[0], jnp.asarray(tables),
+            jnp.asarray([n_tok], jnp.int32), 1.0, use_kernel=True,
+            interpret=True)
+        mask = (jnp.arange(kb.shape[3]) < n_tok)[None]
+        out_view = CA.dense_decode_attention(q, kb[0], vb[0], mask=mask)
+        np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_view),
+                                   rtol=1e-5, atol=1e-5)
+
     def test_attention_over_paged_equals_contiguous(self):
         """Decode attention on a gathered paged cache == on the flat cache."""
         pool, cfg = make_pool()

@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
 
 from repro.ckpt import checkpoint as C
 from repro.data import DataConfig, TokenPipeline, write_token_file

@@ -1,11 +1,11 @@
 """Unit + property tests for the ternary quantisation core (paper C1)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import fp8, ternary
 
