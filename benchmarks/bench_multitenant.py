@@ -1,0 +1,153 @@
+"""Multi-tenant adapter serving benchmark: Poisson arrivals over N tenants.
+
+Three workloads over the same reduced BitNet-2B base and arrival process:
+
+  * ``baseline``  — no adapter subsystem (the PR-1 single-personality path);
+  * ``single``    — every request names the same adapter (always warm after
+    the first load: the best case for the SRAM cache);
+  * ``multi``     — requests round-robin N distinct tenants through a budget
+    that holds only half of them, so the cache churns (loads + LRU
+    evictions) while the batched SGMV decode mixes tenants per tick.
+
+Reports throughput, TTFT p50/p99 and the adapter-cache hit rate; row names
+are stable so the bench trajectory tracks multi-tenant perf across PRs.
+Emits both the standard Report JSON and ``artifacts/BENCH_multitenant.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_multitenant [--quick]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, Report
+
+
+def _poisson_arrivals(rng, n, rate_hz):
+    t, out = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate_hz))
+        out.append(t)
+    return out
+
+
+def _drive(gw, reqs_spec, arrivals):
+    """Submit each spec at its arrival offset while ticking the engine."""
+    t0 = time.time()
+    pending = list(zip(arrivals, reqs_spec))
+    reqs = []
+    while pending or len(gw.engine.scheduler) \
+            or any(r is not None for r in gw.engine.slot_req):
+        now = time.time() - t0
+        while pending and pending[0][0] <= now:
+            _, spec = pending.pop(0)
+            reqs.append(gw.submit(**spec))
+        if pending and not any(r is not None for r in gw.engine.slot_req) \
+                and not len(gw.engine.scheduler):
+            time.sleep(min(0.002, pending[0][0] - now))
+        gw.step()
+    return reqs, time.time() - t0
+
+
+def run(quick: bool = False) -> Report:
+    import jax
+    from repro.configs.base import get_config
+    from repro.launch.train import reduce_config
+    from repro.models.transformer import Model
+    from repro.serving import ServeEngine
+    from repro.serving.adapters import (AdapterRegistry, AdapterServing,
+                                        AdapterSpec, synthetic_adapter_stacks)
+    from repro.serving.gateway import Gateway
+
+    r = Report("multitenant")
+    rng = np.random.default_rng(0)
+    n_req = 8 if quick else 16
+    n_tenants = 4
+    max_new = 6 if quick else 12
+
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    params = model.init(jax.random.PRNGKey(0))
+
+    spec = AdapterSpec(rank=8, alpha=16.0, targets=("q", "v"))
+    registry = AdapterRegistry(spec)
+    for i in range(n_tenants):
+        registry.register(f"tenant-{i}",
+                          synthetic_adapter_stacks(rng, cfg, spec,
+                                                   cfg.num_layers, scale=0.05))
+    per_adapter = registry.get("tenant-0").nbytes
+
+    prompts = [list(rng.integers(0, 1000, size=int(rng.integers(6, 14))))
+               for _ in range(n_req)]
+    arrivals = _poisson_arrivals(rng, n_req, rate_hz=50.0)
+
+    def tenant_of(i, workload):
+        if workload == "baseline":
+            return None
+        if workload == "single":
+            return "tenant-0"
+        return f"tenant-{i % n_tenants}"
+
+    results = {}
+    for workload in ("baseline", "single", "multi"):
+        adapters = None
+        if workload != "baseline":
+            # budget holds only half the tenants → the multi workload churns
+            adapters = AdapterServing(model, registry,
+                                      budget_bytes=per_adapter * (n_tenants // 2),
+                                      max_resident=n_tenants // 2)
+        eng = ServeEngine(model, params, max_slots=4, max_len=128,
+                          kv="paged", page=16, adapters=adapters)
+        gw = Gateway(eng)
+        specs = [dict(prompt=prompts[i], max_new_tokens=max_new,
+                      priority=i % 2, adapter_id=tenant_of(i, workload))
+                 for i in range(n_req)]
+        reqs, wall = _drive(gw, specs, arrivals)
+        done = [q for q in reqs if q.state == "done"]
+        ttfts = sorted(q.ttft_s * 1e3 for q in done)
+        row = {
+            "completed": len(done),
+            "wall_s": round(wall, 3),
+            "tps": round(eng.stats.tokens_out / wall, 1),
+            "ttft_p50_ms": round(float(np.median(ttfts)), 1),
+            "ttft_p99_ms": round(float(np.quantile(ttfts, 0.99)), 1),
+        }
+        if adapters is not None:
+            st = adapters.stats()
+            row.update({
+                "adapter_hit_rate": st["hit_rate"],
+                "adapter_loads": st["loads"],
+                "adapter_evictions": st["evictions"],
+                "adapter_bytes_used": st["bytes_used"],
+                "adapter_budget_bytes": st["budget_bytes"],
+            })
+        results[workload] = row
+        r.row(f"{workload}/completed", row["completed"], f"of {n_req}")
+        r.row(f"{workload}/tps", row["tps"], "decode tokens/s (host CPU)")
+        r.row(f"{workload}/ttft_p50_ms", row["ttft_p50_ms"], "")
+        r.row(f"{workload}/ttft_p99_ms", row["ttft_p99_ms"], "")
+        if adapters is not None:
+            r.row(f"{workload}/adapter_hit_rate", row["adapter_hit_rate"],
+                  f"{row['adapter_loads']} loads, "
+                  f"{row['adapter_evictions']} evictions")
+
+    mt = results["multi"]
+    base = results["baseline"]
+    r.row("multi/tps_vs_baseline",
+          round(mt["tps"] / max(base["tps"], 1e-9), 3),
+          "multi-tenant decode throughput / single-personality baseline")
+    r.row("multi/adapter_overhead_bytes",
+          n_tenants // 2 * per_adapter,
+          f"{n_tenants} tenants, {per_adapter}B each, half resident")
+    (ARTIFACTS / "BENCH_multitenant.json").write_text(
+        json.dumps(results, indent=1))
+    print("[bench_multitenant]", json.dumps(results))
+    r.save()
+    return r
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,10 @@
+"""Batched multi-adapter ternary LoRA (SGMV-style segmented matmul).
+
+One decode tick serves slots running *different* fine-tunes: resident frozen
+adapters are stacked `[num_adapters, ...]` and each batch row gathers its own
+packed-ternary A/B by index — no per-adapter dispatch, no recompiles.
+"""
+from repro.kernels.batched_lora.ops import batched_lora
+from repro.kernels.batched_lora.ref import batched_lora_ref
+
+__all__ = ["batched_lora", "batched_lora_ref"]

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: batched multi-adapter ternary-LoRA matmul.
+
+The SGMV analogue for TOM's SRAM adapters: the decode batch mixes slots that
+run *different* frozen fine-tunes, so each grid step resolves its row's
+adapter through **scalar prefetch** (the same indirection idiom as
+`flash_decode/paged.py`'s block tables) — the A/B BlockSpec index maps pick
+which adapter's packed 2-bit tile to DMA HBM→VMEM before the body runs. The
+tile is decoded in-registers ("the combinational logic") and hits the MXU at
+the activation dtype, so adapter weight bytes moved stay at the 2-bit ROM
+density even with many tenants resident.
+
+Grid: (B,) — one step per decode slot; both LoRA matmuls are rank-narrow
+(r ≤ 64), so one step fuses decode(A) → x·A → decode(B) → z·B → ·s entirely
+in VMEM. Per-adapter combined scales ride in SMEM via the second scalar-
+prefetch operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ternary_matmul.ternary_matmul import _decode_tile
+
+# jax 0.4.x names this TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def _kernel(idx_ref, s_ref, x_ref, a_ref, b_ref, o_ref, *, k: int, r: int, n: int):
+    bi = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                       # (1, K)
+    a = _decode_tile(a_ref[0], "interleaved", k, r, jnp.float32)   # (K, r)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32)    # (1, r)
+    b = _decode_tile(b_ref[0], "interleaved", r, n, jnp.float32)   # (r, N)
+    y = jnp.dot(z, b, preferred_element_type=jnp.float32)    # (1, N)
+    o_ref[...] = (y * s_ref[idx_ref[bi]]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def batched_lora_matmul(
+    x: jax.Array,          # (B, K) one activation row per decode slot
+    a_codes: jax.Array,    # (R, K//4, r) uint8 packed ternary A stacks
+    b_codes: jax.Array,    # (R, r//4, N) uint8 packed ternary B stacks
+    scales: jax.Array,     # (R,) f32 combined per-adapter scale
+    idx: jax.Array,        # (B,) int32 adapter slot per row (0 = null adapter)
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, k = x.shape
+    n_adapters, kq, r = a_codes.shape
+    rq, n = b_codes.shape[-2:]
+    assert kq * 4 == k, (kq, k)
+    assert rq * 4 == r, (rq, r)
+
+    idx = jnp.asarray(idx, jnp.int32).reshape(bsz)
+    scales = jnp.asarray(scales, jnp.float32).reshape(n_adapters)
+
+    kernel = functools.partial(_kernel, k=k, r=r, n=n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # idx, scales
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda b, i, s: (b, 0)),
+            # the multi-tenant indirection: this row's adapter tile, not a
+            # contiguous adapter axis
+            pl.BlockSpec((1, kq, r), lambda b, i, s: (i[b], 0, 0)),
+            pl.BlockSpec((1, rq, n), lambda b, i, s: (i[b], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda b, i, s: (b, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, n), out_dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(idx, scales, x, a_codes, b_codes)

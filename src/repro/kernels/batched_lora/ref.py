@@ -1,0 +1,38 @@
+"""Reference batched ternary-LoRA matmul (the SGMV oracle).
+
+Adapters are frozen to 2-bit ternary (`qlora.freeze_adapter`) and stacked
+along a leading *adapter* axis; every batch row selects its adapter by index:
+
+    z[b] = x[b] @ unpack(a_codes[idx[b]])            # (…, K) → (…, r)
+    y[b] = z[b] @ unpack(b_codes[idx[b]]) * s[idx[b]]  # (…, r) → (…, N)
+
+``s`` is the per-adapter combined scale ``scale_a · scale_b · α/r``; index 0
+is reserved for the null adapter (all-zero codes, zero scale), so
+``adapter_id=None`` slots contribute exactly 0 and stay token-identical to a
+no-adapter engine. Pure XLA (gather + two einsums) — this IS the serving
+fallback path on CPU; the Pallas kernel (batched_lora.py) fuses the decode
+for TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+
+def batched_lora_ref(
+    x: jax.Array,          # (B, ..., K) activations, adapter-homogeneous per row
+    a_codes: jax.Array,    # (R, K//4, r) uint8 packed ternary A stacks
+    b_codes: jax.Array,    # (R, r//4, N) uint8 packed ternary B stacks
+    scales: jax.Array,     # (R,) f32 combined per-adapter scale
+    idx: jax.Array,        # (B,) int32 adapter slot per batch row
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Per-row gathered two-matmul LoRA path → (B, ..., N)."""
+    a = ternary.unpack2(a_codes[idx]).astype(jnp.float32)    # (B, K, r)
+    b = ternary.unpack2(b_codes[idx]).astype(jnp.float32)    # (B, r, N)
+    z = jnp.einsum("b...k,bkr->b...r", x.astype(jnp.float32), a)
+    y = jnp.einsum("b...r,brn->b...n", z, b)
+    s = scales[idx].reshape(idx.shape[0], *([1] * (x.ndim - 1)))
+    return (y * s).astype(out_dtype)

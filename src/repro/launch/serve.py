@@ -7,6 +7,12 @@ CPU-scale usage (end-to-end example path):
         --arch bitnet-2b --preset tiny --requests 16 --slots 4 --max-new 16 \
         --kv paged --page 32 --prefix-cache
 
+Multi-tenant adapters (one ternary base, many QLoRA fine-tunes):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch bitnet-2b --preset tiny --requests 16 --slots 4 \
+        --adapters 4 --adapter-rank 8 --adapter-budget-kb 64 --adapter-rate 0.8
+
 Prints one JSON blob: request-level latency stats plus the gateway metrics
 registry (TTFT/TBT histograms, queue depth, pool occupancy, preemptions).
 
@@ -38,7 +44,9 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                  prefill: str, ckpt_dir: Optional[str] = None,
                  seed: int = 0, kv: str = "dense", page: int = 64,
                  n_pages: Optional[int] = None,
-                 prefix_cache: bool = False) -> ServeEngine:
+                 prefix_cache: bool = False,
+                 n_adapters: int = 0, adapter_rank: int = 8,
+                 adapter_budget_kb: Optional[float] = None) -> ServeEngine:
     cfg = reduce_config(get_config(arch), preset)
     model = Model(cfg, mode="serve")
     params = model.init(jax.random.PRNGKey(seed))
@@ -48,9 +56,30 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
             state, _ = ckpt_mod.restore(ckpt_dir, step, {"params": params})
             params = state["params"]
             print(f"[serve] restored packed weights from step {step}")
+    adapters = None
+    if n_adapters > 0:
+        from repro.serving.adapters import (AdapterRegistry, AdapterServing,
+                                            AdapterSpec,
+                                            synthetic_adapter_stacks)
+        spec = AdapterSpec(rank=adapter_rank, alpha=2.0 * adapter_rank,
+                           targets=("q", "v"))
+        registry = AdapterRegistry(spec)
+        rng = np.random.default_rng(seed + 1)
+        for i in range(n_adapters):
+            registry.register(
+                f"tenant-{i}",
+                synthetic_adapter_stacks(rng, cfg, spec, cfg.num_layers))
+        per_adapter = registry.get("tenant-0").nbytes
+        budget = (int(adapter_budget_kb * 1024) if adapter_budget_kb
+                  else per_adapter * max(2, n_adapters // 2))
+        adapters = AdapterServing(model, registry, budget_bytes=budget,
+                                  max_resident=max(2, min(n_adapters, slots * 2)))
+        print(f"[serve] {n_adapters} tenants registered "
+              f"({per_adapter}B each, SRAM budget {budget}B)")
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
                        prefill=prefill, seed=seed, kv=kv, page=page,
-                       n_pages=n_pages, prefix_cache=prefix_cache)
+                       n_pages=n_pages, prefix_cache=prefix_cache,
+                       adapters=adapters)
 
 
 def main(argv=None) -> int:
@@ -76,6 +105,14 @@ def main(argv=None) -> int:
                          "to every request (exercises the prefix cache)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request SLO deadline (EDF scheduling)")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="register this many synthetic QLoRA tenants and "
+                         "serve them multi-tenant (0 = single personality)")
+    ap.add_argument("--adapter-rank", type=int, default=8)
+    ap.add_argument("--adapter-budget-kb", type=float, default=None,
+                    help="adapter SRAM budget (default: half the tenants fit)")
+    ap.add_argument("--adapter-rate", type=float, default=1.0,
+                    help="fraction of requests that carry an adapter_id")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -84,7 +121,10 @@ def main(argv=None) -> int:
                        max_len=args.max_len, prefill=args.prefill,
                        ckpt_dir=args.ckpt_dir, seed=args.seed, kv=args.kv,
                        page=args.page, n_pages=args.n_pages,
-                       prefix_cache=args.prefix_cache)
+                       prefix_cache=args.prefix_cache,
+                       n_adapters=args.adapters,
+                       adapter_rank=args.adapter_rank,
+                       adapter_budget_kb=args.adapter_budget_kb)
     gw = Gateway(eng)
     rng = np.random.default_rng(args.seed)
     vocab = eng.cfg.vocab_size
@@ -93,10 +133,14 @@ def main(argv=None) -> int:
     for i in range(args.requests):
         plen = int(rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1))
         prompt = system + list(rng.integers(0, min(vocab, 1000), size=plen))
+        adapter_id = None
+        if args.adapters > 0 and rng.random() < args.adapter_rate:
+            adapter_id = f"tenant-{i % args.adapters}"
         reqs.append(gw.submit(prompt, max_new_tokens=args.max_new,
                               temperature=args.temperature,
                               priority=i % 2,            # mixed SLO classes
-                              deadline_ms=args.deadline_ms))
+                              deadline_ms=args.deadline_ms,
+                              adapter_id=adapter_id))
 
     t0 = time.time()
     stats = gw.run_until_drained()
@@ -116,6 +160,8 @@ def main(argv=None) -> int:
         "latency_p50_ms": round(float(np.median(lats)) * 1e3, 1),
         "metrics": gw.metrics_dict(),
     }
+    if eng.adapters is not None:
+        out["adapters"] = eng.adapters.stats()
     print("[serve]", json.dumps(out))
     return 0
 

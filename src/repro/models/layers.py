@@ -129,9 +129,12 @@ def apply_linear(p: Params, x: jax.Array, mode: str, *,
                  lora: Optional[qlora.LoRASpec] = None,
                  train: bool = False,
                  fuse: bool = False,
-                 kv_dtype: str = "f32") -> jax.Array:  # noqa: ARG001
+                 kv_dtype: str = "f32",
+                 adapter_idx: Optional[jax.Array] = None) -> jax.Array:  # noqa: ARG001
     # ``fuse``/``kv_dtype`` are consumed by fused/attention call sites;
     # accepted (and ignored) here so the flags thread through **kw untouched.
+    # ``adapter_idx`` (B,) selects each batch row's resident multi-tenant
+    # adapter; it only acts on projections carrying a ``lora_mt`` stack.
     """The mode dispatch. In serve/qlora mode the base is ternary-packed ROM:
     decode-then-matmul (XLA fuses; the Pallas kernel path is selected by the
     serving engine for the hot GEMVs where shapes allow)."""
@@ -155,12 +158,23 @@ def apply_linear(p: Params, x: jax.Array, mode: str, *,
     if mode == "qlora" and "lora" in p:
         y = y + qlora.adapter_path(x, p["lora"], lora or qlora.LoRASpec(),
                                    train=train).astype(y.dtype)
+    if adapter_idx is not None and "lora_mt" in p:
+        y = y + _multi_tenant_lora(p["lora_mt"], x, adapter_idx).astype(y.dtype)
     return y
+
+
+def _multi_tenant_lora(mt: Params, x: jax.Array, adapter_idx: jax.Array) -> jax.Array:
+    """Per-row gathered ternary-LoRA contribution (serving/adapters/). Rows
+    whose index is 0 hit the null adapter (zero codes, zero scale) and
+    contribute exactly 0 — bit-identical to a no-adapter engine."""
+    from repro.kernels.batched_lora import ops as blora_ops
+    return blora_ops.batched_lora(x, mt["a"], mt["b"], mt["s"], adapter_idx)
 
 
 def apply_linear_fused(parts, x: jax.Array, mode: str, *,
                        fp8_acts: bool = False, train: bool = False,
-                       lora=None, fuse: bool = True):
+                       lora=None, fuse: bool = True,
+                       adapter_idx: Optional[jax.Array] = None):
     """Fused multi-projection linear: one matmul over N-concatenated weights.
 
     With Fig-7a K-sharding every GEMV's partial sum costs one tree reduction;
@@ -194,6 +208,8 @@ def apply_linear_fused(parts, x: jax.Array, mode: str, *,
         if mode == "qlora" and "lora" in p:
             yi = yi + qlora.adapter_path(x, p["lora"], lora or qlora.LoRASpec(),
                                          train=train).astype(yi.dtype)
+        if adapter_idx is not None and "lora_mt" in p:
+            yi = yi + _multi_tenant_lora(p["lora_mt"], x, adapter_idx).astype(yi.dtype)
         outs.append(yi)
         off += n
     return outs

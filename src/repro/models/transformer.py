@@ -429,11 +429,16 @@ class Model:
 
     # -- decode step ------------------------------------------------------------
     def decode_step(self, p: Params, cache: Params, token_or_embed: jax.Array,
-                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+                    pos: jax.Array, adapter_idx: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Params]:
         """One token for the whole batch. token: (B,) int32 (or (B, D) stub
-        embed). Returns (logits (B, V) f32, new cache)."""
+        embed). ``adapter_idx`` (B,) selects each slot's resident multi-tenant
+        LoRA adapter (serving/adapters/; 0 = none). Returns (logits (B, V)
+        f32, new cache)."""
         cfg, mode = self.cfg, self.mode
         kw = {"fuse": self.fuse_proj, "kv_dtype": self.kv_widen}
+        if adapter_idx is not None:
+            kw["adapter_idx"] = adapter_idx
         if token_or_embed.ndim == 1:
             x = layers.embed_tokens(p["embed"], token_or_embed, mode, self.dtype)
         else:
@@ -530,21 +535,39 @@ class Model:
         return x, new_cache
 
     # -- prefill ------------------------------------------------------------------
-    def prefill(self, p: Params, batch: Dict[str, jax.Array], max_len: int
+    def prefill(self, p: Params, batch: Dict[str, jax.Array], max_len: int, *,
+                pos_offset: int = 0, prefix_kv: Optional[Params] = None,
+                adapter_idx: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Params]:
         """Process the whole prompt, fill the cache, return last-token logits.
 
         Batched prefill (beyond-paper default; the paper's token-by-token
-        prefill is available in the simulator + serving engine)."""
-        with self._shard_scope():
-            return self._prefill(p, batch, max_len)
+        prefill is available in the simulator + serving engine).
 
-    def _prefill(self, p: Params, batch: Dict[str, jax.Array], max_len: int
+        ``pos_offset``/``prefix_kv`` resume prefill mid-sequence after a
+        prefix-cache hit: positions start at ``pos_offset``, the cache fills
+        from there, and the prompt remainder attends to the already-committed
+        prefix k/v (``{"k","v"}: (L, B, Hkv, P, D)`` in the fp8 cache
+        encoding). GQA attention families only. ``adapter_idx`` threads the
+        multi-tenant LoRA selection (one entry per batch row)."""
+        with self._shard_scope():
+            return self._prefill(p, batch, max_len, pos_offset=pos_offset,
+                                 prefix_kv=prefix_kv, adapter_idx=adapter_idx)
+
+    def _prefill(self, p: Params, batch: Dict[str, jax.Array], max_len: int, *,
+                 pos_offset: int = 0, prefix_kv: Optional[Params] = None,
+                 adapter_idx: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Params]:
         cfg, mode = self.cfg, self.mode
         x = self._embed(p, batch)
         b, s, _ = x.shape
         cache = self.init_cache(b, max_len)
+        kw: Dict[str, Any] = {}
+        if adapter_idx is not None:
+            kw["adapter_idx"] = adapter_idx
+        if pos_offset or prefix_kv is not None:
+            assert cfg.attention_kind == "gqa" and cfg.family not in ("ssm", "hybrid"), \
+                "mid-sequence prefill (prefix-cache resume) is GQA-only"
 
         if cfg.family in ("ssm", "hybrid"):
             # run full-seq backbone while extracting final states: recompute
@@ -560,36 +583,53 @@ class Model:
         prefix = p.get("prefix", [])
         kd = len(prefix)
         c0, c1 = self._cache_pair(cache)
-        positions = jnp.arange(s)[None, :]
+        pk = pv = None
+        if prefix_kv is not None:
+            pk, pv = prefix_kv["k"], prefix_kv["v"]     # (L, B, Hkv, P, D)
 
-        def fill_block(lp, h, c0_l, c1_l):
+        def fill_block(lp, h, c0_l, c1_l, pk_l=None, pv_l=None):
             hn = layers.rms_norm(h, lp["norm1"]["w"], cfg.norm_eps)
             if cfg.attention_kind == "mla":
                 a, c0_l, c1_l = _mla_prefill_fill(lp["attn"], hn, c0_l, c1_l, cfg,
-                                                  mode, self.attn_chunk)
+                                                  mode, self.attn_chunk, **kw)
             else:
                 a, c0_l, c1_l = _gqa_prefill_fill(lp["attn"], hn, c0_l, c1_l, cfg,
-                                                  mode, self.attn_chunk)
+                                                  mode, self.attn_chunk,
+                                                  pos_offset=pos_offset,
+                                                  prefix_k=pk_l, prefix_v=pv_l,
+                                                  **kw)
             h = h + a
             h2 = layers.rms_norm(h, lp["norm2"]["w"], cfg.norm_eps)
             if "moe" in lp:
-                f, _ = moe_mod.moe_ffn(lp["moe"], h2, cfg, mode)
+                f, _ = moe_mod.moe_ffn(lp["moe"], h2, cfg, mode, **kw)
             else:
-                f = layers.apply_ffn(lp["ffn"], h2, cfg.ffn_kind, mode)
+                f = layers.apply_ffn(lp["ffn"], h2, cfg.ffn_kind, mode, **kw)
             return h + f, c0_l, c1_l
 
         for i, lp in enumerate(prefix):
-            x, s0, s1 = fill_block(lp, x, c0[i], c1[i])
+            x, s0, s1 = fill_block(lp, x, c0[i], c1[i],
+                                   None if pk is None else pk[i],
+                                   None if pv is None else pv[i])
             c0 = c0.at[i].set(s0)
             c1 = c1.at[i].set(s1)
 
-        def body(h, inp):
-            lp, a, b_ = inp
-            h, a2, b2 = fill_block(lp, h, a, b_)
-            return self._c(h), (a2, b2)
+        if pk is None:
+            def body(h, inp):
+                lp, a, b_ = inp
+                h, a2, b2 = fill_block(lp, h, a, b_)
+                return self._c(h), (a2, b2)
 
-        body = jax.checkpoint(body) if self.remat else body
-        x, (n0, n1) = jax.lax.scan(body, x, (p["layers"], c0[kd:], c1[kd:]))
+            body = jax.checkpoint(body) if self.remat else body
+            x, (n0, n1) = jax.lax.scan(body, x, (p["layers"], c0[kd:], c1[kd:]))
+        else:
+            def body(h, inp):
+                lp, a, b_, pk_l, pv_l = inp
+                h, a2, b2 = fill_block(lp, h, a, b_, pk_l, pv_l)
+                return self._c(h), (a2, b2)
+
+            body = jax.checkpoint(body) if self.remat else body
+            x, (n0, n1) = jax.lax.scan(
+                body, x, (p["layers"], c0[kd:], c1[kd:], pk[kd:], pv[kd:]))
         c0 = jax.lax.dynamic_update_slice_in_dim(c0, n0, kd, 0)
         c1 = jax.lax.dynamic_update_slice_in_dim(c1, n1, kd, 0)
         cache = self._cache_unpair(cache, c0, c1)
@@ -603,25 +643,57 @@ def _pre_norm(x, cfg):
     return layers.rms_norm(x, jnp.ones((cfg.d_model,), jnp.float32), cfg.norm_eps)
 
 
-def _gqa_prefill_fill(p, h, k_cache, v_cache, cfg, mode, chunk):
+def _attend_with_prefix(q, k_new, v_new, k_pref, v_pref, pos_offset):
+    """Causal attention for a prompt remainder that starts mid-sequence: the
+    queries (global positions ``pos_offset + s``) attend the already-cached
+    prefix k/v (fp8 cache encoding, positions ``0..pos_offset``) plus the
+    remainder's own keys. q/k/v: (B, S, H*, D); k_pref/v_pref: (B, Hkv, P, D).
+    Plain masked softmax — the serving prefill path is batch-1 and bounded by
+    max_len, so no chunking/remat is needed."""
+    b, s, h, d = q.shape
+    hkv = k_new.shape[2]
+    g = h // hkv
+    p_len = k_pref.shape[2]
+    assert p_len == pos_offset, (p_len, pos_offset)
+    kp = (k_pref.astype(jnp.float32) * KV_CACHE_SCALE).transpose(0, 2, 1, 3)
+    vp = (v_pref.astype(jnp.float32) * KV_CACHE_SCALE).transpose(0, 2, 1, 3)
+    k_all = jnp.concatenate([kp, k_new.astype(jnp.float32)], axis=1)  # (B,T,Hkv,D)
+    v_all = jnp.concatenate([vp, v_new.astype(jnp.float32)], axis=1)
+    t = k_all.shape[1]
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bshgd,bthd->bshgt", qg, k_all) * (d ** -0.5)
+    visible = (jnp.arange(t)[None, :] <= pos_offset + jnp.arange(s)[:, None])
+    scores = jnp.where(visible[None, :, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    pr = jnp.exp(scores - m)
+    den = jnp.sum(pr, axis=-1, keepdims=True)
+    out = jnp.einsum("bshgt,bthd->bshgd", pr / jnp.maximum(den, 1e-30), v_all)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _gqa_prefill_fill(p, h, k_cache, v_cache, cfg, mode, chunk, *,
+                      pos_offset=0, prefix_k=None, prefix_v=None, **kw):
     b, s, _ = h.shape
-    positions = jnp.arange(s)[None, :]
-    q, k, v = attn_mod._project_qkv(p, h, cfg, mode, positions)
-    out = attn_mod.chunked_causal_attention(q, k, v, chunk_q=min(chunk, s),
-                                            chunk_k=min(chunk, s))
-    out = layers.apply_linear(p["o"], out.reshape(b, s, cfg.q_dim), mode)
+    positions = jnp.arange(s)[None, :] + pos_offset
+    q, k, v = attn_mod._project_qkv(p, h, cfg, mode, positions, **kw)
+    if prefix_k is None:
+        out = attn_mod.chunked_causal_attention(q, k, v, chunk_q=min(chunk, s),
+                                                chunk_k=min(chunk, s))
+    else:
+        out = _attend_with_prefix(q, k, v, prefix_k, prefix_v, pos_offset)
+    out = layers.apply_linear(p["o"], out.reshape(b, s, cfg.q_dim), mode, **kw)
     k_c = (k / KV_CACHE_SCALE).transpose(0, 2, 1, 3).astype(k_cache.dtype)
     v_c = (v / KV_CACHE_SCALE).transpose(0, 2, 1, 3).astype(v_cache.dtype)
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k_c, (0, 0, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v_c, (0, 0, 0, 0))
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_c, (0, 0, pos_offset, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_c, (0, 0, pos_offset, 0))
     return out, k_cache, v_cache
 
 
-def _mla_prefill_fill(p, h, latent_cache, rope_cache, cfg, mode, chunk):
+def _mla_prefill_fill(p, h, latent_cache, rope_cache, cfg, mode, chunk, **kw):
     b, s, _ = h.shape
     positions = jnp.arange(s)[None, :]
-    out = attn_mod.mla_train(p, h, cfg, mode, chunk=chunk)
-    latent, k_rope = attn_mod._mla_latent(p, h, cfg, mode, positions)
+    out = attn_mod.mla_train(p, h, cfg, mode, chunk=chunk, **kw)
+    latent, k_rope = attn_mod._mla_latent(p, h, cfg, mode, positions, **kw)
     latent_cache = jax.lax.dynamic_update_slice(
         latent_cache, (latent / KV_CACHE_SCALE).astype(latent_cache.dtype), (0, 0, 0))
     rope_cache = jax.lax.dynamic_update_slice(

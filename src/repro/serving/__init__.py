@@ -1,6 +1,7 @@
 """Serving: continuous-batching decode engine over the paper's
 context-sharded fp8 KV cache, plus the gateway layer (scheduler, prefix
-cache, streaming frontend, metrics) in `repro.serving.gateway`."""
+cache, streaming frontend, metrics) in `repro.serving.gateway` and the
+multi-tenant QLoRA adapter subsystem in `repro.serving.adapters`."""
 from repro.serving.engine import EngineStats, Request, ServeEngine
 from repro.serving.paged_kv import PagePool, PagedConfig
 

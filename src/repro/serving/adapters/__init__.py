@@ -1,0 +1,13 @@
+"""Multi-tenant QLoRA adapter serving: registry (versioned frozen ternary
+adapters), SRAM-budget cache (byte-accounted LRU with pinning), and the
+device runtime that stacks resident adapters for the batched SGMV decode
+path (see runtime.py for the dataflow)."""
+from repro.serving.adapters.cache import AdapterCache
+from repro.serving.adapters.registry import (AdapterRegistry, AdapterSpec,
+                                             FrozenAdapter,
+                                             synthetic_adapter_stacks,
+                                             target_dims)
+from repro.serving.adapters.runtime import AdapterServing
+
+__all__ = ["AdapterCache", "AdapterRegistry", "AdapterServing", "AdapterSpec",
+           "FrozenAdapter", "synthetic_adapter_stacks", "target_dims"]

@@ -1,0 +1,137 @@
+"""Adapter serving runtime: device-side stacks + param-tree injection.
+
+The data plane of the multi-tenant subsystem. Resident adapters live as
+packed-ternary stacks shaped for the model's scan-over-layers:
+
+    a: (L, R+1, K//4, r) u8    b: (L, R+1, r//4, N) u8    s: (L, R+1) f32
+
+— leading layer axis so `jax.lax.scan` slices one layer's ``(R+1, ...)``
+stack per step; slot 0 is the null adapter (zero codes, zero scale), so
+slots without an adapter contribute exactly 0. ``install`` grafts these
+stacks into a serve-mode param tree as ``lora_mt`` leaves on the target
+projections; the engine passes a per-slot ``adapter_idx`` vector into the
+jitted decode and `models/layers.apply_linear` gathers each row's A/B by
+index (SGMV — one tick serves many fine-tunes, no per-adapter dispatch).
+
+Loading/evicting an adapter rewrites one slot of each stack (same shapes →
+no recompilation) and bumps ``version`` so the engine re-installs the
+leaves. The combined per-layer scale ``scale_a · scale_b · α/r`` is folded
+into ``s`` at upload, so the kernel applies one multiply.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.adapters.cache import AdapterCache
+from repro.serving.adapters.registry import (AdapterRegistry, FrozenAdapter,
+                                             TARGET_GROUP, target_dims)
+
+
+class AdapterServing:
+    """Registry + SRAM-budget cache + device stacks for one served model."""
+
+    def __init__(self, model, registry: AdapterRegistry, *,
+                 budget_bytes: int, max_resident: int = 8):
+        cfg = model.cfg
+        assert cfg.family not in ("ssm", "hybrid"), \
+            "multi-tenant adapters need scanned attention layers"
+        assert cfg.attention_kind == "gqa", \
+            "multi-tenant adapters target GQA projections (q/k/v/o)"
+        assert cfg.moe is None or not any(
+            t in ("up", "gate", "down") for t in registry.spec.targets), \
+            "FFN adapter targets need a dense FFN"
+        assert cfg.moe is None or cfg.moe.first_k_dense == 0, \
+            "unstacked prefix layers are not adapter targets"
+        self.model = model
+        self.cfg = cfg
+        self.registry = registry
+        self.spec = registry.spec
+        self.cache = AdapterCache(budget_bytes, max_resident)
+        self.version = 0
+        self.n_layers = cfg.num_layers
+        r = self.spec.rank
+        n_slots = max_resident + 1              # + null slot 0
+        self.pack: Dict[str, Dict[str, jnp.ndarray]] = {}
+        for target in self.spec.targets:
+            k, n = target_dims(cfg, target)
+            assert k % 4 == 0, (target, k)
+            self.pack[target] = {
+                "a": jnp.zeros((self.n_layers, n_slots, k // 4, r), jnp.uint8),
+                "b": jnp.zeros((self.n_layers, n_slots, r // 4, n), jnp.uint8),
+                "s": jnp.zeros((self.n_layers, n_slots), jnp.float32),
+            }
+
+    # -- param-tree injection --------------------------------------------------
+    def install(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Copy-on-write graft of the current stacks into ``params`` as
+        ``lora_mt`` leaves (original tree untouched)."""
+        out = dict(params)
+        layers_p = dict(params["layers"])
+        for target, pack in self.pack.items():
+            group = TARGET_GROUP[target]
+            group_p = dict(layers_p[group])
+            node = dict(group_p[target])
+            node["lora_mt"] = {"a": pack["a"], "b": pack["b"], "s": pack["s"]}
+            group_p[target] = node
+            layers_p[group] = group_p
+        out["layers"] = layers_p
+        return out
+
+    # -- residency lifecycle ---------------------------------------------------
+    def is_resident(self, adapter_id: str) -> bool:
+        return self.cache.is_resident(adapter_id)
+
+    def servable(self, adapter_id: Optional[str]) -> bool:
+        """Static half of admission: registered and small enough to *ever*
+        fit the SRAM budget (submit-time validation)."""
+        if adapter_id is None:
+            return True
+        if adapter_id not in self.registry:
+            return False
+        return self.registry.get(adapter_id).nbytes <= self.cache.budget_bytes
+
+    def can_serve(self, adapter_id: Optional[str]) -> bool:
+        """Admission predicate: could a request with this adapter start now?"""
+        if adapter_id is None:
+            return True
+        if adapter_id not in self.registry:
+            return False
+        entry = self.registry.get(adapter_id)
+        return self.cache.can_admit(adapter_id, entry.nbytes)
+
+    def acquire(self, adapter_id: str) -> int:
+        """Pin ``adapter_id`` for an in-flight request, loading (and evicting
+        LRU unpinned residents) if cold. Returns the device slot index."""
+        entry = self.registry.get(adapter_id)
+        slot = self.cache.lookup(adapter_id)
+        if slot is None:
+            slot, _ = self.cache.admit(adapter_id, entry.nbytes)
+            self._upload(entry, slot)
+            self.version += 1
+        self.cache.pin(adapter_id)
+        return slot
+
+    def release(self, adapter_id: str) -> None:
+        self.cache.unpin(adapter_id)
+
+    def _upload(self, entry: FrozenAdapter, slot: int) -> None:
+        if entry.n_layers != self.n_layers:
+            raise ValueError(
+                f"{entry.adapter_id} v{entry.version} has {entry.n_layers} "
+                f"layers; model has {self.n_layers}")
+        for target, pk in entry.packs.items():
+            combined = (pk["a_scale"] * pk["b_scale"]
+                        * np.float32(self.spec.scaling))
+            dev = self.pack[target]
+            dev["a"] = dev["a"].at[:, slot].set(jnp.asarray(pk["a_codes"]))
+            dev["b"] = dev["b"].at[:, slot].set(jnp.asarray(pk["b_codes"]))
+            dev["s"] = dev["s"].at[:, slot].set(jnp.asarray(combined))
+
+    # -- stats -----------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        st = self.cache.stats()
+        st["registered"] = len(self.registry)
+        return st

@@ -39,6 +39,13 @@ token, weights in ROM). This engine generalizes it to the production mesh:
   * **events**: ``on_token / on_done / on_admit / on_preempt / on_expire``
     hooks fire inline; the gateway (gateway/gateway.py) wires them to
     streaming callbacks and the metrics registry.
+  * **multi-tenant adapters** (``adapters=`` an `serving/adapters/
+    AdapterServing`): each request may name an ``adapter_id`` — a frozen
+    ternary QLoRA fine-tune from the registry. Resident adapters are stacked
+    on device and gathered per slot inside the jitted decode (SGMV), so one
+    tick serves slots running different fine-tunes; the scheduler prefers
+    co-scheduling warm-adapter requests (never violating priority/EDF) and
+    the SRAM-budget cache pins adapters while their requests are in flight.
 
 SSM/hybrid archs serve through the same interface (their "cache" is the
 recurrent state; positions only gate the attention blocks, if any). Paged KV
@@ -73,6 +80,7 @@ class Request:
     eos_id: Optional[int] = None
     priority: int = 1               # lower = more urgent (class 0: interactive)
     deadline_s: Optional[float] = None   # absolute time.time() deadline (SLO)
+    adapter_id: Optional[str] = None     # tenant fine-tune (serving/adapters/)
     # filled by the engine
     state: str = "queued"  # queued|running|preempted|done|cancelled|expired|rejected
     output: List[int] = dataclasses.field(default_factory=list)
@@ -116,7 +124,7 @@ class ServeEngine:
                  max_len: int = 1024, prefill: str = "token", seed: int = 0,
                  kv: str = "dense", page: int = 64,
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
-                 scheduler=None):
+                 scheduler=None, adapters=None):
         assert model.mode in ("serve", "qlora")
         assert kv in ("dense", "paged"), kv
         self.model = model
@@ -127,6 +135,12 @@ class ServeEngine:
         self.prefill_mode = prefill
         self.kv_mode = kv
         self.key = jax.random.PRNGKey(seed)
+        # multi-tenant adapters (serving/adapters/AdapterServing): per-request
+        # adapter_id selects a frozen ternary LoRA; resident adapters ride in
+        # the param tree as lora_mt stacks, gathered per slot each tick.
+        self.adapters = adapters
+        self._mt_params: Optional[Params] = None
+        self._mt_version = -1
 
         if scheduler is None:
             from repro.serving.gateway.scheduler import Scheduler
@@ -161,6 +175,7 @@ class ServeEngine:
             self._decode = jax.jit(self._decode_fn)
 
         self.pos = np.zeros((max_slots,), np.int32)       # next write position
+        self.slot_adapter = np.zeros((max_slots,), np.int32)  # device slot (0=none)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.pending_prompt: List[List[int]] = [[] for _ in range(max_slots)]
         self.slot_feed: List[List[int]] = [[] for _ in range(max_slots)]
@@ -179,18 +194,20 @@ class ServeEngine:
         self.on_expire: Optional[Callable[[Request], None]] = None
 
     # -- jitted kernels --------------------------------------------------------
-    def _decode_fn(self, params, cache, tokens, pos):
-        logits, cache = self.model.decode_step(params, cache, tokens, pos)
+    def _decode_fn(self, params, cache, tokens, pos, adapter_idx=None):
+        logits, cache = self.model.decode_step(params, cache, tokens, pos,
+                                               adapter_idx)
         return logits, cache
 
     def _paged_decode_fn(self, params, pool_k, pool_v, tables, tokens, pos,
-                         page_ids, offsets):
+                         page_ids, offsets, adapter_idx=None):
         """Gather the bucketed page view, run the same decode_step as dense
         mode, then scatter the new token's k/v back into its page. Inactive
         slots' rows target the pool's scratch page."""
         cache = {"k": paged_kv.gather_pages(pool_k, tables),
                  "v": paged_kv.gather_pages(pool_v, tables)}
-        logits, new_cache = self.model.decode_step(params, cache, tokens, pos)
+        logits, new_cache = self.model.decode_step(params, cache, tokens, pos,
+                                                   adapter_idx)
         idx = pos.reshape(1, -1, 1, 1, 1).astype(jnp.int32)
         k_tok = jnp.take_along_axis(new_cache["k"], idx, axis=3)[:, :, :, 0]
         v_tok = jnp.take_along_axis(new_cache["v"], idx, axis=3)[:, :, :, 0]
@@ -217,14 +234,39 @@ class ServeEngine:
     def submit(self, prompt: List[int], max_new_tokens: int = 32,
                temperature: float = 0.0, top_k: int = 0,
                eos_id: Optional[int] = None, priority: int = 1,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               adapter_id: Optional[str] = None) -> Request:
         self._uid += 1
         req = Request(self._uid, list(prompt), max_new_tokens, temperature,
                       top_k, eos_id, priority=priority, deadline_s=deadline_s,
-                      t_submit=time.time())
+                      adapter_id=adapter_id, t_submit=time.time())
+        if adapter_id is not None and not self._adapter_servable(adapter_id):
+            # unknown tenant, no adapter runtime, or an adapter bigger than
+            # the whole SRAM budget: it could never be scheduled
+            req.state = "rejected"
+            return req
         if not self.scheduler.push(req):
             req.state = "rejected"
         return req
+
+    def _adapter_servable(self, adapter_id: str) -> bool:
+        return self.adapters is not None and self.adapters.servable(adapter_id)
+
+    def _adapter_warm(self, req: Request) -> bool:
+        """Affinity predicate: True when serving ``req`` costs no adapter
+        load (no adapter, or already resident)."""
+        return (self.adapters is None or req.adapter_id is None
+                or self.adapters.is_resident(req.adapter_id))
+
+    def _effective_params(self) -> Params:
+        """Base params, with the current multi-tenant adapter stacks grafted
+        in (rebuilt only when the runtime loads/evicts an adapter)."""
+        if self.adapters is None:
+            return self.params
+        if self._mt_version != self.adapters.version:
+            self._mt_params = self.adapters.install(self.params)
+            self._mt_version = self.adapters.version
+        return self._mt_params
 
     def cancel(self, uid: int) -> bool:
         """Cancel a queued or running request. Returns False if unknown."""
@@ -295,6 +337,11 @@ class ServeEngine:
         return self.pool.pages_for(min(len(feed) + remaining_new, self.max_len))
 
     def _can_admit(self, req: Request) -> bool:
+        if (self.adapters is not None and req.adapter_id is not None
+                and not self.adapters.can_serve(req.adapter_id)):
+            # every budget byte is pinned by in-flight adapters — the request
+            # waits until a slot drains and unpins one
+            return False
         if self.kv_mode != "paged":
             return True
         # a request whose final context exceeds the whole pool would only
@@ -313,7 +360,8 @@ class ServeEngine:
         for slot in self._free_slots():
             if not len(self.scheduler):
                 break
-            req = self.scheduler.pop_next(self._can_admit)
+            req = self.scheduler.pop_next(self._can_admit,
+                                          prefer=self._adapter_warm)
             if req is None and self.kv_mode == "paged":
                 req = self._admit_under_pressure()
             if req is None:
@@ -327,7 +375,9 @@ class ServeEngine:
         Preempting without that check livelocks: the victim is re-admitted
         by the very next pop and zero progress is made every tick."""
         head = self.scheduler.peek(
-            lambda r: self._pages_lifetime(r) <= self.pool.cfg.n_pages)
+            lambda r: self._pages_lifetime(r) <= self.pool.cfg.n_pages
+            and (self.adapters is None or r.adapter_id is None
+                 or self.adapters.can_serve(r.adapter_id)))
         if head is None:
             return None
         needed = self._pages_needed(head)
@@ -351,11 +401,15 @@ class ServeEngine:
                 pairs = [(i, r) for i, r in pairs if i != slot]
             for slot in victims:
                 self._preempt(slot)
-        return self.scheduler.pop_next(self._can_admit)
+        return self.scheduler.pop_next(self._can_admit,
+                                       prefer=self._adapter_warm)
 
     def _place(self, slot: int, req: Request, now: float) -> None:
         req.state = "running"
         req.t_admit = now
+        if self.adapters is not None and req.adapter_id is not None:
+            # load (evicting LRU unpinned if needed) + pin for the slot's life
+            self.slot_adapter[slot] = self.adapters.acquire(req.adapter_id)
         feed, remaining_new = self._clamped_feed(req)
         req.max_new_tokens = len(req.output) + remaining_new
         self.slot_req[slot] = req
@@ -381,12 +435,14 @@ class ServeEngine:
         remainder = feed[matched:]
         # SSM/hybrid prefill must thread recurrent state → token mode
         # (model.prefill fills the KV cache only; see models/transformer).
-        # A prefix hit also forces token mode: model.prefill bakes positions
-        # starting at 0, but the remainder starts at ``matched``.
+        # After a prefix hit the remainder starts at ``matched``: GQA prefill
+        # resumes mid-sequence (position offset + attention over the cached
+        # prefix pages); other attention kinds fall back to token mode.
         batched_ok = (self.cfg.family not in ("ssm", "hybrid")
-                      and matched == 0 and len(remainder) > 1)
+                      and len(remainder) > 1
+                      and (matched == 0 or self.cfg.attention_kind == "gqa"))
         if self.prefill_mode == "batched" and batched_ok:
-            self._batched_prefill(slot, remainder)
+            self._batched_prefill(slot, remainder, matched)
             self.pending_prompt[slot] = [remainder[-1]]
         else:
             # paper mode: prompt tokens stream through decode_step
@@ -394,25 +450,38 @@ class ServeEngine:
         if self.on_admit:
             self.on_admit(req, slot)
 
-    def _batched_prefill(self, slot: int, feed: List[int]) -> None:
+    def _batched_prefill(self, slot: int, feed: List[int],
+                         matched: int = 0) -> None:
         """Run full-sequence prefill for one request (bucketed length) and
         splice its cache rows into the live batch cache at ``slot`` (dense)
-        or write them into the slot's pages (paged)."""
+        or write them into the slot's pages (paged). ``matched`` > 0 resumes
+        after a prefix-cache hit: positions offset by the cached span and the
+        remainder attends the already-committed prefix pages."""
         n = len(feed) - 1          # last prompt token goes through decode
         if n <= 0:
             return
         bucket = 1 << max(4, (n - 1).bit_length())
-        bucket = min(bucket, self.max_len)
+        bucket = min(bucket, self.max_len - matched)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = feed[:n]
-        _, sub_cache = self.model.prefill(self.params, {"tokens": jnp.asarray(toks)},
-                                          self.max_len)
+        kwargs = {}
+        if matched:
+            gk, gv = self.pool.gather_slot(slot, self.slot_cached[slot])
+            kwargs["pos_offset"] = matched
+            kwargs["prefix_kv"] = {"k": gk, "v": gv}
+        if self.adapters is not None and self.slot_adapter[slot]:
+            kwargs["adapter_idx"] = jnp.asarray([self.slot_adapter[slot]],
+                                                jnp.int32)
+        _, sub_cache = self.model.prefill(self._effective_params(),
+                                          {"tokens": jnp.asarray(toks)},
+                                          self.max_len, **kwargs)
         if self.kv_mode == "paged":
-            self.pool.write_span(slot, 0, sub_cache["k"][:, 0, :, :n],
-                                 sub_cache["v"][:, 0, :, :n])
+            self.pool.write_span(slot, matched,
+                                 sub_cache["k"][:, 0, :, matched:matched + n],
+                                 sub_cache["v"][:, 0, :, matched:matched + n])
         else:
             self.cache = _splice_cache(self.cache, sub_cache, slot)
-        self.pos[slot] = n
+        self.pos[slot] = matched + n
 
     # -- paged capacity / preemption ----------------------------------------------
     def _ensure_capacity(self, active: List[int]) -> List[int]:
@@ -451,6 +520,11 @@ class ServeEngine:
             self.on_preempt(req)
 
     def _release_slot(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        if (self.adapters is not None and req is not None
+                and req.adapter_id is not None):
+            self.adapters.release(req.adapter_id)   # unpin → evictable
+        self.slot_adapter[slot] = 0
         if self.kv_mode == "paged":
             if self.prefix is not None:
                 self.prefix.decref(self.slot_keys[slot])
@@ -463,6 +537,14 @@ class ServeEngine:
         self.pos[slot] = 0
 
     # -- decode ---------------------------------------------------------------------
+    def _adapter_idx(self) -> Optional[jax.Array]:
+        """Per-slot device adapter index for the jitted decode (None when the
+        engine serves a single personality — keeps the graph byte-identical
+        to the pre-adapter path)."""
+        if self.adapters is None:
+            return None
+        return jnp.asarray(self.slot_adapter)
+
     def _paged_tick_decode(self, active: List[int], tokens: np.ndarray):
         pool = self.pool
         for i in active:
@@ -479,9 +561,10 @@ class ServeEngine:
             page_ids[i] = pool.tables[i][p // pool.cfg.page]
             offsets[i] = p % pool.cfg.page
         logits, pool.k, pool.v = self._paged_decode(
-            self.params, pool.k, pool.v, jnp.asarray(tables),
+            self._effective_params(), pool.k, pool.v, jnp.asarray(tables),
             jnp.asarray(tokens), jnp.asarray(self.pos),
-            jnp.asarray(page_ids), jnp.asarray(offsets))
+            jnp.asarray(page_ids), jnp.asarray(offsets),
+            self._adapter_idx())
         for i in active:
             pool.lengths[i] = max(int(pool.lengths[i]), int(self.pos[i]) + 1)
         return logits
@@ -512,9 +595,11 @@ class ServeEngine:
         if self.kv_mode == "paged":
             logits = self._paged_tick_decode(active, tokens)
         else:
-            logits, self.cache = self._decode(self.params, self.cache,
+            logits, self.cache = self._decode(self._effective_params(),
+                                              self.cache,
                                               jnp.asarray(tokens),
-                                              jnp.asarray(self.pos))
+                                              jnp.asarray(self.pos),
+                                              self._adapter_idx())
         self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(self._sample(logits, sub, jnp.asarray(temps),
                                       jnp.asarray(topks)))

@@ -41,20 +41,28 @@ class Gateway:
                temperature: float = 0.0, top_k: int = 0,
                eos_id: Optional[int] = None, priority: int = 1,
                deadline_ms: Optional[float] = None,
+               adapter_id: Optional[str] = None,
                stream_cb: Optional[TokenCallback] = None) -> Request:
         """Enqueue a request. ``deadline_ms`` is an SLO relative to now;
+        ``adapter_id`` selects a registered tenant fine-tune;
         ``stream_cb(req, token)`` fires for every generated token."""
         deadline_s = (time.time() + deadline_ms / 1e3
                       if deadline_ms is not None else None)
         req = self.engine.submit(prompt, max_new_tokens=max_new_tokens,
                                  temperature=temperature, top_k=top_k,
                                  eos_id=eos_id, priority=priority,
-                                 deadline_s=deadline_s)
+                                 deadline_s=deadline_s, adapter_id=adapter_id)
         self.metrics.inc("requests_submitted")
         if req.state == "rejected":
             self.metrics.inc("requests_rejected")
-        elif stream_cb is not None:
-            self._stream_cbs[req.uid] = stream_cb
+        else:
+            if adapter_id is not None:
+                # accepted ⇒ adapter_id is registered: per-tenant counter
+                # cardinality stays bounded by the registry, not by clients
+                self.metrics.inc("adapter_requests_total")
+                self.metrics.inc(f"adapter_requests__{adapter_id}")
+            if stream_cb is not None:
+                self._stream_cbs[req.uid] = stream_cb
         return req
 
     def cancel(self, uid: int) -> bool:
@@ -141,6 +149,10 @@ class Gateway:
             if eng.prefix is not None:
                 self.metrics.set_gauge("prefix_cache_pages",
                                        eng.prefix.n_pages)
+        if eng.adapters is not None:
+            # adapter SRAM-cache residency / hit-rate / eviction telemetry
+            for name, value in eng.adapters.stats().items():
+                self.metrics.set_gauge(f"adapter_cache_{name}", value)
 
     def metrics_dict(self) -> Dict:
         self._sample_gauges()

@@ -17,6 +17,10 @@ Policy (documented, deliberately simple — the engine is tick-synchronous):
     names the youngest request of the lowest-priority class; the engine
     releases its pages and ``requeue``s it (generated tokens re-enter as
     prompt, so no work is lost beyond the re-prefill).
+  * **adapter affinity**: ``pop_next(prefer=...)`` lets the engine prefer
+    requests whose QLoRA adapter is already resident in the SRAM-budget
+    cache — but only among entries with identical (priority, deadline), so
+    affinity batching can never starve a more urgent cold-adapter request.
 """
 from __future__ import annotations
 
@@ -81,14 +85,38 @@ class Scheduler:
                 return req
         return None
 
-    def pop_next(self, can_admit: Callable[[Request], bool] = lambda r: True
+    def pop_next(self, can_admit: Callable[[Request], bool] = lambda r: True,
+                 prefer: Optional[Callable[[Request], bool]] = None
                  ) -> Optional[Request]:
-        """Best admissible entry in (priority, deadline, arrival) order."""
+        """Best admissible entry in (priority, deadline, arrival) order.
+
+        ``prefer`` enables adapter-affinity batching: among admissible
+        entries with the SAME (priority, deadline) key, one satisfying
+        ``prefer`` (e.g. "its adapter is already resident") is handed out
+        ahead of earlier arrivals. Entries of a more urgent class or an
+        earlier deadline are never bypassed — affinity only breaks arrival
+        ties, so priority/EDF invariants hold and a high-priority request
+        with a cold adapter cannot be starved by warm low-priority traffic.
+        """
+        best_i: Optional[int] = None
         for i, req in enumerate(self._entries):
-            if can_admit(req):
-                del self._entries[i]
-                return req
-        return None
+            if best_i is None:
+                if can_admit(req):
+                    best_i = i
+                    if prefer is None or prefer(req):
+                        break
+                continue
+            head = self._entries[best_i]
+            head_dl = head.deadline_s if head.deadline_s is not None else math.inf
+            req_dl = req.deadline_s if req.deadline_s is not None else math.inf
+            if req.priority != head.priority or req_dl != head_dl:
+                break            # a different key can never be preferred
+            if can_admit(req) and prefer(req):
+                best_i = i
+                break
+        if best_i is None:
+            return None
+        return self._entries.pop(best_i)
 
     def pick_victim(self, active: Sequence[Tuple[int, Request]],
                     below_priority: Optional[int] = None) -> Optional[int]:
