@@ -51,10 +51,12 @@ def run(quick: bool = False) -> Report:
     # --- real JAX serving engine sanity (reduced model on CPU) -------------------
     if not quick:
         from repro.launch.serve import build_engine
+        from repro.serving import RequestSpec
         eng = build_engine("bitnet-2b", "tiny", slots=4, max_len=128,
                            prefill="token")
         for i in range(6):
-            eng.submit(list(range(3 + i, 13 + i)), max_new_tokens=8)
+            eng.submit(list(range(3 + i, 13 + i)),
+                       RequestSpec(max_new_tokens=8))
         stats = eng.run_until_drained()
         r.row("jax_engine/completed", stats.completed, "reduced bitnet-2b on CPU")
         r.row("jax_engine/tps_host_cpu", round(stats.tps, 1),

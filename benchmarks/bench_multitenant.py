@@ -18,37 +18,11 @@ Emits both the standard Report JSON and ``artifacts/BENCH_multitenant.json``.
 from __future__ import annotations
 
 import json
-import time
 
 import numpy as np
 
-from benchmarks.common import ARTIFACTS, Report
-
-
-def _poisson_arrivals(rng, n, rate_hz):
-    t, out = 0.0, []
-    for _ in range(n):
-        t += float(rng.exponential(1.0 / rate_hz))
-        out.append(t)
-    return out
-
-
-def _drive(gw, reqs_spec, arrivals):
-    """Submit each spec at its arrival offset while ticking the engine."""
-    t0 = time.time()
-    pending = list(zip(arrivals, reqs_spec))
-    reqs = []
-    while pending or len(gw.engine.scheduler) \
-            or any(r is not None for r in gw.engine.slot_req):
-        now = time.time() - t0
-        while pending and pending[0][0] <= now:
-            _, spec = pending.pop(0)
-            reqs.append(gw.submit(**spec))
-        if pending and not any(r is not None for r in gw.engine.slot_req) \
-                and not len(gw.engine.scheduler):
-            time.sleep(min(0.002, pending[0][0] - now))
-        gw.step()
-    return reqs, time.time() - t0
+from benchmarks.common import (ARTIFACTS, Report, drive_gateway,
+                               poisson_arrivals)
 
 
 def run(quick: bool = False) -> Report:
@@ -56,7 +30,7 @@ def run(quick: bool = False) -> Report:
     from repro.configs.base import get_config
     from repro.launch.train import reduce_config
     from repro.models.transformer import Model
-    from repro.serving import ServeEngine
+    from repro.serving import PagedKV, RequestSpec, ServeEngine
     from repro.serving.adapters import (AdapterRegistry, AdapterServing,
                                         AdapterSpec, synthetic_adapter_stacks)
     from repro.serving.gateway import Gateway
@@ -81,7 +55,7 @@ def run(quick: bool = False) -> Report:
 
     prompts = [list(rng.integers(0, 1000, size=int(rng.integers(6, 14))))
                for _ in range(n_req)]
-    arrivals = _poisson_arrivals(rng, n_req, rate_hz=50.0)
+    arrivals = poisson_arrivals(rng, n_req, rate_hz=50.0)
 
     def tenant_of(i, workload):
         if workload == "baseline":
@@ -99,12 +73,13 @@ def run(quick: bool = False) -> Report:
                                       budget_bytes=per_adapter * (n_tenants // 2),
                                       max_resident=n_tenants // 2)
         eng = ServeEngine(model, params, max_slots=4, max_len=128,
-                          kv="paged", page=16, adapters=adapters)
+                          kv=PagedKV(page=16), adapters=adapters)
         gw = Gateway(eng)
-        specs = [dict(prompt=prompts[i], max_new_tokens=max_new,
-                      priority=i % 2, adapter_id=tenant_of(i, workload))
+        specs = [(prompts[i],
+                  RequestSpec(max_new_tokens=max_new, priority=i % 2,
+                              adapter_id=tenant_of(i, workload)))
                  for i in range(n_req)]
-        reqs, wall = _drive(gw, specs, arrivals)
+        reqs, wall = drive_gateway(gw, specs, arrivals)
         done = [q for q in reqs if q.state == "done"]
         ttfts = sorted(q.ttft_s * 1e3 for q in done)
         row = {

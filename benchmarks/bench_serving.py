@@ -1,61 +1,57 @@
-"""Serving-gateway benchmark: Poisson arrivals through the paged engine.
+"""Serving-gateway benchmark: Poisson arrivals through the decode engine.
 
-Two workloads over the same reduced BitNet-2B, same arrival process:
+Workloads over the same reduced BitNet-2B, same arrival process:
 
-  * ``unique``  — every prompt is fresh (cold KV), paged pool, no cache;
+  * ``unique``  — every prompt is fresh (cold KV). Run per KV backend
+    (``--kv-backend dense|paged|both``) through the one shared engine tick
+    path, so the dense↔paged serving trajectory is an apples-to-apples A/B;
   * ``shared``  — every prompt starts with the same system prefix and the
-    prefix cache is on: after the first request commits the shared pages,
-    every later request's shared span costs **zero prefill ticks** (its
-    first token needs only the per-request tail).
+    prefix cache is on (paged only): after the first request commits the
+    shared pages, every later request's shared span costs **zero prefill
+    ticks** (its first token needs only the per-request tail).
 
-Reports TTFT p50/p99, decode throughput, pool occupancy, preemptions and
+Reports TTFT p50/p95/p99, decode throughput, pool occupancy, preemptions and
 the prefix-hit accounting. Row names are stable so the bench trajectory can
-track serving perf across PRs.
+track serving perf across PRs; the per-backend summary (TPS, TTFT p50/p95)
+is emitted to ``artifacts/BENCH_serving.json``.
 
-    PYTHONPATH=src python -m benchmarks.bench_serving [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_serving [--quick] \
+        [--kv-backend both]
 """
 from __future__ import annotations
 
+import argparse
 import json
-import time
 
 import numpy as np
 
-from benchmarks.common import Report
+from benchmarks.common import (ARTIFACTS, Report, drive_gateway,
+                               poisson_arrivals)
 
 
-def _poisson_arrivals(rng, n, rate_hz):
-    t, out = 0.0, []
-    for _ in range(n):
-        t += float(rng.exponential(1.0 / rate_hz))
-        out.append(t)
-    return out
+def _summarize(gw, reqs, wall):
+    done = [q for q in reqs if q.state == "done"]
+    ttfts = sorted(q.ttft_s * 1e3 for q in done)
+    m = gw.metrics_dict()
+    return {
+        "completed": len(done),
+        "wall_s": round(wall, 3),
+        "tps": round(gw.engine.stats.tokens_out / wall, 1),
+        "ttft_p50_ms": round(float(np.median(ttfts)), 1),
+        "ttft_p95_ms": round(float(np.quantile(ttfts, 0.95)), 1),
+        "ttft_p99_ms": round(float(np.quantile(ttfts, 0.99)), 1),
+        "pool_occupancy": m["gauges"].get("pool_occupancy", 0.0),
+        "preemptions": int(gw.engine.stats.preemptions),
+        "prefix_hit_tokens": int(gw.engine.stats.prefix_hit_tokens),
+    }
 
 
-def _drive(gw, reqs_spec, arrivals):
-    """Submit each spec at its arrival offset while ticking the engine."""
-    t0 = time.time()
-    pending = list(zip(arrivals, reqs_spec))
-    reqs = []
-    while pending or len(gw.engine.scheduler) \
-            or any(r is not None for r in gw.engine.slot_req):
-        now = time.time() - t0
-        while pending and pending[0][0] <= now:
-            _, spec = pending.pop(0)
-            reqs.append(gw.submit(**spec))
-        if pending and not any(r is not None for r in gw.engine.slot_req) \
-                and not len(gw.engine.scheduler):
-            time.sleep(min(0.002, pending[0][0] - now))
-        gw.step()
-    return reqs, time.time() - t0
-
-
-def run(quick: bool = False) -> Report:
+def run(quick: bool = False, kv_backend: str = "both") -> Report:
     import jax
     from repro.configs.base import get_config
     from repro.launch.train import reduce_config
     from repro.models.transformer import Model
-    from repro.serving import ServeEngine
+    from repro.serving import DenseKV, PagedKV, RequestSpec, ServeEngine
     from repro.serving.gateway import Gateway
 
     r = Report("serving")
@@ -72,66 +68,84 @@ def run(quick: bool = False) -> Report:
     shared = list(rng.integers(0, 1000, size=shared_len))
     tails = [list(rng.integers(0, 1000, size=int(rng.integers(4, 10))))
              for _ in range(n_req)]
-    arrivals = _poisson_arrivals(rng, n_req, rate_hz=50.0)
+    uniques = [list(rng.integers(0, 1000, size=shared_len)) for _ in range(n_req)]
+    arrivals = poisson_arrivals(rng, n_req, rate_hz=50.0)
+
+    backends = {"dense": DenseKV, "paged": lambda: PagedKV(page=page)}
+    if kv_backend != "both":
+        backends = {kv_backend: backends[kv_backend]}
 
     results = {}
-    for workload in ("unique", "shared"):
-        eng = ServeEngine(model, params, max_slots=4, max_len=128,
-                          kv="paged", page=page,
-                          prefix_cache=(workload == "shared"))
+    # -- A/B: the unique (cold-KV) workload per backend ------------------------
+    for name, make in backends.items():
+        eng = ServeEngine(model, params, max_slots=4, max_len=128, kv=make())
         gw = Gateway(eng)
-        if workload == "shared":
-            # one warmup request commits the shared pages (cold TTFT)
-            warm = gw.submit(shared + tails[0], max_new_tokens=2)
-            gw.run_until_drained()
-            assert warm.state == "done"
-        specs = [dict(prompt=(shared if workload == "shared" else
-                              list(rng.integers(0, 1000, size=shared_len)))
-                      + tails[i],
-                      max_new_tokens=max_new, priority=i % 2)
+        specs = [(uniques[i] + tails[i],
+                  RequestSpec(max_new_tokens=max_new, priority=i % 2))
                  for i in range(n_req)]
-        reqs, wall = _drive(gw, specs, arrivals)
-        done = [q for q in reqs if q.state == "done"]
-        ttfts = sorted(q.ttft_s * 1e3 for q in done)
-        m = gw.metrics_dict()
-        results[workload] = {
-            "completed": len(done),
-            "wall_s": round(wall, 3),
-            "tps": round(gw.engine.stats.tokens_out / wall, 1),
-            "ttft_p50_ms": round(float(np.median(ttfts)), 1),
-            "ttft_p99_ms": round(float(np.quantile(ttfts, 0.99)), 1),
-            "pool_occupancy": m["gauges"].get("pool_occupancy", 0.0),
-            "preemptions": int(gw.engine.stats.preemptions),
-            "prefix_hit_tokens": int(gw.engine.stats.prefix_hit_tokens),
-            # acceptance: prefill ticks actually spent on the shared span
-            # (0 for every cache-hit request — only the tail is prefilled)
-            "shared_span_prefill_ticks": sum(
-                max(0, q.prefill_ticks - (len(q.prompt) - shared_len))
-                for q in done if q.prefix_hit_tokens),
-            "hit_requests": sum(1 for q in done if q.prefix_hit_tokens),
-        }
-        w = results[workload]
-        r.row(f"{workload}/completed", w["completed"], f"of {n_req}")
-        r.row(f"{workload}/tps", w["tps"], "decode tokens/s (host CPU)")
-        r.row(f"{workload}/ttft_p50_ms", w["ttft_p50_ms"], "")
-        r.row(f"{workload}/ttft_p99_ms", w["ttft_p99_ms"], "")
-        r.row(f"{workload}/pool_occupancy", w["pool_occupancy"], "")
-        r.row(f"{workload}/preemptions", w["preemptions"], "")
+        reqs, wall = drive_gateway(gw, specs, arrivals)
+        results[f"unique/{name}"] = w = _summarize(gw, reqs, wall)
+        r.row(f"unique/{name}/completed", w["completed"], f"of {n_req}")
+        r.row(f"unique/{name}/tps", w["tps"], "decode tokens/s (host CPU)")
+        r.row(f"unique/{name}/ttft_p50_ms", w["ttft_p50_ms"], "")
+        r.row(f"unique/{name}/ttft_p95_ms", w["ttft_p95_ms"], "")
+        r.row(f"unique/{name}/pool_occupancy", w["pool_occupancy"], "")
+        r.row(f"unique/{name}/preemptions", w["preemptions"], "")
 
-    sh = results["shared"]
-    r.row("shared/prefix_hit_tokens", sh["prefix_hit_tokens"],
-          f"{sh['hit_requests']} hit requests x {shared_len} shared tokens")
-    r.row("shared/shared_span_prefill_ticks", sh["shared_span_prefill_ticks"],
-          "must be 0: shared span reaches first token with zero prefill ticks")
-    speedup = (results["unique"]["ttft_p50_ms"]
-               / max(sh["ttft_p50_ms"], 1e-9))
-    r.row("shared/ttft_p50_speedup", round(speedup, 2),
-          "unique/shared TTFT p50 (prefix-cache win)")
+    # -- shared-prefix workload: paged + prefix cache --------------------------
+    if "paged" in backends:
+        eng = ServeEngine(model, params, max_slots=4, max_len=128,
+                          kv=PagedKV(page=page), prefix_cache=True)
+        gw = Gateway(eng)
+        # one warmup request commits the shared pages (cold TTFT)
+        warm = gw.submit(shared + tails[0], RequestSpec(max_new_tokens=2))
+        gw.run_until_drained()
+        assert warm.state == "done"
+        specs = [(shared + tails[i],
+                  RequestSpec(max_new_tokens=max_new, priority=i % 2))
+                 for i in range(n_req)]
+        reqs, wall = drive_gateway(gw, specs, arrivals)
+        results["shared/paged"] = sh = _summarize(gw, reqs, wall)
+        done = [q for q in reqs if q.state == "done"]
+        # acceptance: prefill ticks actually spent on the shared span
+        # (0 for every cache-hit request — only the tail is prefilled)
+        sh["shared_span_prefill_ticks"] = sum(
+            max(0, q.prefill_ticks - (len(q.prompt) - shared_len))
+            for q in done if q.prefix_hit_tokens)
+        sh["hit_requests"] = sum(1 for q in done if q.prefix_hit_tokens)
+        r.row("shared/completed", sh["completed"], f"of {n_req}")
+        r.row("shared/tps", sh["tps"], "decode tokens/s (host CPU)")
+        r.row("shared/ttft_p50_ms", sh["ttft_p50_ms"], "")
+        r.row("shared/ttft_p95_ms", sh["ttft_p95_ms"], "")
+        r.row("shared/prefix_hit_tokens", sh["prefix_hit_tokens"],
+              f"{sh['hit_requests']} hit requests x {shared_len} shared tokens")
+        r.row("shared/shared_span_prefill_ticks",
+              sh["shared_span_prefill_ticks"],
+              "must be 0: shared span reaches first token with zero prefill ticks")
+        if "unique/paged" in results:
+            speedup = (results["unique/paged"]["ttft_p50_ms"]
+                       / max(sh["ttft_p50_ms"], 1e-9))
+            r.row("shared/ttft_p50_speedup", round(speedup, 2),
+                  "unique/shared TTFT p50 (prefix-cache win)")
+
+    # perf-trajectory artifact: stable keys, TPS + TTFT p50/p95 per backend
+    bench_out = {
+        name: {"tps": w["tps"], "ttft_p50_ms": w["ttft_p50_ms"],
+               "ttft_p95_ms": w["ttft_p95_ms"], "completed": w["completed"]}
+        for name, w in results.items()
+    }
+    (ARTIFACTS / "BENCH_serving.json").write_text(
+        json.dumps(bench_out, indent=1))
     print("[bench_serving]", json.dumps(results))
     r.save()
     return r
 
 
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--kv-backend", default="both",
+                    choices=("dense", "paged", "both"),
+                    help="A/B the unique workload over these KV backends")
+    args = ap.parse_args()
+    run(quick=args.quick, kv_backend=args.kv_backend)

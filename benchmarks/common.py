@@ -41,6 +41,35 @@ class Report:
         return out
 
 
+def poisson_arrivals(rng, n: int, rate_hz: float) -> List[float]:
+    """n arrival-time offsets (seconds from start) of a Poisson process."""
+    t, out = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate_hz))
+        out.append(t)
+    return out
+
+
+def drive_gateway(gw, reqs_spec, arrivals):
+    """Submit each (prompt, RequestSpec) at its arrival offset while ticking
+    the engine; returns (requests, wall_seconds). Shared by the serving and
+    multi-tenant benches so the submit convention lives in one place."""
+    t0 = time.time()
+    pending = list(zip(arrivals, reqs_spec))
+    reqs = []
+    while pending or len(gw.engine.scheduler) \
+            or any(r is not None for r in gw.engine.slot_req):
+        now = time.time() - t0
+        while pending and pending[0][0] <= now:
+            _, (prompt, spec) = pending.pop(0)
+            reqs.append(gw.submit(prompt, spec))
+        if pending and not any(r is not None for r in gw.engine.slot_req) \
+                and not len(gw.engine.scheduler):
+            time.sleep(min(0.002, pending[0][0] - now))
+        gw.step()
+    return reqs, time.time() - t0
+
+
 def close(a: float, b: float, tol: float) -> str:
     err = abs(a - b) / max(abs(b), 1e-12)
     return f"err={err:.1%} vs paper {b:g} ({'OK' if err <= tol else 'MISS'})"

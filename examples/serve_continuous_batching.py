@@ -19,6 +19,7 @@ sys.path.insert(0, "src")
 import numpy as np  # noqa: E402
 
 from repro.launch.serve import build_engine  # noqa: E402
+from repro.serving import RequestSpec, SamplingParams  # noqa: E402
 from repro.serving.gateway import Gateway  # noqa: E402
 
 # --- 1. continuous batching, dense KV, both prefill modes --------------------
@@ -32,9 +33,10 @@ for prefill in ("token", "batched"):
     for i in range(12):
         plen = int(rng.integers(4, 24))
         prompt = list(rng.integers(0, 1000, size=plen))
-        reqs.append(eng.submit(prompt, max_new_tokens=12,
-                               temperature=0.0 if i % 3 else 0.7,
-                               top_k=0 if i % 3 else 20))
+        sampling = (SamplingParams() if i % 3 else
+                    SamplingParams(temperature=0.7, top_k=20, top_p=0.9))
+        reqs.append(eng.submit(prompt, RequestSpec(max_new_tokens=12),
+                               sampling))
     stats = eng.run_until_drained()
     ttfts = sorted(r.ttft_s for r in reqs)
     print(f"completed {stats.completed}/12 | {stats.tokens_out} tokens in "
@@ -52,12 +54,13 @@ rng = np.random.default_rng(1)
 system_prompt = list(rng.integers(0, 1000, size=32))   # 2 full pages, shared
 
 # first request pays the system-prompt prefill and commits its pages
-first = gw.submit(system_prompt + [7, 8, 9], max_new_tokens=8)
+first = gw.submit(system_prompt + [7, 8, 9], RequestSpec(max_new_tokens=8))
 print("streamed:", list(gw.stream(first)))
 
 # later requests hit the prefix cache: the shared span costs 0 prefill ticks
 later = [gw.submit(system_prompt + list(rng.integers(0, 1000, size=4)),
-                   max_new_tokens=8, priority=i % 2) for i in range(6)]
+                   RequestSpec(max_new_tokens=8, priority=i % 2))
+         for i in range(6)]
 gw.run_until_drained()
 for r in later[:2]:
     print(f"req {r.uid}: prefix_hit={r.prefix_hit_tokens} tokens, "

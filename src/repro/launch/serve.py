@@ -36,7 +36,8 @@ from repro.ckpt import checkpoint as ckpt_mod
 from repro.configs.base import get_config
 from repro.launch.train import reduce_config
 from repro.models.transformer import Model
-from repro.serving import ServeEngine
+from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
+                           ServeEngine)
 from repro.serving.gateway import Gateway
 
 
@@ -76,10 +77,11 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                                   max_resident=max(2, min(n_adapters, slots * 2)))
         print(f"[serve] {n_adapters} tenants registered "
               f"({per_adapter}B each, SRAM budget {budget}B)")
+    backend = (PagedKV(page=page, n_pages=n_pages) if kv == "paged"
+               else DenseKV())
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
-                       prefill=prefill, seed=seed, kv=kv, page=page,
-                       n_pages=n_pages, prefix_cache=prefix_cache,
-                       adapters=adapters)
+                       prefill=prefill, seed=seed, kv=backend,
+                       prefix_cache=prefix_cache, adapters=adapters)
 
 
 def main(argv=None) -> int:
@@ -93,7 +95,10 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--prefill", default="token", choices=("token", "batched"))
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--kv", default="dense", choices=("dense", "paged"))
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = disabled)")
+    ap.add_argument("--kv", "--kv-backend", dest="kv", default="dense",
+                    choices=("dense", "paged"))
     ap.add_argument("--page", type=int, default=64)
     ap.add_argument("--n-pages", type=int, default=None,
                     help="pool capacity (default: slots * max_len / page)")
@@ -136,11 +141,13 @@ def main(argv=None) -> int:
         adapter_id = None
         if args.adapters > 0 and rng.random() < args.adapter_rate:
             adapter_id = f"tenant-{i % args.adapters}"
-        reqs.append(gw.submit(prompt, max_new_tokens=args.max_new,
-                              temperature=args.temperature,
-                              priority=i % 2,            # mixed SLO classes
-                              deadline_ms=args.deadline_ms,
-                              adapter_id=adapter_id))
+        reqs.append(gw.submit(
+            prompt,
+            RequestSpec(max_new_tokens=args.max_new,
+                        priority=i % 2,            # mixed SLO classes
+                        deadline_ms=args.deadline_ms,
+                        adapter_id=adapter_id),
+            SamplingParams(temperature=args.temperature, top_p=args.top_p)))
 
     t0 = time.time()
     stats = gw.run_until_drained()

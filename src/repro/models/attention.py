@@ -19,6 +19,7 @@ stays compressed end-to-end).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
 
@@ -32,6 +33,87 @@ from repro.models import act_sharding, layers
 from repro.models.layers import KV_CACHE_SCALE, Params, apply_linear, init_linear, linear_spec
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Paged KV decode state (the opaque KVState a `serving.kv.PagedKV` backend
+# hands to Model.decode_step — block tables instead of a contiguous cache)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PagedKVState:
+    """Block-table view of a shared KV page pool for one decode tick.
+
+    ``k_pool``/``v_pool`` are the whole pool ``(L, n_pages+1, Hkv, page, D)``
+    (last page = scratch for inactive slots); ``tables`` (B, P) int32 are the
+    per-slot block tables (pad → scratch page); ``write_page``/``write_off``
+    (B,) name where this tick's token lands; ``lengths`` (B,) is the live
+    context length *including* the new token. The struct is a pytree so it
+    crosses jit boundaries; Model.decode_step returns it with updated pools.
+    """
+    k_pool: jax.Array
+    v_pool: jax.Array
+    tables: jax.Array
+    write_page: jax.Array
+    write_off: jax.Array
+    lengths: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    PagedKVState,
+    data_fields=["k_pool", "v_pool", "tables", "write_page", "write_off",
+                 "lengths"],
+    meta_fields=[])
+
+
+def gather_pages(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """pool (L, N, H, page, D) × tables (B, P) → contiguous (L, B, H, P*page, D)."""
+    l, _, h, page, d = pool.shape
+    b, p = tables.shape
+    pages = pool[:, tables]                        # (L, B, P, H, page, D)
+    return pages.transpose(0, 1, 3, 2, 4, 5).reshape(l, b, h, p * page, d)
+
+
+def scatter_tokens(pool: jax.Array, page_ids: jax.Array, offsets: jax.Array,
+                   toks: jax.Array) -> jax.Array:
+    """Write toks (L, B, H, D) at (page_ids[b], offsets[b]) in pool
+    (L, N, H, page, D). The separated advanced indices put the broadcast
+    batch dim first, so the value is fed as (B, L, H, D)."""
+    return pool.at[:, page_ids, :, offsets].set(
+        toks.astype(pool.dtype).transpose(1, 0, 2, 3))
+
+
+def gqa_decode_paged(p: Params, x: jax.Array, k_pool_l: jax.Array,
+                     v_pool_l: jax.Array, tables: jax.Array,
+                     write_page: jax.Array, write_off: jax.Array,
+                     lengths: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                     mode: str, *, use_kernel: bool, interpret: bool,
+                     **kw) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token GQA decode straight off one layer of the paged KV pool.
+
+    Scatters the new token's k/v into its page, then dispatches attention to
+    the Pallas ``paged_flash_decode`` kernel (block tables via scalar
+    prefetch, pages stream HBM→VMEM — no contiguous gather) or its XLA
+    gather reference. x: (B, D); k_pool_l/v_pool_l: (N+1, Hkv, page, D).
+    Returns (out (B, D), new k_pool_l, new v_pool_l).
+    """
+    from repro.kernels.flash_decode.ops import paged_decode_attention
+    b, _ = x.shape
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, x[:, None], cfg, mode, positions, **kw)
+    q = q[:, 0]                                          # (B, H, D)
+    k_new = (k_new[:, 0] / KV_CACHE_SCALE).astype(k_pool_l.dtype)
+    v_new = (v_new[:, 0] / KV_CACHE_SCALE).astype(v_pool_l.dtype)
+    # (B,) page ids / offsets, slice between them → batch dim leads: (B, H, D)
+    k_pool_l = k_pool_l.at[write_page, :, write_off].set(k_new)
+    v_pool_l = v_pool_l.at[write_page, :, write_off].set(v_new)
+    out = paged_decode_attention(
+        q, k_pool_l, v_pool_l, tables, lengths,
+        jnp.float32(KV_CACHE_SCALE), use_kernel=use_kernel,
+        interpret=interpret, out_dtype=jnp.float32)
+    out = out.reshape(b, cfg.q_dim).astype(x.dtype)
+    return apply_linear(p["o"], out, mode, **kw), k_pool_l, v_pool_l
 
 
 # ---------------------------------------------------------------------------

@@ -255,6 +255,14 @@ class Model:
     # than f32 during attention (halves the dominant decode HBM reads).
     fuse_proj: bool = False
     kv_widen: str = "f32"
+    # Paged decode attention dispatch when decode_step receives a
+    # `PagedKVState` (serving/kv.py PagedKV backend):
+    #   "auto"   — Pallas paged_flash_decode on TPU (block tables via scalar
+    #              prefetch, pages stream HBM→VMEM), XLA gather reference on
+    #              CPU (bit-identical to the dense path);
+    #   "kernel" — force the Pallas kernel (interpret-mode on CPU; tests);
+    #   "gather" — force the XLA gather reference.
+    paged_attn: str = "auto"
 
     def _c(self, x: jax.Array) -> jax.Array:
         """Constrain the residual stream's sharding (3-D activations only)."""
@@ -428,13 +436,21 @@ class Model:
         return jax.eval_shape(lambda: self.init_cache(batch, max_len))
 
     # -- decode step ------------------------------------------------------------
-    def decode_step(self, p: Params, cache: Params, token_or_embed: jax.Array,
+    def decode_step(self, p: Params, cache, token_or_embed: jax.Array,
                     pos: jax.Array, adapter_idx: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Params]:
         """One token for the whole batch. token: (B,) int32 (or (B, D) stub
         embed). ``adapter_idx`` (B,) selects each slot's resident multi-tenant
-        LoRA adapter (serving/adapters/; 0 = none). Returns (logits (B, V)
-        f32, new cache)."""
+        LoRA adapter (serving/adapters/; 0 = none).
+
+        ``cache`` is either the dict cache from :meth:`init_cache` (dense /
+        ssm / hybrid / MLA) or an :class:`~repro.models.attention.PagedKVState`
+        handed over by a paged KV backend — block tables instead of a
+        contiguous cache, attention dispatched per ``self.paged_attn``.
+        Returns (logits (B, V) f32, new cache of the same kind)."""
+        if isinstance(cache, attn_mod.PagedKVState):
+            return self._paged_decode_step(p, cache, token_or_embed, pos,
+                                           adapter_idx)
         cfg, mode = self.cfg, self.mode
         kw = {"fuse": self.fuse_proj, "kv_dtype": self.kv_widen}
         if adapter_idx is not None:
@@ -478,6 +494,93 @@ class Model:
         x = layers.rms_norm(x, p["final_norm"]["w"], cfg.norm_eps)
         logits = self._logits(p, x)
         return logits, new_cache
+
+    # -- paged decode (block tables through the attention stack) ---------------
+    def _paged_decode_step(self, p: Params, state, token_or_embed: jax.Array,
+                           pos: jax.Array,
+                           adapter_idx: Optional[jax.Array] = None):
+        """decode_step over a PagedKVState: the slot's block table reaches
+        decode attention directly. GQA families only (the paged pool layout
+        is (L, pages, Hkv, page, D))."""
+        cfg = self.cfg
+        assert cfg.attention_kind == "gqa" and cfg.family not in ("ssm", "hybrid"), \
+            "paged decode needs a GQA KV cache"
+        assert pos.ndim == 1, "paged decode is batched (per-slot positions)"
+        mode = self.paged_attn
+        if mode == "auto":
+            mode = "gather" if jax.default_backend() == "cpu" else "kernel"
+        if mode == "gather":
+            return self._paged_decode_gather(p, state, token_or_embed, pos,
+                                             adapter_idx)
+        return self._paged_decode_kernel(p, state, token_or_embed, pos,
+                                         adapter_idx)
+
+    def _paged_decode_gather(self, p, state, token_or_embed, pos, adapter_idx):
+        """XLA reference: gather the contiguous view from the block tables
+        *inside* the jitted step, run the exact dense decode body on it, then
+        scatter the new token's k/v back into its page. Op-for-op the dense
+        math → token-identical dense↔paged greedy outputs."""
+        cache = {"k": attn_mod.gather_pages(state.k_pool, state.tables),
+                 "v": attn_mod.gather_pages(state.v_pool, state.tables)}
+        logits, new_cache = self.decode_step(p, cache, token_or_embed, pos,
+                                             adapter_idx)
+        idx = pos.reshape(1, -1, 1, 1, 1).astype(jnp.int32)
+        k_tok = jnp.take_along_axis(new_cache["k"], idx, axis=3)[:, :, :, 0]
+        v_tok = jnp.take_along_axis(new_cache["v"], idx, axis=3)[:, :, :, 0]
+        k_pool = attn_mod.scatter_tokens(state.k_pool, state.write_page,
+                                         state.write_off, k_tok)
+        v_pool = attn_mod.scatter_tokens(state.v_pool, state.write_page,
+                                         state.write_off, v_tok)
+        return logits, dataclasses.replace(state, k_pool=k_pool, v_pool=v_pool)
+
+    def _paged_decode_kernel(self, p, state, token_or_embed, pos, adapter_idx):
+        """Pallas path: per layer, scatter the token into its page and run
+        `paged_flash_decode` — the block table rides in via scalar prefetch
+        and picks which pool page each context step DMAs HBM→VMEM. No
+        contiguous view is ever materialized."""
+        cfg, mode = self.cfg, self.mode
+        interpret = jax.default_backend() == "cpu"
+        kw = {"fuse": self.fuse_proj, "kv_dtype": self.kv_widen}
+        if adapter_idx is not None:
+            kw["adapter_idx"] = adapter_idx
+        if token_or_embed.ndim == 1:
+            x = layers.embed_tokens(p["embed"], token_or_embed, mode, self.dtype)
+        else:
+            x = token_or_embed.astype(self.dtype)
+
+        def block(lp, h, kp_l, vp_l):
+            hn = layers.rms_norm(h, lp["norm1"]["w"], cfg.norm_eps)
+            a, kp_l, vp_l = attn_mod.gqa_decode_paged(
+                lp["attn"], hn, kp_l, vp_l, state.tables, state.write_page,
+                state.write_off, state.lengths, pos, cfg, mode,
+                use_kernel=True, interpret=interpret, **kw)
+            h = h + a
+            h2 = layers.rms_norm(h, lp["norm2"]["w"], cfg.norm_eps)
+            if "moe" in lp:
+                f, _ = moe_mod.moe_ffn(lp["moe"], h2, cfg, mode, **kw)
+            else:
+                f = layers.apply_ffn(lp["ffn"], h2, cfg.ffn_kind, mode, **kw)
+            return h + f, kp_l, vp_l
+
+        prefix = p.get("prefix", [])
+        kd = len(prefix)
+        kp, vp = state.k_pool, state.v_pool
+        for i, lp in enumerate(prefix):
+            x, k_l, v_l = block(lp, x, kp[i], vp[i])
+            kp = kp.at[i].set(k_l)
+            vp = vp.at[i].set(v_l)
+
+        def body(h, inp):
+            lp, k_l, v_l = inp
+            h, k2, v2 = block(lp, h, k_l, v_l)
+            return h, (k2, v2)
+
+        x, (n_k, n_v) = jax.lax.scan(body, x, (p["layers"], kp[kd:], vp[kd:]))
+        kp = jax.lax.dynamic_update_slice_in_dim(kp, n_k, kd, 0)
+        vp = jax.lax.dynamic_update_slice_in_dim(vp, n_v, kd, 0)
+        x = layers.rms_norm(x, p["final_norm"]["w"], cfg.norm_eps)
+        return self._logits(p, x), dataclasses.replace(state, k_pool=kp,
+                                                       v_pool=vp)
 
     def _cache_pair(self, cache):
         if self.cfg.attention_kind == "mla":

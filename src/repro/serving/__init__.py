@@ -1,8 +1,15 @@
 """Serving: continuous-batching decode engine over the paper's
-context-sharded fp8 KV cache, plus the gateway layer (scheduler, prefix
-cache, streaming frontend, metrics) in `repro.serving.gateway` and the
-multi-tenant QLoRA adapter subsystem in `repro.serving.adapters`."""
+context-sharded fp8 KV cache, the unified request API
+(`repro.serving.api`: SamplingParams / RequestSpec), pluggable KV backends
+(`repro.serving.kv`: DenseKV / PagedKV behind the KVBackend protocol), plus
+the gateway layer (scheduler, prefix cache, streaming frontend, metrics) in
+`repro.serving.gateway` and the multi-tenant QLoRA adapter subsystem in
+`repro.serving.adapters`."""
+from repro.serving.api import RequestSpec, SamplingParams
 from repro.serving.engine import EngineStats, Request, ServeEngine
+from repro.serving.kv import DenseKV, KVBackend, PagedKV
 from repro.serving.paged_kv import PagePool, PagedConfig
 
-__all__ = ["EngineStats", "PagePool", "PagedConfig", "Request", "ServeEngine"]
+__all__ = ["DenseKV", "EngineStats", "KVBackend", "PagePool", "PagedConfig",
+           "PagedKV", "Request", "RequestSpec", "SamplingParams",
+           "ServeEngine"]

@@ -1,0 +1,123 @@
+"""Unified serving API: request/sampling dataclasses + the legacy-kwarg shim.
+
+Before this module, per-request options lived in duplicated (and drifting)
+kwarg lists — ``Gateway.submit(deadline_ms=...)`` vs
+``ServeEngine.submit(deadline_s=...)`` disagreed on the deadline unit, and
+every new option (top-p, seeds, speculative decoding knobs) would have had
+to be threaded through three signatures. Now there are exactly two frozen
+value objects:
+
+  * :class:`SamplingParams` — how tokens are drawn (temperature, top-k,
+    top-p nucleus mass, optional per-request seed). Frozen, hashable,
+    shareable across requests.
+  * :class:`RequestSpec` — everything else about a request: generation
+    budget, eos, SLO (``priority`` class + relative ``deadline_ms``),
+    tenant ``adapter_id``, streaming callback.
+
+``Gateway.submit``, ``ServeEngine.submit`` and the engine's ``Request``
+consume these directly. The **deadline is defined once**: a relative
+millisecond budget from submit time (``RequestSpec.deadline_ms``); the
+engine derives the absolute wall-clock ``Request.deadline_s`` the scheduler
+orders by. Old keyword calls still work through :func:`coerce_submit` but
+raise a ``DeprecationWarning`` (the engine's legacy ``deadline_s`` kwarg is
+interpreted as the absolute deadline it always was).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How output tokens are drawn for one request.
+
+    temperature  0 → greedy (top_k/top_p/seed are then irrelevant).
+    top_k        keep the k highest logits (0 = full softmax).
+    top_p        nucleus sampling: keep the smallest prefix of the sorted
+                 distribution with cumulative probability >= top_p
+                 (1.0 = disabled; the sampler is bit-identical to the
+                 pre-top-p path in that case).
+    seed         per-request RNG stream: draws depend only on
+                 (seed, tokens-generated-so-far), so a seeded request
+                 reproduces its outputs regardless of co-scheduled traffic.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.seed is not None and not -2**31 <= self.seed < 2**31:
+            # the seed rides into the jitted sampler as int32
+            raise ValueError(f"seed must fit int32, got {self.seed}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """Per-request serving options (everything that is not sampling).
+
+    deadline_ms is the SLO budget **relative to submit time** in
+    milliseconds — the single deadline representation across the stack
+    (the old Gateway ``deadline_ms``/engine ``deadline_s`` split is gone).
+    """
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    priority: int = 1                 # lower = more urgent (0: interactive)
+    deadline_ms: Optional[float] = None
+    adapter_id: Optional[str] = None  # tenant fine-tune (serving/adapters/)
+    stream_cb: Optional[Callable] = None   # cb(req, token) per output token
+
+
+_SAMPLING_KEYS = ("temperature", "top_k", "top_p", "seed")
+_SPEC_KEYS = ("max_new_tokens", "eos_id", "priority", "adapter_id",
+              "stream_cb", "deadline_ms")
+_LEGACY_KEYS = frozenset(_SAMPLING_KEYS + _SPEC_KEYS + ("deadline_s",))
+
+
+def coerce_submit(spec: Optional[RequestSpec],
+                  sampling: Optional[SamplingParams],
+                  legacy: dict) -> Tuple[RequestSpec, SamplingParams,
+                                         Optional[float]]:
+    """Normalize a ``submit()`` call to (spec, sampling, absolute_deadline_s).
+
+    ``legacy`` holds old-style keyword arguments; a non-empty dict raises a
+    ``DeprecationWarning`` and is folded into fresh dataclasses. The third
+    return is only non-None for the engine's legacy ``deadline_s`` kwarg
+    (which was always an absolute ``time.time()`` deadline).
+    """
+    deadline_s = None
+    unknown = set(legacy) - _LEGACY_KEYS
+    if unknown:
+        raise TypeError(f"unknown submit() arguments: {sorted(unknown)}")
+    if spec is not None and not isinstance(spec, RequestSpec):
+        raise TypeError(
+            f"spec must be a RequestSpec, got {type(spec).__name__} "
+            "(the old positional submit(prompt, max_new_tokens, ...) form "
+            "is gone — pass RequestSpec(max_new_tokens=...))")
+    if sampling is not None and not isinstance(sampling, SamplingParams):
+        raise TypeError(
+            f"sampling must be SamplingParams, got {type(sampling).__name__}")
+    if any(v is not None for v in legacy.values()):
+        if spec is not None or sampling is not None:
+            raise TypeError(
+                "pass RequestSpec/SamplingParams or legacy keywords, not both")
+        warnings.warn(
+            "submit(**kwargs) is deprecated: pass spec=RequestSpec(...) and "
+            "sampling=SamplingParams(...) instead (deadlines are "
+            "RequestSpec.deadline_ms, relative to submit)",
+            DeprecationWarning, stacklevel=3)
+        sampling = SamplingParams(**{k: legacy[k] for k in _SAMPLING_KEYS
+                                     if legacy.get(k) is not None})
+        spec = RequestSpec(**{k: legacy[k] for k in _SPEC_KEYS
+                              if legacy.get(k) is not None})
+        if legacy.get("deadline_s") is not None:
+            deadline_s = float(legacy["deadline_s"])
+    return (spec if spec is not None else RequestSpec(),
+            sampling if sampling is not None else SamplingParams(),
+            deadline_s)

@@ -10,20 +10,24 @@ token, weights in ROM). This engine generalizes it to the production mesh:
   * **continuous batching**: slots free as sequences finish and are refilled
     from the queue mid-flight; per-slot positions drive the cache scatter and
     attention masks.
-  * **KV backends** (``kv=``): ``"dense"`` reserves a contiguous
-    (L, B, H, max_len, D) cache row per slot — the paper's fixed on-chip SRAM
-    budget. ``"paged"`` replaces it with the shared `PagePool`
-    (serving/paged_kv.py): slots own block tables of fp8 pages, the jitted
-    decode gathers a bucketed page view, runs the same ``decode_step``, and
-    scatters the new token's k/v back into its page — so paged and dense
-    produce token-identical greedy outputs. Paged mode unlocks admission
-    control, preemption and the prefix cache (gateway/).
+  * **KV backends** (``kv=`` a `serving.kv.KVBackend`): `DenseKV` reserves a
+    contiguous (L, B, H, max_len, D) cache row per slot — the paper's fixed
+    on-chip SRAM budget. `PagedKV` replaces it with the shared `PagePool`
+    (serving/paged_kv.py): slots own block tables of fp8 pages and the
+    backend hands the jitted decode a `PagedKVState`, so ``Model.decode_step``
+    reads pages through the block tables directly — the Pallas
+    ``paged_flash_decode`` kernel on TPU (scalar-prefetch block tables, pages
+    stream HBM→VMEM), the XLA gather reference on CPU (op-for-op the dense
+    math → dense and paged produce token-identical greedy outputs). Paged
+    mode unlocks admission control, preemption and the prefix cache
+    (gateway/). There is ONE tick/decode path; the backend only changes what
+    state pytree crosses the jit boundary.
   * **scheduling** is delegated to a pluggable scheduler (default FIFO via
     `gateway.scheduler.Scheduler`): priority classes, per-request deadlines
-    (EDF), admission control backed by ``PagePool.can_admit`` and preemption
-    of low-priority slots when the pool runs dry — the preempted request
-    re-enters the queue with its generated tokens as prompt, so resumed
-    decode replays prefill but loses no tokens.
+    (EDF), admission control backed by the backend's page accounting and
+    preemption of low-priority slots when the pool runs dry — the preempted
+    request re-enters the queue with its generated tokens as prompt, so
+    resumed decode replays prefill but loses no tokens.
   * **prefix cache**: with ``prefix_cache=True`` (paged only), committed
     prompt pages are shared copy-on-write across requests via a token trie
     (gateway/prefix_cache.py); shared spans skip prefill ticks entirely.
@@ -33,9 +37,12 @@ token, weights in ROM). This engine generalizes it to the production mesh:
     distinction") — or ``batched`` mode, a bucketed full-sequence prefill
     per request that splices the resulting cache rows into the live batch
     (beyond-paper; amortizes long prompts).
-  * sampling: greedy or temperature/top-k — top-k is per-slot (a vector
-    argument; 0 = full softmax), so one request's narrow top-k never leaks
-    into its batch neighbours.
+  * **sampling** comes from each request's frozen `SamplingParams`
+    (serving/api.py): greedy, temperature, per-slot top-k, top-p nucleus
+    mass and an optional per-request seed whose draws depend only on
+    (seed, tokens generated) — reproducible regardless of co-scheduled
+    traffic. All vector arguments, so one request's narrow top-k/top-p
+    never leaks into its batch neighbours.
   * **events**: ``on_token / on_done / on_admit / on_preempt / on_expire``
     hooks fire inline; the gateway (gateway/gateway.py) wires them to
     streaming callbacks and the metrics registry.
@@ -49,22 +56,21 @@ token, weights in ROM). This engine generalizes it to the production mesh:
 
 SSM/hybrid archs serve through the same interface (their "cache" is the
 recurrent state; positions only gate the attention blocks, if any). Paged KV
-requires a GQA KV cache — ssm/hybrid/MLA families use ``kv="dense"``.
+requires a GQA KV cache — ssm/hybrid/MLA families use `DenseKV`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.models.transformer import Model
-from repro.serving import paged_kv
-from repro.serving.paged_kv import PagePool, PagedConfig
+from repro.serving.api import RequestSpec, SamplingParams, coerce_submit
+from repro.serving.kv import KVBackend, as_backend
 
 Params = Any
 NEG_INF = -1e30
@@ -72,16 +78,18 @@ NEG_INF = -1e30
 
 @dataclasses.dataclass
 class Request:
+    """A submitted request: the immutable `RequestSpec`/`SamplingParams`
+    pair plus the engine's mutable bookkeeping. ``deadline_s`` is the
+    absolute wall-clock deadline the scheduler orders by, derived once from
+    ``spec.deadline_ms`` (relative to submit) — the only place the deadline
+    unit conversion happens."""
     uid: int
     prompt: List[int]
-    max_new_tokens: int = 32
-    temperature: float = 0.0        # 0 → greedy
-    top_k: int = 0                  # 0 → full softmax
-    eos_id: Optional[int] = None
-    priority: int = 1               # lower = more urgent (class 0: interactive)
+    spec: RequestSpec = dataclasses.field(default_factory=RequestSpec)
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     deadline_s: Optional[float] = None   # absolute time.time() deadline (SLO)
-    adapter_id: Optional[str] = None     # tenant fine-tune (serving/adapters/)
     # filled by the engine
+    max_new_tokens: int = -1             # mutable budget (clamped to max_len)
     state: str = "queued"  # queued|running|preempted|done|cancelled|expired|rejected
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
@@ -93,6 +101,43 @@ class Request:
     prefix_hit_tokens: int = 0      # prompt tokens served from the prefix cache
     prefill_ticks: int = 0          # decode ticks spent consuming the prompt
     _seq: int = 0                   # scheduler arrival order
+
+    def __post_init__(self):
+        if self.max_new_tokens < 0:
+            self.max_new_tokens = self.spec.max_new_tokens
+        if (self.deadline_s is None and self.spec.deadline_ms is not None
+                and self.t_submit):
+            self.deadline_s = self.t_submit + self.spec.deadline_ms / 1e3
+
+    # spec/sampling views (kept as properties so engine internals and the
+    # scheduler read one field of truth)
+    @property
+    def temperature(self) -> float:
+        return self.sampling.temperature
+
+    @property
+    def top_k(self) -> int:
+        return self.sampling.top_k
+
+    @property
+    def top_p(self) -> float:
+        return self.sampling.top_p
+
+    @property
+    def seed(self) -> Optional[int]:
+        return self.sampling.seed
+
+    @property
+    def eos_id(self) -> Optional[int]:
+        return self.spec.eos_id
+
+    @property
+    def priority(self) -> int:
+        return self.spec.priority
+
+    @property
+    def adapter_id(self) -> Optional[str]:
+        return self.spec.adapter_id
 
     @property
     def ttft_s(self) -> float:
@@ -122,18 +167,16 @@ class EngineStats:
 class ServeEngine:
     def __init__(self, model: Model, params: Params, *, max_slots: int = 8,
                  max_len: int = 1024, prefill: str = "token", seed: int = 0,
-                 kv: str = "dense", page: int = 64,
+                 kv: Union[str, KVBackend, None] = None, page: int = 64,
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
                  scheduler=None, adapters=None):
         assert model.mode in ("serve", "qlora")
-        assert kv in ("dense", "paged"), kv
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_mode = prefill
-        self.kv_mode = kv
         self.key = jax.random.PRNGKey(seed)
         # multi-tenant adapters (serving/adapters/AdapterServing): per-request
         # adapter_id selects a frozen ternary LoRA; resident adapters ride in
@@ -147,32 +190,17 @@ class ServeEngine:
             scheduler = Scheduler()
         self.scheduler = scheduler
 
-        self.pool: Optional[PagePool] = None
+        # the KV backend owns cache init/alloc/commit/free; `page`/`n_pages`
+        # only apply to the deprecated kv="paged" string shim
+        self.kv = as_backend(kv, page=page, n_pages=n_pages)
+        self.kv.bind(model, max_slots, max_len)
+        self.pool = self.kv.pool
         self.prefix = None
-        if kv == "paged":
-            assert self.cfg.family not in ("ssm", "hybrid"), \
-                "paged KV needs an attention KV cache (use kv='dense')"
-            assert self.cfg.attention_kind != "mla", \
-                "paged KV supports GQA caches only (use kv='dense')"
-            spec = model.cache_specs(1, 1)
-            pcfg = PagedConfig(
-                n_layers=spec["k"].shape[0],
-                n_kv_heads=self.cfg.num_kv_heads,
-                head_dim=self.cfg.head_dim,
-                page=page,
-                n_pages=n_pages or max_slots * (-(-max_len // page)),
-                dtype=spec["k"].dtype,
-            )
-            self.pool = PagePool(pcfg, max_slots)
-            if prefix_cache:
-                from repro.serving.gateway.prefix_cache import PrefixCache
-                self.prefix = PrefixCache(page)
-            self.cache = None
-            self._paged_decode = jax.jit(self._paged_decode_fn)
-        else:
-            assert not prefix_cache, "prefix_cache requires kv='paged'"
-            self.cache = model.init_cache(max_slots, max_len)
-            self._decode = jax.jit(self._decode_fn)
+        if prefix_cache:
+            assert self.kv.supports_paging, \
+                "prefix_cache requires a paged KV backend (kv=PagedKV(...))"
+            from repro.serving.gateway.prefix_cache import PrefixCache
+            self.prefix = PrefixCache(self.pool.cfg.page)
 
         self.pos = np.zeros((max_slots,), np.int32)       # next write position
         self.slot_adapter = np.zeros((max_slots,), np.int32)  # device slot (0=none)
@@ -184,7 +212,11 @@ class ServeEngine:
         self.stats = EngineStats()
         self._uid = 0
 
-        self._sample = jax.jit(self._sample_fn)
+        # ONE decode path: the backend's state pytree picks the model's
+        # dense or paged decode inside decode_step — no engine branches.
+        self._decode = jax.jit(self._decode_fn)
+        self._sample = jax.jit(self._sample_fn,
+                               static_argnames=("use_topp", "use_seeds"))
 
         # event hooks (wired by the gateway; req-first signatures)
         self.on_token: Optional[Callable[[Request, int, float], None]] = None
@@ -193,31 +225,32 @@ class ServeEngine:
         self.on_preempt: Optional[Callable[[Request], None]] = None
         self.on_expire: Optional[Callable[[Request], None]] = None
 
+    @property
+    def kv_mode(self) -> str:
+        """Back-compat view of the backend kind ("dense"/"paged")."""
+        return self.kv.name
+
+    @property
+    def cache(self):
+        """Back-compat view of DenseKV's contiguous cache (None if paged)."""
+        return getattr(self.kv, "cache", None)
+
     # -- jitted kernels --------------------------------------------------------
-    def _decode_fn(self, params, cache, tokens, pos, adapter_idx=None):
-        logits, cache = self.model.decode_step(params, cache, tokens, pos,
-                                               adapter_idx)
-        return logits, cache
+    def _decode_fn(self, params, kv_state, tokens, pos, adapter_idx=None):
+        logits, kv_state = self.model.decode_step(params, kv_state, tokens,
+                                                  pos, adapter_idx)
+        return logits, kv_state
 
-    def _paged_decode_fn(self, params, pool_k, pool_v, tables, tokens, pos,
-                         page_ids, offsets, adapter_idx=None):
-        """Gather the bucketed page view, run the same decode_step as dense
-        mode, then scatter the new token's k/v back into its page. Inactive
-        slots' rows target the pool's scratch page."""
-        cache = {"k": paged_kv.gather_pages(pool_k, tables),
-                 "v": paged_kv.gather_pages(pool_v, tables)}
-        logits, new_cache = self.model.decode_step(params, cache, tokens, pos,
-                                                   adapter_idx)
-        idx = pos.reshape(1, -1, 1, 1, 1).astype(jnp.int32)
-        k_tok = jnp.take_along_axis(new_cache["k"], idx, axis=3)[:, :, :, 0]
-        v_tok = jnp.take_along_axis(new_cache["v"], idx, axis=3)[:, :, :, 0]
-        pool_k = paged_kv.scatter_tokens(pool_k, page_ids, offsets, k_tok)
-        pool_v = paged_kv.scatter_tokens(pool_v, page_ids, offsets, v_tok)
-        return logits, pool_k, pool_v
-
-    def _sample_fn(self, logits, key, temperature, top_k):
-        """Per-slot sampling: temperature (B,) f32, top_k (B,) int32 — each
-        slot masks to its *own* top-k (0 = full softmax)."""
+    def _sample_fn(self, logits, key, temperature, top_k, top_p, seeds,
+                   has_seed, steps, *, use_topp=True, use_seeds=True):
+        """Per-slot sampling, all array arguments (B,) vectors: temperature
+        f32, top_k int32 (0 = full softmax), top_p f32 nucleus mass (1.0 =
+        off), plus per-request seeded streams (draws keyed by (seed, step)
+        only). ``use_topp``/``use_seeds`` are static: the tick passes False
+        when no slot uses the feature, so the common greedy/top-k graph pays
+        no nucleus sort or per-row seeded draws. With top_p=1.0 and no seeds
+        the output is bit-identical to the historical temperature/top-k
+        sampler either way (the masks are exact no-ops)."""
         greedy = jnp.argmax(logits, axis=-1)
         vocab = logits.shape[-1]
         sorted_desc = -jnp.sort(-logits, axis=-1)
@@ -225,22 +258,44 @@ class ServeEngine:
         thresh = jnp.take_along_axis(sorted_desc, k_idx[:, None], axis=-1)
         masked = jnp.where((top_k[:, None] > 0) & (logits < thresh),
                            NEG_INF, logits)
-        scaled = masked / jnp.maximum(temperature[:, None], 1e-6)
-        sampled = jax.random.categorical(key, scaled, axis=-1)
+        final = masked / jnp.maximum(temperature[:, None], 1e-6)
+        if use_topp:
+            # top-p (nucleus): keep the smallest prefix of the sorted
+            # distribution whose cumulative probability reaches top_p; ties
+            # at the cutoff stay.
+            sorted_scaled = -jnp.sort(-final, axis=-1)
+            probs = jax.nn.softmax(sorted_scaled, axis=-1)
+            csum = jnp.cumsum(probs, axis=-1)
+            keep = (csum - probs) < top_p[:, None]     # prefix-exclusive mass
+            n_keep = jnp.maximum(jnp.sum(keep, axis=-1), 1)
+            cutoff = jnp.take_along_axis(sorted_scaled, n_keep[:, None] - 1,
+                                         axis=-1)
+            apply_p = (top_p < 1.0)[:, None]
+            final = jnp.where(apply_p & (final < cutoff), NEG_INF, final)
+        sampled = jax.random.categorical(key, final, axis=-1)
+        if use_seeds:
+            def seeded_draw(seed, step, row):
+                k = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+                return jax.random.categorical(k, row)
+
+            seeded = jax.vmap(seeded_draw)(seeds, steps, final)
+            sampled = jnp.where(has_seed, seeded, sampled)
         use_greedy = temperature <= 0.0
         return jnp.where(use_greedy, greedy, sampled).astype(jnp.int32)
 
     # -- public API ---------------------------------------------------------------
-    def submit(self, prompt: List[int], max_new_tokens: int = 32,
-               temperature: float = 0.0, top_k: int = 0,
-               eos_id: Optional[int] = None, priority: int = 1,
-               deadline_s: Optional[float] = None,
-               adapter_id: Optional[str] = None) -> Request:
+    def submit(self, prompt: List[int], spec: Optional[RequestSpec] = None,
+               sampling: Optional[SamplingParams] = None,
+               **legacy) -> Request:
+        """Enqueue a request described by a `RequestSpec` (+ optional
+        `SamplingParams`). Old keyword arguments (max_new_tokens=...,
+        temperature=..., deadline_s=<absolute>, ...) are accepted behind a
+        DeprecationWarning."""
+        spec, sampling, deadline_s = coerce_submit(spec, sampling, legacy)
         self._uid += 1
-        req = Request(self._uid, list(prompt), max_new_tokens, temperature,
-                      top_k, eos_id, priority=priority, deadline_s=deadline_s,
-                      adapter_id=adapter_id, t_submit=time.time())
-        if adapter_id is not None and not self._adapter_servable(adapter_id):
+        req = Request(self._uid, list(prompt), spec=spec, sampling=sampling,
+                      deadline_s=deadline_s, t_submit=time.time())
+        if req.adapter_id is not None and not self._adapter_servable(req.adapter_id):
             # unknown tenant, no adapter runtime, or an adapter bigger than
             # the whole SRAM budget: it could never be scheduled
             req.state = "rejected"
@@ -327,14 +382,14 @@ class ServeEngine:
         """Free pages required to *start* the request (prompt + 1 token)."""
         feed, _ = self._clamped_feed(req)
         hit = self.prefix.lookup(feed) if self.prefix is not None else 0
-        return self.pool.pages_for(len(feed) + 1) - hit
+        return self.kv.pages_for(len(feed) + 1) - hit
 
     def _pages_lifetime(self, req: Request) -> int:
-        """Pool pages the request's slot will hold at its *final* context
+        """Backend pages the request's slot will hold at its *final* context
         length (prefix hits included — shared pages still occupy the pool).
         Must fit total capacity or the request can never complete."""
         feed, remaining_new = self._clamped_feed(req)
-        return self.pool.pages_for(min(len(feed) + remaining_new, self.max_len))
+        return self.kv.pages_for(min(len(feed) + remaining_new, self.max_len))
 
     def _can_admit(self, req: Request) -> bool:
         if (self.adapters is not None and req.adapter_id is not None
@@ -342,13 +397,12 @@ class ServeEngine:
             # every budget byte is pinned by in-flight adapters — the request
             # waits until a slot drains and unpins one
             return False
-        if self.kv_mode != "paged":
-            return True
         # a request whose final context exceeds the whole pool would only
         # crash mid-flight — keep it queued instead of admitting it
-        if self._pages_lifetime(req) > self.pool.cfg.n_pages:
+        # (DenseKV reports zero cost / unbounded capacity: always admissible)
+        if self._pages_lifetime(req) > self.kv.capacity_pages:
             return False
-        return self.pool.pages_free >= self._pages_needed(req)
+        return self.kv.pages_free >= self._pages_needed(req)
 
     def _admit(self) -> None:
         now = time.time()
@@ -362,7 +416,7 @@ class ServeEngine:
                 break
             req = self.scheduler.pop_next(self._can_admit,
                                           prefer=self._adapter_warm)
-            if req is None and self.kv_mode == "paged":
+            if req is None and self.kv.supports_paging:
                 req = self._admit_under_pressure()
             if req is None:
                 break
@@ -375,19 +429,19 @@ class ServeEngine:
         Preempting without that check livelocks: the victim is re-admitted
         by the very next pop and zero progress is made every tick."""
         head = self.scheduler.peek(
-            lambda r: self._pages_lifetime(r) <= self.pool.cfg.n_pages
+            lambda r: self._pages_lifetime(r) <= self.kv.capacity_pages
             and (self.adapters is None or r.adapter_id is None
                  or self.adapters.can_serve(r.adapter_id)))
         if head is None:
             return None
         needed = self._pages_needed(head)
-        short = needed - self.pool.pages_free
+        short = needed - self.kv.pages_free
         if short > 0 and self.prefix is not None:
-            self.pool.free_pages(self.prefix.evict(short))
+            self.kv.free_pages(self.prefix.evict(short))
         if not self._can_admit(head):
             # plan the victim set first: count only pages release() actually
             # frees (owned pages — cache-shared ones stay resident)
-            budget = self.pool.pages_free
+            budget = self.kv.pages_free
             pairs = self._active_pairs()
             victims: List[int] = []
             while budget < needed:
@@ -395,8 +449,7 @@ class ServeEngine:
                     pairs, below_priority=head.priority)
                 if slot is None:
                     return None          # preemption can't help → no thrash
-                budget += (len(self.pool.tables[slot])
-                           - self.slot_cached[slot])
+                budget += self.kv.slot_pages(slot) - self.slot_cached[slot]
                 victims.append(slot)
                 pairs = [(i, r) for i, r in pairs if i != slot]
             for slot in victims:
@@ -427,11 +480,11 @@ class ServeEngine:
                 self.pool.lengths[slot] = matched
                 req.prefix_hit_tokens = matched
                 self.stats.prefix_hit_tokens += matched
-        if self.kv_mode == "paged":
-            # eager reservation: claim the prompt's pages (plus the first
-            # output token) now, so admission control sees the true footprint
-            # of already-placed requests instead of racing lazy allocation.
-            self.pool.reserve(slot, len(feed) + 1)
+        # eager reservation: claim the prompt's pages (plus the first output
+        # token) now, so admission control sees the true footprint of
+        # already-placed requests instead of racing lazy allocation.
+        # (DenseKV: no-op — the slot's max_len row is always reserved.)
+        self.kv.reserve(slot, len(feed) + 1)
         remainder = feed[matched:]
         # SSM/hybrid prefill must thread recurrent state → token mode
         # (model.prefill fills the KV cache only; see models/transformer).
@@ -453,10 +506,11 @@ class ServeEngine:
     def _batched_prefill(self, slot: int, feed: List[int],
                          matched: int = 0) -> None:
         """Run full-sequence prefill for one request (bucketed length) and
-        splice its cache rows into the live batch cache at ``slot`` (dense)
-        or write them into the slot's pages (paged). ``matched`` > 0 resumes
-        after a prefix-cache hit: positions offset by the cached span and the
-        remainder attends the already-committed prefix pages."""
+        hand the resulting cache rows to the backend — spliced into the live
+        batch cache (dense) or written into the slot's pages (paged).
+        ``matched`` > 0 resumes after a prefix-cache hit: positions offset by
+        the cached span and the remainder attends the already-committed
+        prefix pages."""
         n = len(feed) - 1          # last prompt token goes through decode
         if n <= 0:
             return
@@ -466,39 +520,34 @@ class ServeEngine:
         toks[0, :n] = feed[:n]
         kwargs = {}
         if matched:
-            gk, gv = self.pool.gather_slot(slot, self.slot_cached[slot])
             kwargs["pos_offset"] = matched
-            kwargs["prefix_kv"] = {"k": gk, "v": gv}
+            kwargs["prefix_kv"] = self.kv.prefix_kv(slot, self.slot_cached[slot])
         if self.adapters is not None and self.slot_adapter[slot]:
             kwargs["adapter_idx"] = jnp.asarray([self.slot_adapter[slot]],
                                                 jnp.int32)
         _, sub_cache = self.model.prefill(self._effective_params(),
                                           {"tokens": jnp.asarray(toks)},
                                           self.max_len, **kwargs)
-        if self.kv_mode == "paged":
-            self.pool.write_span(slot, matched,
-                                 sub_cache["k"][:, 0, :, matched:matched + n],
-                                 sub_cache["v"][:, 0, :, matched:matched + n])
-        else:
-            self.cache = _splice_cache(self.cache, sub_cache, slot)
+        self.kv.write_prefill(slot, matched, sub_cache, n)
         self.pos[slot] = matched + n
 
-    # -- paged capacity / preemption ----------------------------------------------
+    # -- capacity / preemption ------------------------------------------------------
     def _ensure_capacity(self, active: List[int]) -> List[int]:
         """Guarantee every active slot can write its next token. Evicts
         resident prefix pages first, then preempts victims (pages released,
-        request re-queued with its generated tokens as prompt)."""
+        request re-queued with its generated tokens as prompt). DenseKV
+        reports zero page cost, so this is a no-op there."""
         while True:
             need = sum(
-                max(0, self.pool.pages_for(int(self.pos[i]) + 1)
-                    - len(self.pool.tables[i]))
+                max(0, self.kv.pages_for(int(self.pos[i]) + 1)
+                    - self.kv.slot_pages(i))
                 for i in active)
-            short = need - self.pool.pages_free
+            short = need - self.kv.pages_free
             if short <= 0:
                 return active
             if self.prefix is not None:
-                self.pool.free_pages(self.prefix.evict(short))
-                if need <= self.pool.pages_free:
+                self.kv.free_pages(self.prefix.evict(short))
+                if need <= self.kv.pages_free:
                     return active
             victim = self.scheduler.pick_victim(
                 [(i, self.slot_req[i]) for i in active])
@@ -525,10 +574,9 @@ class ServeEngine:
                 and req.adapter_id is not None):
             self.adapters.release(req.adapter_id)   # unpin → evictable
         self.slot_adapter[slot] = 0
-        if self.kv_mode == "paged":
-            if self.prefix is not None:
-                self.prefix.decref(self.slot_keys[slot])
-            self.pool.release(slot, keep=self.slot_cached[slot])
+        if self.prefix is not None:
+            self.prefix.decref(self.slot_keys[slot])
+        self.kv.release(slot, keep=self.slot_cached[slot])
         self.slot_req[slot] = None
         self.pending_prompt[slot] = []
         self.slot_feed[slot] = []
@@ -545,44 +593,23 @@ class ServeEngine:
             return None
         return jnp.asarray(self.slot_adapter)
 
-    def _paged_tick_decode(self, active: List[int], tokens: np.ndarray):
-        pool = self.pool
-        for i in active:
-            pool.reserve(i, int(self.pos[i]) + 1)
-        max_pages = max(len(pool.tables[i]) for i in active)
-        view = 1 << max(0, (max_pages - 1).bit_length())
-        view = min(view, pool.pages_for(self.max_len))
-        view = max(view, max_pages)
-        tables = pool.batch_tables(active, view, self.max_slots)
-        page_ids = np.full((self.max_slots,), pool.scratch_page, np.int32)
-        offsets = np.zeros((self.max_slots,), np.int32)
-        for i in active:
-            p = int(self.pos[i])
-            page_ids[i] = pool.tables[i][p // pool.cfg.page]
-            offsets[i] = p % pool.cfg.page
-        logits, pool.k, pool.v = self._paged_decode(
-            self._effective_params(), pool.k, pool.v, jnp.asarray(tables),
-            jnp.asarray(tokens), jnp.asarray(self.pos),
-            jnp.asarray(page_ids), jnp.asarray(offsets),
-            self._adapter_idx())
-        for i in active:
-            pool.lengths[i] = max(int(pool.lengths[i]), int(self.pos[i]) + 1)
-        return logits
-
     def tick(self) -> None:
         """One decode step for the whole slot batch."""
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
-        if self.kv_mode == "paged":
-            active = self._ensure_capacity(active)
-            if not active:
-                return
+        active = self._ensure_capacity(active)
+        if not active:
+            return
 
         tokens = np.zeros((self.max_slots,), np.int32)
         temps = np.zeros((self.max_slots,), np.float32)
         topks = np.zeros((self.max_slots,), np.int32)
+        topps = np.ones((self.max_slots,), np.float32)
+        seeds = np.zeros((self.max_slots,), np.int32)
+        has_seed = np.zeros((self.max_slots,), bool)
+        steps = np.zeros((self.max_slots,), np.int32)
         for i in active:
             req = self.slot_req[i]
             if self.pending_prompt[i]:
@@ -591,18 +618,26 @@ class ServeEngine:
                 tokens[i] = req.output[-1]
             temps[i] = req.temperature
             topks[i] = req.top_k
+            topps[i] = req.top_p
+            if req.seed is not None:
+                seeds[i] = req.seed
+                has_seed[i] = True
+            steps[i] = len(req.output)
 
-        if self.kv_mode == "paged":
-            logits = self._paged_tick_decode(active, tokens)
-        else:
-            logits, self.cache = self._decode(self._effective_params(),
-                                              self.cache,
-                                              jnp.asarray(tokens),
-                                              jnp.asarray(self.pos),
-                                              self._adapter_idx())
+        state = self.kv.decode_state(active, self.pos)
+        logits, new_state = self._decode(self._effective_params(), state,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(self.pos),
+                                         self._adapter_idx())
+        self.kv.commit(new_state, active, self.pos)
         self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(self._sample(logits, sub, jnp.asarray(temps),
-                                      jnp.asarray(topks)))
+                                      jnp.asarray(topks), jnp.asarray(topps),
+                                      jnp.asarray(seeds),
+                                      jnp.asarray(has_seed),
+                                      jnp.asarray(steps),
+                                      use_topp=bool(np.any(topps < 1.0)),
+                                      use_seeds=bool(np.any(has_seed))))
 
         now = time.time()
         self.stats.ticks += 1
@@ -640,16 +675,3 @@ class ServeEngine:
                 self._release_slot(i)
                 if self.on_done:
                     self.on_done(req)
-
-
-def _splice_cache(cache, sub_cache, slot: int):
-    """Insert a (batch=1) cache into the batch cache at ``slot`` (batch is
-    always axis 1 across all cache layouts: k/v, latent, ssm, conv)."""
-
-    def one(full, sub):
-        idx = [0] * full.ndim
-        idx[1] = slot
-        return jax.lax.dynamic_update_slice(full, sub.astype(full.dtype),
-                                            tuple(idx))
-
-    return jax.tree.map(one, cache, sub_cache)

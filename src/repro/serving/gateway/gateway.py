@@ -16,9 +16,11 @@ callback surface is what an async transport (HTTP/SSE) would attach to.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Dict, Iterator, List, Optional
 
+from repro.serving.api import RequestSpec, SamplingParams, coerce_submit
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.gateway.metrics import Metrics
 
@@ -37,32 +39,31 @@ class Gateway:
         engine.on_expire = self._on_expire
 
     # -- frontend API ---------------------------------------------------------
-    def submit(self, prompt: List[int], *, max_new_tokens: int = 32,
-               temperature: float = 0.0, top_k: int = 0,
-               eos_id: Optional[int] = None, priority: int = 1,
-               deadline_ms: Optional[float] = None,
-               adapter_id: Optional[str] = None,
-               stream_cb: Optional[TokenCallback] = None) -> Request:
-        """Enqueue a request. ``deadline_ms`` is an SLO relative to now;
-        ``adapter_id`` selects a registered tenant fine-tune;
-        ``stream_cb(req, token)`` fires for every generated token."""
-        deadline_s = (time.time() + deadline_ms / 1e3
-                      if deadline_ms is not None else None)
-        req = self.engine.submit(prompt, max_new_tokens=max_new_tokens,
-                                 temperature=temperature, top_k=top_k,
-                                 eos_id=eos_id, priority=priority,
-                                 deadline_s=deadline_s, adapter_id=adapter_id)
+    def submit(self, prompt: List[int], spec: Optional[RequestSpec] = None,
+               sampling: Optional[SamplingParams] = None,
+               **legacy) -> Request:
+        """Enqueue a request described by a `RequestSpec` (+ optional
+        `SamplingParams`) — the same dataclasses the engine consumes, so the
+        gateway adds no kwarg list of its own. ``spec.deadline_ms`` is the
+        SLO relative to now; ``spec.adapter_id`` selects a registered tenant
+        fine-tune; ``spec.stream_cb(req, token)`` fires for every generated
+        token. Old keyword calls still work behind a DeprecationWarning."""
+        spec, sampling, deadline_s = coerce_submit(spec, sampling, legacy)
+        if deadline_s is not None:      # legacy absolute deadline → relative
+            spec = dataclasses.replace(
+                spec, deadline_ms=(deadline_s - time.time()) * 1e3)
+        req = self.engine.submit(prompt, spec, sampling)
         self.metrics.inc("requests_submitted")
         if req.state == "rejected":
             self.metrics.inc("requests_rejected")
         else:
-            if adapter_id is not None:
+            if spec.adapter_id is not None:
                 # accepted ⇒ adapter_id is registered: per-tenant counter
                 # cardinality stays bounded by the registry, not by clients
                 self.metrics.inc("adapter_requests_total")
-                self.metrics.inc(f"adapter_requests__{adapter_id}")
-            if stream_cb is not None:
-                self._stream_cbs[req.uid] = stream_cb
+                self.metrics.inc(f"adapter_requests__{spec.adapter_id}")
+            if spec.stream_cb is not None:
+                self._stream_cbs[req.uid] = spec.stream_cb
         return req
 
     def cancel(self, uid: int) -> bool:

@@ -4,8 +4,11 @@ Policy (documented, deliberately simple — the engine is tick-synchronous):
 
   * **priority classes**: lower number = more urgent. Class 0 is "interactive",
     higher classes are batch/background. Strict priority across classes.
-  * **EDF within a class**: entries order by (deadline, arrival). Requests
-    without a deadline sort after all deadlined ones.
+  * **EDF within a class**: entries order by (deadline, arrival) on the
+    absolute ``Request.deadline_s`` the engine derives once from
+    ``RequestSpec.deadline_ms`` (serving/api.py — the single deadline
+    representation). Requests without a deadline sort after all deadlined
+    ones.
   * **admission control**: ``pop_next(can_admit)`` hands out the best entry
     whose KV footprint fits the page pool *right now* (the engine passes a
     ``PagePool.can_admit``-backed predicate). A blocked head does not wedge

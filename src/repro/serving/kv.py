@@ -1,0 +1,254 @@
+"""KV backends: the engine's cache contract behind one protocol.
+
+The engine used to carry a ``kv="dense"|"paged"`` string switch with two
+parallel jitted decode paths (a contiguous cache vs a per-tick host gather
+of the page pool). Both are gone: a :class:`KVBackend` owns cache
+**init / alloc / commit / free** plus the admission accounting, and hands
+the jitted decode an opaque *state* pytree that ``Model.decode_step``
+understands —
+
+  * :class:`DenseKV` — the model's contiguous dict cache (GQA / MLA / SSM /
+    hybrid): state *is* the cache, capacity is unbounded (every slot already
+    reserved ``max_len``).
+  * :class:`PagedKV` — the shared fp8 :class:`PagePool`: state is a
+    :class:`~repro.models.attention.PagedKVState` (pool + block tables +
+    this tick's write targets), so decode attention consumes pages directly
+    — the Pallas ``paged_flash_decode`` kernel on TPU (scalar-prefetch block
+    tables, no contiguous gather), the XLA gather reference on CPU.
+
+The engine talks only to this protocol; ``kv="paged"`` strings are accepted
+by :func:`as_backend` behind a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from typing import Any, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import PagedKVState
+from repro.serving.paged_kv import PagePool, PagedConfig
+
+Params = Any
+
+
+def _splice_cache(cache, sub_cache, slot: int):
+    """Insert a (batch=1) cache into the batch cache at ``slot`` (batch is
+    always axis 1 across all cache layouts: k/v, latent, ssm, conv)."""
+
+    def one(full, sub):
+        idx = [0] * full.ndim
+        idx[1] = slot
+        return jax.lax.dynamic_update_slice(full, sub.astype(full.dtype),
+                                            tuple(idx))
+
+    return jax.tree.map(one, cache, sub_cache)
+
+
+class KVBackend:
+    """Owns KV storage for the engine's decode slots.
+
+    Page-accounting methods default to the dense answers (zero cost,
+    unbounded capacity) so the engine's admission / capacity logic is
+    backend-generic — no string branches.
+    """
+
+    name = "?"
+    supports_paging = False
+    pool: Optional[PagePool] = None
+
+    def bind(self, model, max_slots: int, max_len: int) -> None:
+        """Allocate storage for ``max_slots`` sequences of ``max_len``."""
+        raise NotImplementedError
+
+    # -- admission / capacity accounting --------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        return 0
+
+    @property
+    def pages_free(self) -> float:
+        return math.inf
+
+    @property
+    def capacity_pages(self) -> float:
+        return math.inf
+
+    def slot_pages(self, slot: int) -> int:
+        return 0
+
+    # -- alloc / free ---------------------------------------------------------
+    def reserve(self, slot: int, upto_tokens: int) -> None:
+        pass
+
+    def release(self, slot: int, keep: int = 0) -> None:
+        pass
+
+    def free_pages(self, page_ids: List[int]) -> None:
+        pass
+
+    # -- the decode-tick contract --------------------------------------------
+    def decode_state(self, active: Sequence[int], pos: np.ndarray):
+        """Build the state pytree ``Model.decode_step`` consumes this tick."""
+        raise NotImplementedError
+
+    def commit(self, new_state, active: Sequence[int], pos: np.ndarray) -> None:
+        """Store the decode step's updated state."""
+        raise NotImplementedError
+
+    def write_prefill(self, slot: int, start: int, sub_cache, n: int) -> None:
+        """Store a batched-prefill result (a batch-1 cache covering
+        positions ``start .. start+n``) into the slot's storage."""
+        raise NotImplementedError
+
+    def prefix_kv(self, slot: int, n_pages: int):
+        """Materialize the slot's cached prefix k/v for a mid-sequence
+        prefill resume (prefix-cache hit). Paged-only."""
+        raise NotImplementedError
+
+
+class DenseKV(KVBackend):
+    """Contiguous per-slot cache — the paper's fixed on-chip SRAM budget.
+    Works for every cache family (GQA, MLA, SSM, hybrid)."""
+
+    name = "dense"
+
+    def bind(self, model, max_slots: int, max_len: int) -> None:
+        assert not hasattr(self, "cache"), \
+            "KVBackend instances are engine-owned: build a fresh one per engine"
+        self.cache = model.init_cache(max_slots, max_len)
+
+    def decode_state(self, active, pos):
+        return self.cache
+
+    def commit(self, new_state, active, pos) -> None:
+        self.cache = new_state
+
+    def write_prefill(self, slot, start, sub_cache, n) -> None:
+        self.cache = _splice_cache(self.cache, sub_cache, slot)
+
+
+class PagedKV(KVBackend):
+    """vLLM-style paging over the shared fp8 pool: slots own block tables,
+    decode attention reads pages through them (no per-slot max_len
+    reservation). Unlocks admission control, preemption and the prefix
+    cache."""
+
+    name = "paged"
+    supports_paging = True
+
+    def __init__(self, page: int = 64, n_pages: Optional[int] = None):
+        self.page = page
+        self.n_pages = n_pages
+        self.pool = None
+
+    def bind(self, model, max_slots: int, max_len: int) -> None:
+        assert self.pool is None, \
+            "KVBackend instances are engine-owned: build a fresh one per engine"
+        cfg = model.cfg
+        assert cfg.family not in ("ssm", "hybrid"), \
+            "paged KV needs an attention KV cache (use DenseKV)"
+        assert cfg.attention_kind != "mla", \
+            "paged KV supports GQA caches only (use DenseKV)"
+        spec = model.cache_specs(1, 1)
+        pcfg = PagedConfig(
+            n_layers=spec["k"].shape[0],
+            n_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim,
+            page=self.page,
+            n_pages=self.n_pages or max_slots * (-(-max_len // self.page)),
+            dtype=spec["k"].dtype,
+        )
+        self.pool = PagePool(pcfg, max_slots)
+        self.max_slots = max_slots
+        self.max_len = max_len
+
+    # -- accounting -----------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        return self.pool.pages_for(tokens)
+
+    @property
+    def pages_free(self) -> int:
+        return self.pool.pages_free
+
+    @property
+    def capacity_pages(self) -> int:
+        return self.pool.cfg.n_pages
+
+    def slot_pages(self, slot: int) -> int:
+        return len(self.pool.tables[slot])
+
+    # -- alloc / free ---------------------------------------------------------
+    def reserve(self, slot: int, upto_tokens: int) -> None:
+        self.pool.reserve(slot, upto_tokens)
+
+    def release(self, slot: int, keep: int = 0) -> None:
+        self.pool.release(slot, keep=keep)
+
+    def free_pages(self, page_ids: List[int]) -> None:
+        self.pool.free_pages(page_ids)
+
+    # -- decode tick ----------------------------------------------------------
+    def decode_state(self, active, pos) -> PagedKVState:
+        """Block tables + write targets for this tick. The table view is
+        bucketed (next power of two over the longest active table, capped at
+        the max_len footprint) so jit recompiles only on bucket growth;
+        inactive rows point at the pool's scratch page."""
+        pool = self.pool
+        for i in active:
+            pool.reserve(i, int(pos[i]) + 1)
+        max_pages = max(len(pool.tables[i]) for i in active)
+        view = 1 << max(0, (max_pages - 1).bit_length())
+        view = min(view, pool.pages_for(self.max_len))
+        view = max(view, max_pages)
+        tables = pool.batch_tables(active, view, self.max_slots)
+        page_ids = np.full((self.max_slots,), pool.scratch_page, np.int32)
+        offsets = np.zeros((self.max_slots,), np.int32)
+        lengths = np.zeros((self.max_slots,), np.int32)
+        for i in active:
+            p = int(pos[i])
+            page_ids[i] = pool.tables[i][p // pool.cfg.page]
+            offsets[i] = p % pool.cfg.page
+            lengths[i] = p + 1
+        return PagedKVState(
+            k_pool=pool.k, v_pool=pool.v,
+            tables=jnp.asarray(tables),
+            write_page=jnp.asarray(page_ids),
+            write_off=jnp.asarray(offsets),
+            lengths=jnp.asarray(lengths))
+
+    def commit(self, new_state: PagedKVState, active, pos) -> None:
+        self.pool.k = new_state.k_pool
+        self.pool.v = new_state.v_pool
+        for i in active:
+            self.pool.lengths[i] = max(int(self.pool.lengths[i]),
+                                       int(pos[i]) + 1)
+
+    def write_prefill(self, slot, start, sub_cache, n) -> None:
+        self.pool.write_span(slot, start,
+                             sub_cache["k"][:, 0, :, start:start + n],
+                             sub_cache["v"][:, 0, :, start:start + n])
+
+    def prefix_kv(self, slot, n_pages):
+        gk, gv = self.pool.gather_slot(slot, n_pages)
+        return {"k": gk, "v": gv}
+
+
+def as_backend(kv: Union[str, KVBackend, None], *, page: int = 64,
+               n_pages: Optional[int] = None) -> KVBackend:
+    """Normalize the engine's ``kv`` argument to a backend instance.
+    Strings are the legacy interface → ``DeprecationWarning``."""
+    if kv is None:
+        return DenseKV()
+    if isinstance(kv, KVBackend):
+        return kv
+    if kv in ("dense", "paged"):
+        warnings.warn(
+            f"kv={kv!r} strings are deprecated: pass kv=DenseKV() or "
+            "kv=PagedKV(page=..., n_pages=...) (repro.serving.kv)",
+            DeprecationWarning, stacklevel=3)
+        return PagedKV(page=page, n_pages=n_pages) if kv == "paged" \
+            else DenseKV()
+    raise ValueError(f"unknown kv backend: {kv!r}")

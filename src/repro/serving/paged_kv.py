@@ -27,6 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# jit-friendly functional forms live beside the model's PagedKVState (the
+# paged decode path consumes them inside Model.decode_step); re-exported
+# here for the pool's own helpers and back-compat.
+from repro.models.attention import gather_pages, scatter_tokens
+
 
 @dataclasses.dataclass
 class PagedConfig:
@@ -183,21 +188,3 @@ class PagePool:
         self.lengths[slot] = max(self.lengths[slot], start + t)
 
 
-# -- jit-friendly functional forms (used from the engine's jitted decode) -----
-
-
-def gather_pages(pool: jax.Array, tables: jax.Array) -> jax.Array:
-    """pool (L, N, H, page, D) × tables (B, P) → contiguous (L, B, H, P*page, D)."""
-    l, _, h, page, d = pool.shape
-    b, p = tables.shape
-    pages = pool[:, tables]                        # (L, B, P, H, page, D)
-    return pages.transpose(0, 1, 3, 2, 4, 5).reshape(l, b, h, p * page, d)
-
-
-def scatter_tokens(pool: jax.Array, page_ids: jax.Array, offsets: jax.Array,
-                   toks: jax.Array) -> jax.Array:
-    """Write toks (L, B, H, D) at (page_ids[b], offsets[b]) in pool
-    (L, N, H, page, D). The separated advanced indices put the broadcast
-    batch dim first, so the value is fed as (B, L, H, D)."""
-    return pool.at[:, page_ids, :, offsets].set(
-        toks.astype(pool.dtype).transpose(1, 0, 2, 3))

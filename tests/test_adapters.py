@@ -17,7 +17,7 @@ from repro.kernels.batched_lora.batched_lora import batched_lora_matmul
 from repro.kernels.batched_lora.ref import batched_lora_ref
 from repro.launch.train import reduce_config
 from repro.models.transformer import Model
-from repro.serving import ServeEngine
+from repro.serving import PagedKV, RequestSpec, ServeEngine
 from repro.serving.adapters import (AdapterCache, AdapterRegistry,
                                     AdapterServing, AdapterSpec,
                                     synthetic_adapter_stacks, target_dims)
@@ -27,6 +27,11 @@ from repro.serving.gateway import Gateway, Scheduler
 jax.config.update("jax_enable_x64", False)
 
 SPEC = AdapterSpec(rank=8, alpha=16.0, targets=("q", "v"))
+
+
+def _kv(name):
+    """Map a parametrize id to a fresh KV backend instance."""
+    return PagedKV(page=8) if name == "paged" else None
 
 
 @pytest.fixture(scope="module")
@@ -248,10 +253,9 @@ class TestAdapterCache:
 # ---------------------------------------------------------------------------
 
 
-def _req(uid, prompt_len=4, **kw):
-    defaults = dict(prompt=list(range(prompt_len)), t_submit=time.time())
-    defaults.update(kw)
-    return Request(uid, **defaults)
+def _req(uid, prompt_len=4, deadline_s=None, **spec_kw):
+    return Request(uid, list(range(prompt_len)), spec=RequestSpec(**spec_kw),
+                   deadline_s=deadline_s, t_submit=time.time())
 
 
 class TestAffinityScheduling:
@@ -296,14 +300,17 @@ class TestAffinityScheduling:
         ad = make_serving(model, registry, budget_adapters=1, max_resident=1)
         eng = ServeEngine(model, params, max_slots=1, max_len=64,
                           adapters=ad)
-        warm_up = eng.submit([1, 2, 3], max_new_tokens=2,
-                             adapter_id="tenant-0")
+        warm_up = eng.submit([1, 2, 3],
+                             RequestSpec(max_new_tokens=2,
+                                         adapter_id="tenant-0"))
         eng.run_until_drained()
         assert warm_up.state == "done" and ad.is_resident("tenant-0")
-        hi_cold = eng.submit([4, 5], max_new_tokens=2, priority=0,
-                             adapter_id="tenant-1")
-        lo_warm = eng.submit([6, 7], max_new_tokens=2, priority=1,
-                             adapter_id="tenant-0")
+        hi_cold = eng.submit([4, 5],
+                             RequestSpec(max_new_tokens=2, priority=0,
+                                         adapter_id="tenant-1"))
+        lo_warm = eng.submit([6, 7],
+                             RequestSpec(max_new_tokens=2, priority=1,
+                                         adapter_id="tenant-0"))
         eng.tick()
         assert hi_cold.state == "running"
         assert lo_warm.state == "queued"
@@ -319,9 +326,10 @@ class TestAffinityScheduling:
 class TestMultiTenantServing:
     def _solo(self, model, params, registry, kv, prompt, adapter_id):
         ad = make_serving(model, registry)
-        eng = ServeEngine(model, params, max_slots=1, max_len=64, kv=kv,
-                          page=8, adapters=ad)
-        r = eng.submit(prompt, max_new_tokens=6, adapter_id=adapter_id)
+        eng = ServeEngine(model, params, max_slots=1, max_len=64,
+                          kv=_kv(kv), adapters=ad)
+        r = eng.submit(prompt, RequestSpec(max_new_tokens=6,
+                                           adapter_id=adapter_id))
         eng.run_until_drained()
         assert r.state == "done"
         return r.output
@@ -337,9 +345,9 @@ class TestMultiTenantServing:
                    for _ in range(5)]
         tenants = [None, "tenant-0", "tenant-1", "tenant-2", None]
         ad = make_serving(model, registry)
-        eng = ServeEngine(model, params, max_slots=4, max_len=64, kv=kv,
-                          page=8, adapters=ad)
-        reqs = [eng.submit(p, max_new_tokens=6, adapter_id=t)
+        eng = ServeEngine(model, params, max_slots=4, max_len=64, kv=_kv(kv),
+                          adapters=ad)
+        reqs = [eng.submit(p, RequestSpec(max_new_tokens=6, adapter_id=t))
                 for p, t in zip(prompts, tenants)]
         eng.run_until_drained()
         assert all(r.state == "done" for r in reqs)
@@ -354,17 +362,18 @@ class TestMultiTenantServing:
         no adapter subsystem at all."""
         model, params = model_params
         prompt = list(range(20, 29))
-        plain = ServeEngine(model, params, max_slots=2, max_len=64, kv=kv,
-                            page=8)
-        r0 = plain.submit(prompt, max_new_tokens=6)
+        plain = ServeEngine(model, params, max_slots=2, max_len=64,
+                            kv=_kv(kv))
+        r0 = plain.submit(prompt, RequestSpec(max_new_tokens=6))
         plain.run_until_drained()
 
         ad = make_serving(model, registry)
-        eng = ServeEngine(model, params, max_slots=2, max_len=64, kv=kv,
-                          page=8, adapters=ad)
-        r1 = eng.submit(prompt, max_new_tokens=6)                 # None slot
-        r2 = eng.submit(list(range(5)), max_new_tokens=6,
-                        adapter_id="tenant-1")                    # neighbour
+        eng = ServeEngine(model, params, max_slots=2, max_len=64, kv=_kv(kv),
+                          adapters=ad)
+        r1 = eng.submit(prompt, RequestSpec(max_new_tokens=6))    # None slot
+        r2 = eng.submit(list(range(5)),
+                        RequestSpec(max_new_tokens=6,
+                                    adapter_id="tenant-1"))       # neighbour
         eng.run_until_drained()
         assert r1.output == r0.output
         assert r2.state == "done"
@@ -383,8 +392,10 @@ class TestMultiTenantServing:
         model, params = model_params
         ad = make_serving(model, registry, budget_adapters=2, max_resident=2)
         eng = ServeEngine(model, params, max_slots=2, max_len=64, adapters=ad)
-        reqs = [eng.submit(list(range(4)), max_new_tokens=3,
-                           adapter_id=f"tenant-{i}") for i in range(4)]
+        reqs = [eng.submit(list(range(4)),
+                           RequestSpec(max_new_tokens=3,
+                                       adapter_id=f"tenant-{i}"))
+                for i in range(4)]
         budget = ad.cache.budget_bytes
         while any(r.state in ("queued", "running") for r in reqs):
             eng.tick()
@@ -406,9 +417,12 @@ class TestMultiTenantServing:
         model, params = model_params
         ad = make_serving(model, registry, budget_adapters=2, max_resident=2)
         eng = ServeEngine(model, params, max_slots=3, max_len=64, adapters=ad)
-        a = eng.submit(list(range(6)), max_new_tokens=8, adapter_id="tenant-0")
-        b = eng.submit(list(range(6)), max_new_tokens=8, adapter_id="tenant-1")
-        c = eng.submit(list(range(6)), max_new_tokens=8, adapter_id="tenant-2")
+        a = eng.submit(list(range(6)),
+                       RequestSpec(max_new_tokens=8, adapter_id="tenant-0"))
+        b = eng.submit(list(range(6)),
+                       RequestSpec(max_new_tokens=8, adapter_id="tenant-1"))
+        c = eng.submit(list(range(6)),
+                       RequestSpec(max_new_tokens=8, adapter_id="tenant-2"))
         eng.tick()
         assert a.state == "running" and b.state == "running"
         assert c.state == "queued"                  # slot free, budget pinned
@@ -420,9 +434,11 @@ class TestMultiTenantServing:
         model, params = model_params
         ad = make_serving(model, registry)
         eng = ServeEngine(model, params, max_slots=1, max_len=64, adapters=ad)
-        assert eng.submit([1, 2], adapter_id="nope").state == "rejected"
+        assert eng.submit(
+            [1, 2], RequestSpec(adapter_id="nope")).state == "rejected"
         no_ad = ServeEngine(model, params, max_slots=1, max_len=64)
-        assert no_ad.submit([1, 2], adapter_id="tenant-0").state == "rejected"
+        assert no_ad.submit(
+            [1, 2], RequestSpec(adapter_id="tenant-0")).state == "rejected"
 
     def test_preemption_unpins_and_resumes_with_adapter(self, model_params,
                                                         registry):
@@ -432,11 +448,13 @@ class TestMultiTenantServing:
         solo = self._solo(model, params, registry, "paged",
                           list(range(30, 49)), "tenant-1")
         ad = make_serving(model, registry)
-        eng = ServeEngine(model, params, max_slots=2, max_len=64, kv="paged",
-                          page=8, n_pages=6, adapters=ad)
-        eng.submit(list(range(1, 20)), max_new_tokens=10, priority=0)
-        lo = eng.submit(list(range(30, 49)), max_new_tokens=10, priority=2,
-                        adapter_id="tenant-1")
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv=PagedKV(page=8, n_pages=6), adapters=ad)
+        eng.submit(list(range(1, 20)),
+                   RequestSpec(max_new_tokens=10, priority=0))
+        lo = eng.submit(list(range(30, 49)),
+                        RequestSpec(max_new_tokens=10, priority=2,
+                                    adapter_id="tenant-1"))
         eng.run_until_drained()
         assert lo.n_preempts >= 1
         assert lo.output[:6] == solo                # same greedy trajectory
@@ -460,11 +478,11 @@ class TestPrefixHitBatchedPrefill:
         outs = {}
         for mode in ("token", "batched"):
             eng = ServeEngine(model, params, max_slots=2, max_len=64,
-                              kv="paged", page=8, prefix_cache=True,
+                              kv=PagedKV(page=8), prefix_cache=True,
                               prefill=mode)
-            warm = eng.submit(shared + tail, max_new_tokens=5)
+            warm = eng.submit(shared + tail, RequestSpec(max_new_tokens=5))
             eng.run_until_drained()                # commits the shared pages
-            hit = eng.submit(shared + tail, max_new_tokens=5)
+            hit = eng.submit(shared + tail, RequestSpec(max_new_tokens=5))
             eng.run_until_drained()
             assert hit.prefix_hit_tokens == 16
             outs[mode] = (warm.output, hit.output)
@@ -524,9 +542,9 @@ class TestGatewayAdapterMetrics:
         gw = Gateway(ServeEngine(model, params, max_slots=2, max_len=64,
                                  adapters=ad))
         for i in range(3):
-            gw.submit(list(range(4)), max_new_tokens=3,
-                      adapter_id=f"tenant-{i}")
-        gw.submit(list(range(4)), max_new_tokens=3)
+            gw.submit(list(range(4)),
+                      RequestSpec(max_new_tokens=3, adapter_id=f"tenant-{i}"))
+        gw.submit(list(range(4)), RequestSpec(max_new_tokens=3))
         gw.run_until_drained()
         m = gw.metrics_dict()
         g = m["gauges"]

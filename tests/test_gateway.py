@@ -11,7 +11,8 @@ import pytest
 from repro.configs.base import get_config
 from repro.launch.train import reduce_config
 from repro.models.transformer import Model
-from repro.serving import ServeEngine
+from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
+                           ServeEngine)
 from repro.serving.engine import Request
 from repro.serving.gateway import Gateway, Metrics, PrefixCache, Scheduler
 
@@ -25,10 +26,9 @@ def model_params():
     return model, model.init(jax.random.PRNGKey(0))
 
 
-def _req(uid, prompt_len=4, **kw):
-    defaults = dict(prompt=list(range(prompt_len)), t_submit=time.time())
-    defaults.update(kw)
-    return Request(uid, **defaults)
+def _req(uid, prompt_len=4, deadline_s=None, **spec_kw):
+    return Request(uid, list(range(prompt_len)), spec=RequestSpec(**spec_kw),
+                   deadline_s=deadline_s, t_submit=time.time())
 
 
 class TestScheduler:
@@ -111,13 +111,13 @@ class TestPagedVsDense:
         prompts = [list(rng.integers(0, 100, size=int(rng.integers(2, 14))))
                    for _ in range(7)]
         outs = {}
-        for kv in ("dense", "paged"):
-            eng = ServeEngine(model, params, max_slots=3, max_len=64, kv=kv,
-                              page=8)
-            reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        for kv_name, kv in (("dense", DenseKV()), ("paged", PagedKV(page=8))):
+            eng = ServeEngine(model, params, max_slots=3, max_len=64, kv=kv)
+            reqs = [eng.submit(p, RequestSpec(max_new_tokens=6))
+                    for p in prompts]
             stats = eng.run_until_drained()
             assert stats.completed == len(prompts)
-            outs[kv] = [r.output for r in reqs]
+            outs[kv_name] = [r.output for r in reqs]
         assert outs["dense"] == outs["paged"]
 
     def test_paged_batched_prefill_matches_token(self, model_params):
@@ -126,8 +126,8 @@ class TestPagedVsDense:
         outs = []
         for mode in ("token", "batched"):
             eng = ServeEngine(model, params, max_slots=2, max_len=64,
-                              kv="paged", page=8, prefill=mode)
-            r = eng.submit(prompt, max_new_tokens=5)
+                              kv=PagedKV(page=8), prefill=mode)
+            r = eng.submit(prompt, RequestSpec(max_new_tokens=5))
             eng.run_until_drained()
             outs.append(r.output)
         assert outs[0] == outs[1]
@@ -140,16 +140,17 @@ class TestPrefixCacheReuse:
         tails = [[3, 4, 5], [6, 7], [8, 9, 1]]
 
         cold = ServeEngine(model, params, max_slots=2, max_len=64,
-                           kv="paged", page=8)
-        cold_reqs = [cold.submit(shared + t, max_new_tokens=5) for t in tails]
+                           kv=PagedKV(page=8))
+        cold_reqs = [cold.submit(shared + t, RequestSpec(max_new_tokens=5))
+                     for t in tails]
         cold.run_until_drained()
 
         warm = ServeEngine(model, params, max_slots=2, max_len=64,
-                           kv="paged", page=8, prefix_cache=True)
-        r0 = warm.submit(shared + tails[0], max_new_tokens=5)
+                           kv=PagedKV(page=8), prefix_cache=True)
+        r0 = warm.submit(shared + tails[0], RequestSpec(max_new_tokens=5))
         warm.run_until_drained()                  # commits the shared pages
-        r1 = warm.submit(shared + tails[1], max_new_tokens=5)
-        r2 = warm.submit(shared + tails[2], max_new_tokens=5)
+        r1 = warm.submit(shared + tails[1], RequestSpec(max_new_tokens=5))
+        r2 = warm.submit(shared + tails[2], RequestSpec(max_new_tokens=5))
         warm.run_until_drained()
 
         assert [r.output for r in cold_reqs] == [r.output for r in (r0, r1, r2)]
@@ -162,8 +163,8 @@ class TestPrefixCacheReuse:
     def test_shared_pages_not_freed_while_resident(self, model_params):
         model, params = model_params
         warm = ServeEngine(model, params, max_slots=1, max_len=64,
-                           kv="paged", page=4, prefix_cache=True)
-        r = warm.submit(list(range(9)), max_new_tokens=3)
+                           kv=PagedKV(page=4), prefix_cache=True)
+        r = warm.submit(list(range(9)), RequestSpec(max_new_tokens=3))
         warm.run_until_drained()
         # 2 full pages committed → resident in the trie, off the free list
         assert warm.prefix.n_pages == 2
@@ -177,9 +178,11 @@ class TestAdmissionPreemption:
         and both still complete with full outputs."""
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=2, max_len=64,
-                          kv="paged", page=8, n_pages=6)
-        hi = eng.submit(list(range(1, 20)), max_new_tokens=10, priority=0)
-        lo = eng.submit(list(range(30, 49)), max_new_tokens=10, priority=2)
+                          kv=PagedKV(page=8, n_pages=6))
+        hi = eng.submit(list(range(1, 20)),
+                        RequestSpec(max_new_tokens=10, priority=0))
+        lo = eng.submit(list(range(30, 49)),
+                        RequestSpec(max_new_tokens=10, priority=2))
         stats = eng.run_until_drained()
         assert stats.completed == 2
         assert stats.preemptions >= 1 and lo.n_preempts >= 1
@@ -190,14 +193,16 @@ class TestAdmissionPreemption:
         """Preemption must not corrupt the resumed request's tokens."""
         model, params = model_params
         base = ServeEngine(model, params, max_slots=1, max_len=64,
-                           kv="paged", page=8)
-        ref = base.submit(list(range(30, 49)), max_new_tokens=10)
+                           kv=PagedKV(page=8))
+        ref = base.submit(list(range(30, 49)), RequestSpec(max_new_tokens=10))
         base.run_until_drained()
 
         eng = ServeEngine(model, params, max_slots=2, max_len=64,
-                          kv="paged", page=8, n_pages=6)
-        eng.submit(list(range(1, 20)), max_new_tokens=10, priority=0)
-        lo = eng.submit(list(range(30, 49)), max_new_tokens=10, priority=2)
+                          kv=PagedKV(page=8, n_pages=6))
+        eng.submit(list(range(1, 20)),
+                   RequestSpec(max_new_tokens=10, priority=0))
+        lo = eng.submit(list(range(30, 49)),
+                        RequestSpec(max_new_tokens=10, priority=2))
         eng.run_until_drained()
         assert lo.n_preempts >= 1
         assert lo.output == ref.output
@@ -207,9 +212,10 @@ class TestAdmissionPreemption:
         smaller ones) instead of triggering preemption churn."""
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=2, max_len=64,
-                          kv="paged", page=8, n_pages=2)   # 16-token pool
-        giant = eng.submit(list(range(30)), max_new_tokens=8, priority=0)
-        small = eng.submit([1, 2, 3], max_new_tokens=4, priority=1)
+                          kv=PagedKV(page=8, n_pages=2))   # 16-token pool
+        giant = eng.submit(list(range(30)),
+                           RequestSpec(max_new_tokens=8, priority=0))
+        small = eng.submit([1, 2, 3], RequestSpec(max_new_tokens=4, priority=1))
         eng.run_until_drained(max_ticks=200)   # must bail, not spin forever
         assert small.state == "done"
         assert giant.state == "queued"
@@ -221,9 +227,9 @@ class TestAdmissionPreemption:
         and then crashed the whole run with MemoryError mid-generation."""
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=2, max_len=64,
-                          kv="paged", page=8, n_pages=2)   # 16-token pool
-        doomed = eng.submit([1, 2, 3], max_new_tokens=20)  # grows to 23 toks
-        small = eng.submit([4, 5], max_new_tokens=4)
+                          kv=PagedKV(page=8, n_pages=2))   # 16-token pool
+        doomed = eng.submit([1, 2, 3], RequestSpec(max_new_tokens=20))  # 23 toks
+        small = eng.submit([4, 5], RequestSpec(max_new_tokens=4))
         eng.run_until_drained(max_ticks=200)               # must not raise
         assert small.state == "done"
         assert doomed.state == "queued"
@@ -234,12 +240,15 @@ class TestAdmissionPreemption:
         starved, preemption counter unbounded)."""
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=3, max_len=64,
-                          kv="paged", page=8, n_pages=6)
-        a = eng.submit(list(range(28)), max_new_tokens=12, priority=0)  # 4 pages now, 5 lifetime
-        v = eng.submit([1, 2, 3, 4], max_new_tokens=3, priority=2)     # 1 page
+                          kv=PagedKV(page=8, n_pages=6))
+        a = eng.submit(list(range(28)),
+                       RequestSpec(max_new_tokens=12, priority=0))  # 4 pages now, 5 lifetime
+        v = eng.submit([1, 2, 3, 4],
+                       RequestSpec(max_new_tokens=3, priority=2))   # 1 page
         eng.tick()
         # head needs 3 pages; free=1, victim v owns 1 → preemption can't help
-        h = eng.submit(list(range(40, 57)), max_new_tokens=6, priority=1)
+        h = eng.submit(list(range(40, 57)),
+                       RequestSpec(max_new_tokens=6, priority=1))
         for _ in range(4):
             eng.tick()
         assert eng.stats.preemptions == 0
@@ -253,9 +262,9 @@ class TestAdmissionPreemption:
         while a slot is free."""
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=2, max_len=64,
-                          kv="paged", page=8, n_pages=3)
-        big = eng.submit(list(range(1, 18)), max_new_tokens=4)   # 3 pages
-        small = eng.submit([1, 2, 3], max_new_tokens=4)          # 1 page
+                          kv=PagedKV(page=8, n_pages=3))
+        big = eng.submit(list(range(1, 18)), RequestSpec(max_new_tokens=4))   # 3 pages
+        small = eng.submit([1, 2, 3], RequestSpec(max_new_tokens=4))          # 1 page
         eng.tick()   # big admitted (3 pages), small must wait
         assert big.state == "running"
         assert small.state == "queued"
@@ -267,17 +276,18 @@ class TestGatewayFrontend:
     def test_stream_yields_all_tokens(self, model_params):
         model, params = model_params
         gw = Gateway(ServeEngine(model, params, max_slots=2, max_len=64))
-        r = gw.submit([3, 4, 5], max_new_tokens=6)
+        r = gw.submit([3, 4, 5], RequestSpec(max_new_tokens=6))
         assert list(gw.stream(r)) == r.output
         assert len(r.output) == 6
 
     def test_stream_callback_and_metrics(self, model_params):
         model, params = model_params
         gw = Gateway(ServeEngine(model, params, max_slots=2, max_len=64,
-                                 kv="paged", page=8))
+                                 kv=PagedKV(page=8)))
         seen = []
-        r = gw.submit([3, 4, 5], max_new_tokens=5,
-                      stream_cb=lambda req, tok: seen.append(tok))
+        r = gw.submit([3, 4, 5],
+                      RequestSpec(max_new_tokens=5,
+                                  stream_cb=lambda req, tok: seen.append(tok)))
         gw.run_until_drained()
         assert seen == r.output
         m = gw.metrics_dict()
@@ -290,8 +300,8 @@ class TestGatewayFrontend:
     def test_cancel_queued_and_running(self, model_params):
         model, params = model_params
         gw = Gateway(ServeEngine(model, params, max_slots=1, max_len=64))
-        a = gw.submit([1, 2, 3], max_new_tokens=8)
-        b = gw.submit([4, 5, 6], max_new_tokens=8)
+        a = gw.submit([1, 2, 3], RequestSpec(max_new_tokens=8))
+        b = gw.submit([4, 5, 6], RequestSpec(max_new_tokens=8))
         gw.step()                         # a running, b queued
         assert gw.cancel(b.uid) and b.state == "cancelled"
         assert gw.cancel(a.uid) and a.state == "cancelled"
@@ -302,8 +312,9 @@ class TestGatewayFrontend:
     def test_deadline_expiry(self, model_params):
         model, params = model_params
         gw = Gateway(ServeEngine(model, params, max_slots=1, max_len=64))
-        gw.submit([1, 2], max_new_tokens=4)                    # occupies slot
-        late = gw.submit([3, 4], max_new_tokens=4, deadline_ms=-1.0)
+        gw.submit([1, 2], RequestSpec(max_new_tokens=4))       # occupies slot
+        late = gw.submit([3, 4],
+                         RequestSpec(max_new_tokens=4, deadline_ms=-1.0))
         gw.run_until_drained()
         assert late.state == "expired"
         assert gw.metrics.counter("requests_expired") == 1
@@ -321,10 +332,15 @@ class TestSamplingAndTruncation:
         temps = jnp.asarray([5.0, 5.0], jnp.float32)
         topks = jnp.asarray([0, 1], jnp.int32)
         key = jax.random.PRNGKey(0)
+        topps = jnp.ones((2,), jnp.float32)
+        seeds = jnp.zeros((2,), jnp.int32)
+        has_seed = jnp.zeros((2,), bool)
+        steps = jnp.zeros((2,), jnp.int32)
         toks0, toks1 = set(), set()
         for i in range(50):
             key, sub = jax.random.split(key)
-            t = np.asarray(eng._sample(logits, sub, temps, topks))
+            t = np.asarray(eng._sample(logits, sub, temps, topks, topps,
+                                       seeds, has_seed, steps))
             toks0.add(int(t[0]))
             toks1.add(int(t[1]))
         assert toks1 == {31}, "top_k=1 slot must always emit the argmax"
@@ -336,19 +352,19 @@ class TestSamplingAndTruncation:
         model, params = model_params
         prompt = list(range(30))
         eng = ServeEngine(model, params, max_slots=1, max_len=16)
-        r = eng.submit(prompt, max_new_tokens=20)
+        r = eng.submit(prompt, RequestSpec(max_new_tokens=20))
         eng.run_until_drained()
         assert r.max_new_tokens == 15           # clamped to max_len - 1
         assert len(r.output) == 15
         # equivalent direct submission of the kept tail
         eng2 = ServeEngine(model, params, max_slots=1, max_len=16)
-        r2 = eng2.submit([prompt[-1]], max_new_tokens=15)
+        r2 = eng2.submit([prompt[-1]], RequestSpec(max_new_tokens=15))
         eng2.run_until_drained()
         assert r.output == r2.output
 
     def test_truncation_exact_fit_unchanged(self, model_params):
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=1, max_len=32)
-        r = eng.submit(list(range(8)), max_new_tokens=24)   # 8 + 24 == 32
+        r = eng.submit(list(range(8)), RequestSpec(max_new_tokens=24))  # 8+24=32
         eng.run_until_drained()
         assert len(r.output) == 24 and r.max_new_tokens == 24

@@ -10,7 +10,7 @@ import pytest
 from repro.configs.base import get_config
 from repro.launch.train import TrainConfig, Trainer, reduce_config
 from repro.models.transformer import Model
-from repro.serving import ServeEngine
+from repro.serving import RequestSpec, ServeEngine
 
 jax.config.update("jax_enable_x64", False)
 
@@ -82,7 +82,7 @@ class TestServeEngine:
         eng = ServeEngine(model, params, max_slots=3, max_len=64)
         rng = np.random.default_rng(0)
         reqs = [eng.submit(list(rng.integers(0, 100, size=rng.integers(2, 10))),
-                           max_new_tokens=5) for _ in range(8)]
+                           RequestSpec(max_new_tokens=5)) for _ in range(8)]
         stats = eng.run_until_drained()
         assert stats.completed == 8
         assert all(len(r.output) == 5 for r in reqs)
@@ -92,14 +92,14 @@ class TestServeEngine:
         model, params = model_params
         prompt = [5, 6, 7, 8]
         eng1 = ServeEngine(model, params, max_slots=4, max_len=64)
-        alone = eng1.submit(prompt, max_new_tokens=6)
+        alone = eng1.submit(prompt, RequestSpec(max_new_tokens=6))
         eng1.run_until_drained()
 
         eng2 = ServeEngine(model, params, max_slots=4, max_len=64)
         rng = np.random.default_rng(1)
         others = [eng2.submit(list(rng.integers(0, 100, size=7)),
-                              max_new_tokens=9) for _ in range(3)]
-        together = eng2.submit(prompt, max_new_tokens=6)
+                              RequestSpec(max_new_tokens=9)) for _ in range(3)]
+        together = eng2.submit(prompt, RequestSpec(max_new_tokens=6))
         eng2.run_until_drained()
         assert alone.output == together.output
 
@@ -107,18 +107,18 @@ class TestServeEngine:
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=1, max_len=64)
         # find the greedy first token, then use it as "eos"
-        probe = eng.submit([1, 2, 3], max_new_tokens=2)
+        probe = eng.submit([1, 2, 3], RequestSpec(max_new_tokens=2))
         eng.run_until_drained()
         eos = probe.output[0]
         eng2 = ServeEngine(model, params, max_slots=1, max_len=64)
-        r = eng2.submit([1, 2, 3], max_new_tokens=16, eos_id=eos)
+        r = eng2.submit([1, 2, 3], RequestSpec(max_new_tokens=16, eos_id=eos))
         eng2.run_until_drained()
         assert r.output[-1] == eos and len(r.output) < 16
 
     def test_prompt_longer_than_window_truncates(self, model_params):
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=1, max_len=32)
-        r = eng.submit(list(range(60)), max_new_tokens=4)
+        r = eng.submit(list(range(60)), RequestSpec(max_new_tokens=4))
         eng.run_until_drained()
         assert len(r.output) == 4
 

@@ -1,0 +1,354 @@
+"""Unified serving API: RequestSpec/SamplingParams + KVBackend protocol.
+
+Covers the PR-3 acceptance bar: deprecation shims for the old kwarg/string
+interfaces (with the deadline-unit fix), the top-p sampler (bit-identical to
+the old sampler at top_p=1.0), per-request seeded sampling streams, a
+dense↔paged token-identity matrix over {greedy, top-k, top-p} × {adapter,
+no adapter} through the KVBackend API, and an interpret-mode proof that
+block tables reach the Pallas `paged_flash_decode` kernel from
+`Model.decode_step`."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.train import reduce_config
+from repro.models.transformer import Model
+from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
+                           ServeEngine)
+from repro.serving.adapters import (AdapterRegistry, AdapterServing,
+                                    AdapterSpec, synthetic_adapter_stacks)
+from repro.serving.gateway import Gateway
+
+jax.config.update("jax_enable_x64", False)
+
+NEG_INF = -1e30
+ADAPTER_SPEC = AdapterSpec(rank=8, alpha=16.0, targets=("q", "v"))
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def registry(model_params):
+    model, _ = model_params
+    reg = AdapterRegistry(ADAPTER_SPEC)
+    rng = np.random.default_rng(11)
+    for i in range(2):
+        reg.register(f"tenant-{i}",
+                     synthetic_adapter_stacks(rng, model.cfg, ADAPTER_SPEC,
+                                              model.cfg.num_layers, scale=0.05))
+    return reg
+
+
+def _adapters(model, registry):
+    nbytes = registry.get("tenant-0").nbytes
+    return AdapterServing(model, registry, budget_bytes=nbytes * 2,
+                          max_resident=2)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims + the deadline-unit fix
+# ---------------------------------------------------------------------------
+
+
+class TestDeprecationShims:
+    def test_engine_legacy_kwargs_warn_and_work(self, model_params):
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=1, max_len=64)
+        with pytest.warns(DeprecationWarning):
+            r = eng.submit([1, 2, 3], max_new_tokens=4, temperature=0.5,
+                           top_k=7, priority=2)
+        assert (r.max_new_tokens, r.temperature, r.top_k, r.priority) \
+            == (4, 0.5, 7, 2)
+        eng.run_until_drained()
+        assert r.state == "done" and len(r.output) == 4
+
+    def test_gateway_legacy_kwargs_warn(self, model_params):
+        model, params = model_params
+        gw = Gateway(ServeEngine(model, params, max_slots=1, max_len=64))
+        with pytest.warns(DeprecationWarning):
+            r = gw.submit([1, 2], max_new_tokens=3, deadline_ms=60_000.0)
+        assert r.deadline_s == pytest.approx(time.time() + 60.0, abs=1.0)
+        gw.run_until_drained()
+        assert r.state == "done"
+
+    def test_kv_string_warns_and_matches_backend(self, model_params):
+        model, params = model_params
+        with pytest.warns(DeprecationWarning):
+            legacy = ServeEngine(model, params, max_slots=2, max_len=64,
+                                 kv="paged", page=8)
+        new = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv=PagedKV(page=8))
+        outs = []
+        for eng in (legacy, new):
+            r = eng.submit([3, 4, 5], RequestSpec(max_new_tokens=5))
+            eng.run_until_drained()
+            outs.append(r.output)
+        assert outs[0] == outs[1]
+        assert legacy.kv_mode == new.kv_mode == "paged"
+
+    def test_new_api_does_not_warn(self, model_params, recwarn):
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=1, max_len=64)
+        eng.submit([1, 2], RequestSpec(max_new_tokens=2),
+                   SamplingParams(temperature=0.3))
+        assert not [w for w in recwarn.list
+                    if issubclass(w.category, DeprecationWarning)]
+
+    def test_mixing_spec_and_legacy_rejected(self, model_params):
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=1, max_len=64)
+        with pytest.raises(TypeError):
+            eng.submit([1], RequestSpec(), max_new_tokens=4)
+        with pytest.raises(TypeError):
+            eng.submit([1], bogus_kwarg=1)
+
+    def test_deadline_units_unified(self, model_params):
+        """The historical Gateway(deadline_ms, relative) vs
+        ServeEngine(deadline_s, absolute) split resolves to one field:
+        RequestSpec.deadline_ms, relative to submit. All four entry points
+        must produce the same absolute scheduler deadline."""
+        model, params = model_params
+        gw = Gateway(ServeEngine(model, params, max_slots=1, max_len=64))
+        eng = ServeEngine(model, params, max_slots=1, max_len=64)
+        now = time.time()
+        spec = RequestSpec(max_new_tokens=1, deadline_ms=30_000.0)
+        reqs = [gw.submit([1], spec), eng.submit([1], spec)]
+        with pytest.warns(DeprecationWarning):
+            reqs.append(gw.submit([1], max_new_tokens=1, deadline_ms=30_000.0))
+        with pytest.warns(DeprecationWarning):
+            reqs.append(eng.submit([1], max_new_tokens=1,
+                                   deadline_s=now + 30.0))
+        for r in reqs:
+            assert r.deadline_s == pytest.approx(now + 30.0, abs=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Sampling: top-p golden vs the old sampler, behaviour, seeded streams
+# ---------------------------------------------------------------------------
+
+
+def _old_sample(logits, key, temperature, top_k):
+    """The pre-top-p jitted sampler, verbatim (the golden reference)."""
+    greedy = jnp.argmax(logits, axis=-1)
+    vocab = logits.shape[-1]
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    k_idx = jnp.clip(top_k - 1, 0, vocab - 1)
+    thresh = jnp.take_along_axis(sorted_desc, k_idx[:, None], axis=-1)
+    masked = jnp.where((top_k[:, None] > 0) & (logits < thresh),
+                       NEG_INF, logits)
+    scaled = masked / jnp.maximum(temperature[:, None], 1e-6)
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    use_greedy = temperature <= 0.0
+    return jnp.where(use_greedy, greedy, sampled).astype(jnp.int32)
+
+
+class TestSampling:
+    def test_top_p_one_bit_identical_to_old_path(self, model_params):
+        """Golden: with top_p=1.0 and no seeds the new sampler's draws are
+        bit-identical to the historical temperature/top-k sampler."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=4, max_len=64)
+        rng = np.random.default_rng(0)
+        b, v = 4, 64
+        temps = jnp.asarray([0.0, 0.7, 1.3, 5.0], jnp.float32)
+        topks = jnp.asarray([0, 3, 0, 10], jnp.int32)
+        topps = jnp.ones((b,), jnp.float32)
+        seeds = jnp.zeros((b,), jnp.int32)
+        has_seed = jnp.zeros((b,), bool)
+        steps = jnp.zeros((b,), jnp.int32)
+        key = jax.random.PRNGKey(42)
+        for _ in range(30):
+            key, sub = jax.random.split(key)
+            logits = jnp.asarray(rng.normal(size=(b, v)) * 3.0, jnp.float32)
+            new = eng._sample(logits, sub, temps, topks, topps, seeds,
+                              has_seed, steps)
+            old = _old_sample(logits, sub, temps, topks)
+            np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+    def test_top_p_restricts_support(self, model_params):
+        """With one token holding > top_p of the mass, nucleus sampling must
+        always return it; the unrestricted slot keeps sampling freely."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64)
+        logits = np.zeros((2, 32), np.float32)
+        logits[:, 5] = 6.0                 # softmax(6 vs 0) ≈ 0.93 at T=1
+        logits = jnp.asarray(logits)
+        temps = jnp.asarray([1.0, 1.0], jnp.float32)
+        topks = jnp.zeros((2,), jnp.int32)
+        topps = jnp.asarray([0.5, 1.0], jnp.float32)
+        aux = (jnp.zeros((2,), jnp.int32), jnp.zeros((2,), bool),
+               jnp.zeros((2,), jnp.int32))
+        key = jax.random.PRNGKey(0)
+        seen0, seen1 = set(), set()
+        for _ in range(60):
+            key, sub = jax.random.split(key)
+            t = np.asarray(eng._sample(logits, sub, temps, topks, topps, *aux))
+            seen0.add(int(t[0]))
+            seen1.add(int(t[1]))
+        assert seen0 == {5}, "top_p=0.5 must pin the dominant token"
+        assert len(seen1) > 1, "top_p=1.0 must keep the full support"
+
+    def test_seeded_stream_reproducible_across_batches(self, model_params):
+        """A seeded request's sampled tokens depend only on (seed, step):
+        identical alone or co-scheduled with other traffic."""
+        model, params = model_params
+        spec = RequestSpec(max_new_tokens=6)
+        sampling = SamplingParams(temperature=0.9, seed=123)
+        solo = ServeEngine(model, params, max_slots=3, max_len=64, seed=0)
+        a = solo.submit([5, 6, 7], spec, sampling)
+        solo.run_until_drained()
+
+        busy = ServeEngine(model, params, max_slots=3, max_len=64, seed=9)
+        rng = np.random.default_rng(2)
+        for _ in range(2):
+            busy.submit(list(rng.integers(0, 100, size=6)),
+                        RequestSpec(max_new_tokens=8),
+                        SamplingParams(temperature=1.1))
+        b = busy.submit([5, 6, 7], spec, sampling)
+        busy.run_until_drained()
+        assert a.output == b.output
+
+    def test_sampling_params_validation(self):
+        with pytest.raises(ValueError):
+            SamplingParams(top_p=0.0)
+        with pytest.raises(ValueError):
+            SamplingParams(top_p=1.5)
+        with pytest.raises(ValueError):
+            SamplingParams(top_k=-1)
+        with pytest.raises(ValueError):
+            SamplingParams(seed=2**31)      # must fit the int32 sampler lane
+        SamplingParams(seed=-2**31)         # boundary ok
+
+
+# ---------------------------------------------------------------------------
+# Dense ↔ paged token identity through the KVBackend protocol
+# ---------------------------------------------------------------------------
+
+
+SAMPLERS = {
+    "greedy": SamplingParams(),
+    "topk": SamplingParams(temperature=0.8, top_k=5),
+    "topp": SamplingParams(temperature=0.8, top_p=0.7),
+}
+
+
+class TestDensePagedMatrix:
+    @pytest.mark.parametrize("sampler", sorted(SAMPLERS))
+    @pytest.mark.parametrize("adapter", [None, "tenant-0"])
+    def test_token_identity(self, model_params, registry, sampler, adapter):
+        """Acceptance: DenseKV and PagedKV produce token-identical outputs
+        through the one shared engine tick path, for {greedy, top-k, top-p}
+        × {adapter, no adapter}. Sampling runs draw from the same engine key
+        stream, so identical logits ⇒ identical tokens."""
+        model, params = model_params
+        sampling = SAMPLERS[sampler]
+        rng = np.random.default_rng(4)
+        prompts = [list(rng.integers(0, 100, size=int(rng.integers(3, 12))))
+                   for _ in range(5)]
+        outs = {}
+        for name, make in (("dense", DenseKV), ("paged",
+                                                lambda: PagedKV(page=8))):
+            ad = _adapters(model, registry) if adapter else None
+            eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                              kv=make(), seed=7, adapters=ad)
+            reqs = [eng.submit(p, RequestSpec(max_new_tokens=6,
+                                              adapter_id=adapter), sampling)
+                    for p in prompts]
+            stats = eng.run_until_drained()
+            assert stats.completed == len(prompts)
+            outs[name] = [r.output for r in reqs]
+        assert outs["dense"] == outs["paged"]
+
+
+# ---------------------------------------------------------------------------
+# Block tables reach paged_flash_decode from Model.decode_step
+# ---------------------------------------------------------------------------
+
+
+class TestPagedKernelPath:
+    def _mid_run_state(self, model, params):
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv=PagedKV(page=8))
+        r = eng.submit(list(range(5, 15)), RequestSpec(max_new_tokens=8))
+        for _ in range(12):
+            eng.tick()
+        assert r.state == "running" and r.output
+        state = eng.kv.decode_state([0], eng.pos)
+        tokens = jnp.asarray(np.asarray([r.output[-1], 0], np.int32))
+        return state, tokens, jnp.asarray(eng.pos), eng.pool.scratch_page
+
+    def test_block_tables_reach_kernel(self, model_params, monkeypatch):
+        """Interpret-mode acceptance: with paged_attn='kernel',
+        Model.decode_step drives `paged_flash_decode` (per layer, block
+        tables + live lengths via scalar prefetch) and its logits match the
+        XLA gather reference."""
+        from repro.kernels.flash_decode import ops as fd_ops
+        model, params = model_params
+        state, tokens, pos, scratch = self._mid_run_state(model, params)
+
+        calls = []
+        real = fd_ops.paged_decode_attention
+
+        def spy(q, k_pool, v_pool, tables, lengths, *a, **kw):
+            calls.append({"tables": tables.shape, "kernel": kw.get("use_kernel"),
+                          "interpret": kw.get("interpret")})
+            return real(q, k_pool, v_pool, tables, lengths, *a, **kw)
+
+        monkeypatch.setattr(fd_ops, "paged_decode_attention", spy)
+        logits_gather, new_g = model.decode_step(params, state, tokens, pos)
+        assert not calls, "gather reference must not call the paged kernel op"
+
+        kernel_model = dataclasses.replace(model, paged_attn="kernel")
+        logits_kernel, new_k = kernel_model.decode_step(params, state, tokens,
+                                                        pos)
+        assert calls, "block tables never reached paged_decode_attention"
+        assert all(c["kernel"] and c["interpret"] for c in calls)
+        assert all(c["tables"] == tuple(state.tables.shape) for c in calls)
+        # slot 0 is the live request; slot 1 is inactive (its row attends
+        # the scratch page — garbage by contract, discarded by the engine)
+        np.testing.assert_allclose(np.asarray(logits_kernel)[0],
+                                   np.asarray(logits_gather)[0],
+                                   rtol=2e-4, atol=2e-4)
+        # both paths write the token into the same (non-scratch) pages
+        d = jnp.abs(new_g.k_pool.astype(jnp.float32)
+                    - new_k.k_pool.astype(jnp.float32))
+        per_page = np.asarray(jnp.max(d, axis=(0, 2, 3, 4)))
+        assert list(np.nonzero(per_page)[0]) in ([], [scratch])
+
+    def test_engine_runs_forced_kernel_end_to_end(self, model_params):
+        """The whole engine tick path works with the kernel dispatch (the
+        TPU configuration, interpreted on CPU) and matches the gather path's
+        greedy tokens."""
+        model, params = model_params
+        prompts = [list(range(3, 9)), list(range(40, 44))]
+        outs = {}
+        for name, m in (("gather", model),
+                        ("kernel", dataclasses.replace(model,
+                                                       paged_attn="kernel"))):
+            eng = ServeEngine(m, params, max_slots=2, max_len=64,
+                              kv=PagedKV(page=8))
+            reqs = [eng.submit(p, RequestSpec(max_new_tokens=4))
+                    for p in prompts]
+            eng.run_until_drained()
+            outs[name] = [r.output for r in reqs]
+        assert outs["gather"] == outs["kernel"]
+
+    def test_dense_backend_never_builds_paged_state(self, model_params):
+        """DenseKV hands decode_step the plain dict cache (no block tables,
+        no page accounting)."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64, kv=DenseKV())
+        state = eng.kv.decode_state([0], eng.pos)
+        assert isinstance(state, dict) and set(state) == {"k", "v"}
+        assert eng.kv.pages_for(1000) == 0
+        assert eng.pool is None
