@@ -9,19 +9,27 @@ Workloads over the same reduced BitNet-2B, same arrival process:
     prefix cache is on (paged only): after the first request commits the
     shared pages, every later request's shared span costs **zero prefill
     ticks** (its first token needs only the per-request tail).
+  * ``adversary`` — the chunked-prefill A/B: a decode-heavy foreground
+    stream (short prompts, long outputs) is hit by long-prompt adversaries
+    mid-stream. Unchunked, each adversary's monolithic prefill stalls every
+    decoding slot for the whole prompt; with ``--prefill-chunk C`` the
+    prompt streams in C-token chunks and decode slots keep emitting every
+    tick. Reported as the foreground streams' inter-token latency p50/p95
+    plus the engine's decode-stall clock and chunk count.
 
 Reports TTFT p50/p95/p99, decode throughput, pool occupancy, preemptions and
 the prefix-hit accounting. Row names are stable so the bench trajectory can
 track serving perf across PRs; the per-backend summary (TPS, TTFT p50/p95)
-is emitted to ``artifacts/BENCH_serving.json``.
+and the adversary A/B are emitted to ``artifacts/BENCH_serving.json``.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--quick] \
-        [--kv-backend both]
+        [--kv-backend both] [--prefill-chunk 16]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 
@@ -46,7 +54,68 @@ def _summarize(gw, reqs, wall):
     }
 
 
-def run(quick: bool = False, kv_backend: str = "both") -> Report:
+def _adversary_scenario(model, params, prefill_chunk, quick):
+    """Foreground decode streams + long-prompt adversaries: measure the
+    inter-token gaps the foreground observes. One engine per variant; the
+    decode graph and both prefill shapes are warmed before timing."""
+    from repro.serving import PagedKV, RequestSpec, ServeEngine
+    from repro.serving.gateway import Gateway
+
+    long_len = 96 if quick else 224
+    n_adv = 2 if quick else 4
+    fg_tokens = 25 if quick else 30
+    eng = ServeEngine(model, params, max_slots=4, max_len=256,
+                      prefill="batched", prefill_chunk=prefill_chunk,
+                      kv=PagedKV(page=16))
+    gw = Gateway(eng)
+    rng = np.random.default_rng(3)
+    # warm the exact graph mix the measurement hits: three short decoders
+    # growing through the small block-table views while a long prompt
+    # prefills (all chunk/prefix buckets) and joins the batch
+    warm_fg = [gw.submit(list(rng.integers(0, 1000, size=6)),
+                         RequestSpec(max_new_tokens=12))
+               for _ in range(3)]
+    for _ in range(4):
+        gw.step()
+    warm = gw.submit(list(rng.integers(0, 1000, size=long_len)),
+                     RequestSpec(max_new_tokens=2, priority=1))
+    gw.run_until_drained()
+    assert warm.state == "done" and all(q.state == "done" for q in warm_fg)
+    eng.stats.decode_stall_s = 0.0     # report the measured phase only
+    eng.stats.prefill_chunks = 0
+
+    gaps = []
+    last = {}
+
+    def cb(req, tok):
+        now = time.time()
+        if req.uid in last:
+            gaps.append((now - last[req.uid]) * 1e3)
+        last[req.uid] = now
+
+    fg = [gw.submit(list(rng.integers(0, 1000, size=6)),
+                    RequestSpec(max_new_tokens=fg_tokens, priority=0,
+                                stream_cb=cb))
+          for _ in range(3)]
+    for _ in range(4):                     # foreground slots mid-decode
+        gw.step()
+    adv = [gw.submit(list(rng.integers(0, 1000, size=long_len)),
+                     RequestSpec(max_new_tokens=2, priority=1))
+           for _ in range(n_adv)]
+    gw.run_until_drained()
+    assert all(q.state == "done" for q in fg + adv)
+    gaps.sort()
+    return {
+        "fg_tbt_p50_ms": round(float(np.median(gaps)), 2),
+        "fg_tbt_p95_ms": round(float(np.quantile(gaps, 0.95)), 2),
+        "fg_tbt_max_ms": round(gaps[-1], 2),
+        "decode_stall_s": round(eng.stats.decode_stall_s, 4),
+        "prefill_chunks": int(eng.stats.prefill_chunks),
+    }
+
+
+def run(quick: bool = False, kv_backend: str = "both",
+        prefill_chunk: int = 16) -> Report:
     import jax
     from repro.configs.base import get_config
     from repro.launch.train import reduce_config
@@ -128,12 +197,33 @@ def run(quick: bool = False, kv_backend: str = "both") -> Report:
             r.row("shared/ttft_p50_speedup", round(speedup, 2),
                   "unique/shared TTFT p50 (prefix-cache win)")
 
+    # -- chunked-prefill A/B: long-prompt adversary vs decode cadence ---------
+    for label, chunk in (("unchunked", None),
+                         (f"chunk{prefill_chunk}", prefill_chunk)):
+        adv = _adversary_scenario(model, params, chunk, quick)
+        results[f"adversary/{label}"] = adv
+        r.row(f"adversary/{label}/fg_tbt_p95_ms", adv["fg_tbt_p95_ms"],
+              "foreground inter-token p95 under long-prompt adversaries")
+        r.row(f"adversary/{label}/fg_tbt_max_ms", adv["fg_tbt_max_ms"], "")
+        r.row(f"adversary/{label}/decode_stall_s", adv["decode_stall_s"],
+              "wall time decode slots spent stalled behind prefill")
+    speed = (results["adversary/unchunked"]["fg_tbt_p95_ms"]
+             / max(results[f"adversary/chunk{prefill_chunk}"]["fg_tbt_p95_ms"],
+                   1e-9))
+    r.row("adversary/tbt_p95_isolation_gain", round(speed, 2),
+          "unchunked/chunked inter-token p95 (chunked-prefill SLO win)")
+
     # perf-trajectory artifact: stable keys, TPS + TTFT p50/p95 per backend
+    # + the adversary A/B (inter-token p95 must be lower chunked)
     bench_out = {
         name: {"tps": w["tps"], "ttft_p50_ms": w["ttft_p50_ms"],
                "ttft_p95_ms": w["ttft_p95_ms"], "completed": w["completed"]}
-        for name, w in results.items()
+        for name, w in results.items() if not name.startswith("adversary/")
     }
+    bench_out["adversary/unchunked"] = results["adversary/unchunked"]
+    bench_out["adversary/chunked"] = dict(
+        results[f"adversary/chunk{prefill_chunk}"],
+        prefill_chunk=prefill_chunk)
     (ARTIFACTS / "BENCH_serving.json").write_text(
         json.dumps(bench_out, indent=1))
     print("[bench_serving]", json.dumps(results))
@@ -147,5 +237,9 @@ if __name__ == "__main__":
     ap.add_argument("--kv-backend", default="both",
                     choices=("dense", "paged", "both"),
                     help="A/B the unique workload over these KV backends")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunk size for the adversary scenario's chunked "
+                         "variant (A/B'd against monolithic prefill)")
     args = ap.parse_args()
-    run(quick=args.quick, kv_backend=args.kv_backend)
+    run(quick=args.quick, kv_backend=args.kv_backend,
+        prefill_chunk=args.prefill_chunk)

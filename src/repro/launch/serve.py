@@ -7,6 +7,13 @@ CPU-scale usage (end-to-end example path):
         --arch bitnet-2b --preset tiny --requests 16 --slots 4 --max-new 16 \
         --kv paged --page 32 --prefix-cache
 
+Chunked prefill (SLO isolation — long prompts stream in chunks while other
+slots keep decoding):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch bitnet-2b --preset tiny --requests 16 --slots 4 \
+        --prefill batched --prefill-chunk 32 --prompt-len 200 --kv paged
+
 Multi-tenant adapters (one ternary base, many QLoRA fine-tunes):
 
     PYTHONPATH=src python -m repro.launch.serve \
@@ -42,7 +49,8 @@ from repro.serving.gateway import Gateway
 
 
 def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
-                 prefill: str, ckpt_dir: Optional[str] = None,
+                 prefill: str, prefill_chunk: Optional[int] = None,
+                 ckpt_dir: Optional[str] = None,
                  seed: int = 0, kv: str = "dense", page: int = 64,
                  n_pages: Optional[int] = None,
                  prefix_cache: bool = False,
@@ -80,7 +88,8 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
     backend = (PagedKV(page=page, n_pages=n_pages) if kv == "paged"
                else DenseKV())
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
-                       prefill=prefill, seed=seed, kv=backend,
+                       prefill=prefill, prefill_chunk=prefill_chunk,
+                       seed=seed, kv=backend,
                        prefix_cache=prefix_cache, adapters=adapters)
 
 
@@ -94,6 +103,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--prefill", default="token", choices=("token", "batched"))
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split batched prefill into this many tokens per "
+                         "tick (SLO isolation: decode slots keep emitting "
+                         "during a long prompt's prefill; requires "
+                         "--prefill batched)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 = disabled)")
@@ -124,6 +138,7 @@ def main(argv=None) -> int:
 
     eng = build_engine(args.arch, args.preset, slots=args.slots,
                        max_len=args.max_len, prefill=args.prefill,
+                       prefill_chunk=args.prefill_chunk,
                        ckpt_dir=args.ckpt_dir, seed=args.seed, kv=args.kv,
                        page=args.page, n_pages=args.n_pages,
                        prefix_cache=args.prefix_cache,

@@ -647,12 +647,17 @@ class Model:
         Batched prefill (beyond-paper default; the paper's token-by-token
         prefill is available in the simulator + serving engine).
 
-        ``pos_offset``/``prefix_kv`` resume prefill mid-sequence after a
-        prefix-cache hit: positions start at ``pos_offset``, the cache fills
-        from there, and the prompt remainder attends to the already-committed
-        prefix k/v (``{"k","v"}: (L, B, Hkv, P, D)`` in the fp8 cache
-        encoding). GQA attention families only. ``adapter_idx`` threads the
-        multi-tenant LoRA selection (one entry per batch row)."""
+        ``pos_offset``/``prefix_kv`` resume prefill mid-sequence: positions
+        start at ``pos_offset``, the cache fills from there, and the prompt
+        remainder attends to the already-committed prefix k/v (``{"k","v"}:
+        (L, B, Hkv, P, D)`` in the fp8 cache encoding). The prefix is either
+        a prefix-cache hit's shared pages or — for chunked prefill — the
+        earlier chunks of the same prompt, so chunk i of a long prompt
+        resumes at ``pos_offset = i·C`` through the exact same path on both
+        KV backends (serving/kv.py materializes ``prefix_kv`` token-granular,
+        so chunk boundaries need not be page-aligned). GQA attention families
+        only. ``adapter_idx`` threads the multi-tenant LoRA selection (one
+        entry per batch row)."""
         with self._shard_scope():
             return self._prefill(p, batch, max_len, pos_offset=pos_offset,
                                  prefix_kv=prefix_kv, adapter_idx=adapter_idx)
@@ -668,7 +673,9 @@ class Model:
         kw: Dict[str, Any] = {}
         if adapter_idx is not None:
             kw["adapter_idx"] = adapter_idx
-        if pos_offset or prefix_kv is not None:
+        # (order matters: a resume always carries prefix_kv, and pos_offset
+        # may then be a traced scalar — never force bool() on it)
+        if prefix_kv is not None or pos_offset:
             assert cfg.attention_kind == "gqa" and cfg.family not in ("ssm", "hybrid"), \
                 "mid-sequence prefill (prefix-cache resume) is GQA-only"
 
@@ -751,13 +758,16 @@ def _attend_with_prefix(q, k_new, v_new, k_pref, v_pref, pos_offset):
     queries (global positions ``pos_offset + s``) attend the already-cached
     prefix k/v (fp8 cache encoding, positions ``0..pos_offset``) plus the
     remainder's own keys. q/k/v: (B, S, H*, D); k_pref/v_pref: (B, Hkv, P, D).
-    Plain masked softmax — the serving prefill path is batch-1 and bounded by
-    max_len, so no chunking/remat is needed."""
+    The prefix may be *padded* past the true length (P >= pos_offset — the
+    serving engine buckets it to a power of two so chunked-prefill resumes
+    reuse compiled graphs) and ``pos_offset`` may be a traced scalar: padded
+    prefix keys are masked out by position. Plain masked softmax — the
+    serving prefill path is batch-1 and bounded by max_len, so no
+    chunking/remat is needed."""
     b, s, h, d = q.shape
     hkv = k_new.shape[2]
     g = h // hkv
-    p_len = k_pref.shape[2]
-    assert p_len == pos_offset, (p_len, pos_offset)
+    p_len = k_pref.shape[2]          # padded prefix length (>= pos_offset)
     kp = (k_pref.astype(jnp.float32) * KV_CACHE_SCALE).transpose(0, 2, 1, 3)
     vp = (v_pref.astype(jnp.float32) * KV_CACHE_SCALE).transpose(0, 2, 1, 3)
     k_all = jnp.concatenate([kp, k_new.astype(jnp.float32)], axis=1)  # (B,T,Hkv,D)
@@ -765,7 +775,12 @@ def _attend_with_prefix(q, k_new, v_new, k_pref, v_pref, pos_offset):
     t = k_all.shape[1]
     qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
     scores = jnp.einsum("bshgd,bthd->bshgt", qg, k_all) * (d ** -0.5)
-    visible = (jnp.arange(t)[None, :] <= pos_offset + jnp.arange(s)[:, None])
+    # key index j: a prefix slot (j < p_len) is real iff j < pos_offset; a
+    # remainder key (j - p_len) is causally visible to query i iff <= i
+    tidx = jnp.arange(t)[None, :]
+    qidx = jnp.arange(s)[:, None]
+    visible = jnp.where(tidx < p_len, tidx < pos_offset,
+                        (tidx - p_len) <= qidx)
     scores = jnp.where(visible[None, :, None, None, :], scores, NEG_INF)
     m = jnp.max(scores, axis=-1, keepdims=True)
     pr = jnp.exp(scores - m)

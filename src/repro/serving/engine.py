@@ -37,6 +37,15 @@ token, weights in ROM). This engine generalizes it to the production mesh:
     distinction") — or ``batched`` mode, a bucketed full-sequence prefill
     per request that splices the resulting cache rows into the live batch
     (beyond-paper; amortizes long prompts).
+  * **chunked prefill** (``prefill_chunk=C``, batched GQA only): a long
+    prompt's batched prefill is split into ≤C-token segments, at most one
+    segment per tick while anything is decoding (the scheduler's
+    ``plan_prefill`` budget, most-urgent first), so co-resident decode slots
+    keep emitting during another request's prefill — SLO isolation against
+    head-of-line blocking. Chunk i resumes at ``pos_offset = i·C`` with the
+    previously committed chunks as ``prefix_kv`` (the same resume path a
+    prefix-cache hit uses), on both KV backends; outputs are token-identical
+    to unchunked prefill.
   * **sampling** comes from each request's frozen `SamplingParams`
     (serving/api.py): greedy, temperature, per-slot top-k, top-p nucleus
     mass and an optional per-request seed whose draws depend only on
@@ -76,6 +85,38 @@ Params = Any
 NEG_INF = -1e30
 
 
+# Jitted prefill entry points, module-level so the compile cache is shared
+# across engines of the same model (tests/benches build many). The resume
+# variant takes ``off`` as a *traced* scalar and the prefix padded to a
+# power-of-two bucket, so every chunk of a chunked prefill with the same
+# (token-bucket, prefix-bucket) shape pair reuses one compiled graph —
+# without this, each chunk's unique prefix length recompiles the prefill
+# and a "chunk" costs more than the monolithic prompt it replaced.
+def _fresh_prefill(model, params, toks, max_len, aidx):
+    kwargs = {} if aidx is None else {"adapter_idx": aidx}
+    return model.prefill(params, {"tokens": toks}, max_len, **kwargs)
+
+
+def _resume_prefill(model, params, toks, max_len, off, prefix_kv, aidx):
+    kwargs = {} if aidx is None else {"adapter_idx": aidx}
+    return model.prefill(params, {"tokens": toks}, max_len, pos_offset=off,
+                         prefix_kv=prefix_kv, **kwargs)
+
+
+def _prefill_jits(model):
+    """(fresh, resume) jitted wrappers, cached on the model instance (Model
+    is an unhashable dataclass, so it can't ride as a jit static arg)."""
+    fns = getattr(model, "_serving_prefill_jits", None)
+    if fns is None:
+        import functools
+        fns = (jax.jit(functools.partial(_fresh_prefill, model),
+                       static_argnums=(2,)),
+               jax.jit(functools.partial(_resume_prefill, model),
+                       static_argnums=(2,)))
+        model._serving_prefill_jits = fns
+    return fns
+
+
 @dataclasses.dataclass
 class Request:
     """A submitted request: the immutable `RequestSpec`/`SamplingParams`
@@ -100,6 +141,7 @@ class Request:
     n_preempts: int = 0
     prefix_hit_tokens: int = 0      # prompt tokens served from the prefix cache
     prefill_ticks: int = 0          # decode ticks spent consuming the prompt
+    prefill_chunks: int = 0         # chunked-prefill segments run for this req
     _seq: int = 0                   # scheduler arrival order
 
     def __post_init__(self):
@@ -157,6 +199,8 @@ class EngineStats:
     cancelled: int = 0
     expired: int = 0
     prefix_hit_tokens: int = 0
+    prefill_chunks: int = 0       # chunked-prefill segments run
+    decode_stall_s: float = 0.0   # wall time decode slots waited on prefill
     wall_s: float = 0.0
 
     @property
@@ -167,16 +211,27 @@ class EngineStats:
 class ServeEngine:
     def __init__(self, model: Model, params: Params, *, max_slots: int = 8,
                  max_len: int = 1024, prefill: str = "token", seed: int = 0,
+                 prefill_chunk: Optional[int] = None,
                  kv: Union[str, KVBackend, None] = None, page: int = 64,
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
                  scheduler=None, adapters=None):
         assert model.mode in ("serve", "qlora")
+        assert prefill_chunk is None or prefill_chunk >= 1, \
+            "prefill_chunk must be >= 1 tokens (or None for monolithic prefill)"
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_mode = prefill
+        # chunked prefill (SLO isolation): batched prefill of a long prompt is
+        # split into <= prefill_chunk-token segments, one per tick, so decode
+        # slots keep emitting while another request's prompt is in flight.
+        # Chunk i resumes at pos_offset = i*C with the previous chunks'
+        # committed cache as prefix_kv (the prefix-cache resume path). Only
+        # meaningful with prefill="batched" on GQA families — token mode is
+        # already maximally chunked (one prompt token per tick).
+        self.prefill_chunk = prefill_chunk
         self.key = jax.random.PRNGKey(seed)
         # multi-tenant adapters (serving/adapters/AdapterServing): per-request
         # adapter_id selects a frozen ternary LoRA; resident adapters ride in
@@ -206,6 +261,10 @@ class ServeEngine:
         self.slot_adapter = np.zeros((max_slots,), np.int32)  # device slot (0=none)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.pending_prompt: List[List[int]] = [[] for _ in range(max_slots)]
+        # chunked-prefill state machine: a slot with a non-empty todo list is
+        # *prefilling* (admitted, pages reserved, excluded from decode) until
+        # the tick loop has prefilled all but its last prompt token
+        self.slot_prefill_todo: List[List[int]] = [[] for _ in range(max_slots)]
         self.slot_feed: List[List[int]] = [[] for _ in range(max_slots)]
         self.slot_keys: List[List] = [[] for _ in range(max_slots)]
         self.slot_cached: List[int] = [0] * max_slots     # cache-owned lead pages
@@ -358,6 +417,16 @@ class ServeEngine:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def _is_decoding(self, slot: int) -> bool:
+        """True when the slot belongs in the decode batch. A slot whose
+        chunked prefill is still in flight is NOT decoding even if the
+        request already has output tokens (a preempted-while-decoding
+        request replays prompt+output through chunked prefill — feeding it
+        to decode mid-prefill would shift its KV positions)."""
+        req = self.slot_req[slot]
+        return (req is not None and not self.slot_prefill_todo[slot]
+                and bool(self.pending_prompt[slot] or req.output))
+
     def _active_pairs(self) -> List[Tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
 
@@ -494,9 +563,19 @@ class ServeEngine:
         batched_ok = (self.cfg.family not in ("ssm", "hybrid")
                       and len(remainder) > 1
                       and (matched == 0 or self.cfg.attention_kind == "gqa"))
+        chunkable = (self.prefill_chunk is not None
+                     and self.cfg.attention_kind == "gqa"
+                     and len(remainder) - 1 > self.prefill_chunk)
         if self.prefill_mode == "batched" and batched_ok:
-            self._batched_prefill(slot, remainder, matched)
-            self.pending_prompt[slot] = [remainder[-1]]
+            if chunkable:
+                # chunked: defer to the tick loop's chunk planner — the slot
+                # holds its reserved pages but stays out of decode until the
+                # last chunk commits
+                self.slot_prefill_todo[slot] = list(remainder)
+                self.pending_prompt[slot] = []
+            else:
+                self._batched_prefill(slot, remainder, matched)
+                self.pending_prompt[slot] = [remainder[-1]]
         else:
             # paper mode: prompt tokens stream through decode_step
             self.pending_prompt[slot] = list(remainder)
@@ -511,25 +590,91 @@ class ServeEngine:
         ``matched`` > 0 resumes after a prefix-cache hit: positions offset by
         the cached span and the remainder attends the already-committed
         prefix pages."""
-        n = len(feed) - 1          # last prompt token goes through decode
+        # last prompt token goes through decode
+        self._prefill_span(slot, feed[:-1], matched)
+
+    def _prefill_span(self, slot: int, tokens: List[int], start: int) -> None:
+        """Prefill ``tokens`` into positions ``start .. start+n`` of the
+        slot's cache (bucketed length). ``start`` > 0 resumes mid-sequence:
+        positions offset by the committed span (prefix-cache pages and/or
+        earlier chunks) and the new tokens attend the committed k/v via
+        ``prefix_kv``. Wall time spent here while other slots were mid-decode
+        is charged to ``stats.decode_stall_s`` — the decode-starvation signal
+        chunking exists to shrink."""
+        n = len(tokens)
         if n <= 0:
             return
+        t0 = time.time()
         bucket = 1 << max(4, (n - 1).bit_length())
-        bucket = min(bucket, self.max_len - matched)
+        bucket = min(bucket, self.max_len - start)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :n] = feed[:n]
-        kwargs = {}
-        if matched:
-            kwargs["pos_offset"] = matched
-            kwargs["prefix_kv"] = self.kv.prefix_kv(slot, self.slot_cached[slot])
+        toks[0, :n] = tokens
+        aidx = None
         if self.adapters is not None and self.slot_adapter[slot]:
-            kwargs["adapter_idx"] = jnp.asarray([self.slot_adapter[slot]],
-                                                jnp.int32)
-        _, sub_cache = self.model.prefill(self._effective_params(),
-                                          {"tokens": jnp.asarray(toks)},
-                                          self.max_len, **kwargs)
-        self.kv.write_prefill(slot, matched, sub_cache, n)
-        self.pos[slot] = matched + n
+            aidx = jnp.asarray([self.slot_adapter[slot]], jnp.int32)
+        use_jit = self.cfg.attention_kind == "gqa" \
+            and self.cfg.family not in ("ssm", "hybrid")
+        if start:
+            # pad the committed prefix to a power-of-two bucket (the padded
+            # tail is masked by position inside the model) so consecutive
+            # chunks hit the same compiled resume graph
+            pref = self.kv.prefix_kv(slot, start)
+            pbucket = min(1 << max(4, (start - 1).bit_length()), self.max_len)
+            if pbucket > start:
+                pad = [(0, 0)] * 5
+                pad[3] = (0, pbucket - start)
+                pref = {k: jnp.pad(v, pad) for k, v in pref.items()}
+            _, sub_cache = _prefill_jits(self.model)[1](
+                self._effective_params(), jnp.asarray(toks),
+                self.max_len, jnp.int32(start), pref, aidx)
+        elif use_jit:
+            _, sub_cache = _prefill_jits(self.model)[0](
+                self._effective_params(), jnp.asarray(toks),
+                self.max_len, aidx)
+        else:
+            kwargs = {} if aidx is None else {"adapter_idx": aidx}
+            _, sub_cache = self.model.prefill(self._effective_params(),
+                                              {"tokens": jnp.asarray(toks)},
+                                              self.max_len, **kwargs)
+        self.kv.write_prefill(slot, start, sub_cache, n)
+        self.pos[slot] = start + n
+        if any(self._is_decoding(i) for i in range(self.max_slots)
+               if i != slot):
+            # charge real prefill compute, not just async dispatch time —
+            # without the sync, the stall gauge under-reports on async
+            # backends and the monolithic-vs-chunked A/B inverts
+            jax.block_until_ready(sub_cache)
+            self.stats.decode_stall_s += time.time() - t0
+
+    def _advance_prefill(self) -> int:
+        """Run the prefill chunks the scheduler planned for this tick.
+        Returns the number of chunks advanced (each is one
+        ``prefill_chunk``-token ``model.prefill`` segment); a slot whose todo
+        list drops to its final prompt token transitions to decoding and
+        joins this very tick's batch."""
+        prefilling = [(i, self.slot_req[i]) for i in range(self.max_slots)
+                      if self.slot_req[i] is not None
+                      and self.slot_prefill_todo[i]]
+        if not prefilling:
+            return 0
+        n_decoding = sum(1 for i in range(self.max_slots)
+                         if self._is_decoding(i))
+        advanced = 0
+        for slot in self.scheduler.plan_prefill(prefilling, n_decoding):
+            todo = self.slot_prefill_todo[slot]
+            n = min(self.prefill_chunk, len(todo) - 1)
+            self._prefill_span(slot, todo[:n], int(self.pos[slot]))
+            req = self.slot_req[slot]
+            req.prefill_chunks += 1
+            self.stats.prefill_chunks += 1
+            todo = todo[n:]
+            if len(todo) == 1:
+                self.pending_prompt[slot] = [todo[0]]
+                self.slot_prefill_todo[slot] = []
+            else:
+                self.slot_prefill_todo[slot] = todo
+            advanced += 1
+        return advanced
 
     # -- capacity / preemption ------------------------------------------------------
     def _ensure_capacity(self, active: List[int]) -> List[int]:
@@ -549,9 +694,11 @@ class ServeEngine:
                 self.kv.free_pages(self.prefix.evict(short))
                 if need <= self.kv.pages_free:
                     return active
-            victim = self.scheduler.pick_victim(
-                [(i, self.slot_req[i]) for i in active])
-            if victim is None or len(active) <= 1:
+            # victims may also be mid-chunked-prefill slots (not in the
+            # decode ``active`` list) — their reserved pages are reclaimable
+            pairs = self._active_pairs()
+            victim = self.scheduler.pick_victim(pairs)
+            if victim is None or len(pairs) <= 1:
                 raise MemoryError(
                     "page pool exhausted: a single request's context exceeds "
                     "pool capacity (grow n_pages)")
@@ -579,6 +726,10 @@ class ServeEngine:
         self.kv.release(slot, keep=self.slot_cached[slot])
         self.slot_req[slot] = None
         self.pending_prompt[slot] = []
+        # preemption-safe partial-prefill release: committed chunk pages go
+        # back to the pool (prefix-cache-owned lead pages excluded via keep=),
+        # and a requeued request replays prefill from scratch on re-admission
+        self.slot_prefill_todo[slot] = []
         self.slot_feed[slot] = []
         self.slot_keys[slot] = []
         self.slot_cached[slot] = 0
@@ -594,13 +745,18 @@ class ServeEngine:
         return jnp.asarray(self.slot_adapter)
 
     def tick(self) -> None:
-        """One decode step for the whole slot batch."""
+        """One decode step for the whole slot batch, preceded by the tick's
+        chunked-prefill budget. A slot mid-chunked-prefill is excluded from
+        the decode batch, so co-resident decode slots keep emitting every
+        tick while its prompt streams in chunk by chunk."""
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        chunks = self._advance_prefill()
+        active = [i for i in range(self.max_slots) if self._is_decoding(i)]
+        if active:
+            active = self._ensure_capacity(active)
         if not active:
-            return
-        active = self._ensure_capacity(active)
-        if not active:
+            if chunks:
+                self.stats.ticks += 1   # prefill-only tick still progresses
             return
 
         tokens = np.zeros((self.max_slots,), np.int32)

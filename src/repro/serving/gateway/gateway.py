@@ -141,6 +141,16 @@ class Gateway:
         self.metrics.set_gauge(
             "active_slots",
             sum(1 for r in eng.slot_req if r is not None))
+        self.metrics.set_gauge(
+            "prefilling_slots",
+            sum(1 for todo in eng.slot_prefill_todo if todo))
+        # chunked-prefill telemetry: cumulative chunk count plus the
+        # decode-starvation gauge (wall seconds decode slots spent stalled
+        # behind another request's prefill — the head-of-line signal
+        # prefill_chunk exists to shrink)
+        self.metrics.set_gauge("prefill_chunks", eng.stats.prefill_chunks)
+        self.metrics.set_gauge("decode_stall_s",
+                               round(eng.stats.decode_stall_s, 4))
         if eng.pool is not None:
             total = eng.pool.cfg.n_pages
             self.metrics.set_gauge("pool_pages_free", eng.pool.pages_free)

@@ -72,7 +72,8 @@ class Metrics:
     counters:  requests_submitted / rejected / expired / cancelled /
                completed / preempted, tokens_out, prefix_hit_tokens,
                prefill_ticks_saved
-    gauges:    queue_depth, active_slots, pool_pages_free, pool_occupancy
+    gauges:    queue_depth, active_slots, prefilling_slots, prefill_chunks,
+               decode_stall_s, pool_pages_free, pool_occupancy
     histograms (ms): ttft_ms, tbt_ms, e2e_ms, queue_wait_ms
     """
 

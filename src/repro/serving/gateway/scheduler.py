@@ -20,6 +20,11 @@ Policy (documented, deliberately simple — the engine is tick-synchronous):
     names the youngest request of the lowest-priority class; the engine
     releases its pages and ``requeue``s it (generated tokens re-enter as
     prompt, so no work is lost beyond the re-prefill).
+  * **chunked-prefill budget**: ``plan_prefill`` names the prefilling slots
+    that advance one chunk this tick — at most one (the most urgent, same
+    (priority, deadline, arrival) order) while anything decodes, all of them
+    when the decode batch is empty. Decode cadence is protected and chunk
+    scheduling inherits the EDF/priority invariants.
   * **adapter affinity**: ``pop_next(prefer=...)`` lets the engine prefer
     requests whose QLoRA adapter is already resident in the SRAM-budget
     cache — but only among entries with identical (priority, deadline), so
@@ -120,6 +125,24 @@ class Scheduler:
         if best_i is None:
             return None
         return self._entries.pop(best_i)
+
+    def plan_prefill(self, prefilling: Sequence[Tuple[int, Request]],
+                     n_decoding: int) -> List[int]:
+        """Chunked-prefill budget for this tick: which prefilling slots
+        advance one chunk. While any slot is decoding, only the most urgent
+        prefill advances — one chunk per tick bounds the inter-token gap
+        decode slots see to a single chunk's compute. With nothing decoding
+        there is no cadence to protect, so every prefilling slot advances
+        (lowest TTFT). Urgency is the same (priority, deadline, arrival)
+        order the queue uses, so EDF/priority hold across chunk scheduling
+        too: a background prompt can never stall an interactive one's
+        chunks."""
+        order = sorted(prefilling, key=lambda sr: (
+            sr[1].priority,
+            sr[1].deadline_s if sr[1].deadline_s is not None else math.inf,
+            sr[1]._seq))
+        slots = [slot for slot, _ in order]
+        return slots[:1] if n_decoding > 0 else slots
 
     def pick_victim(self, active: Sequence[Tuple[int, Request]],
                     below_priority: Optional[int] = None) -> Optional[int]:

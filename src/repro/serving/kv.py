@@ -103,9 +103,12 @@ class KVBackend:
         positions ``start .. start+n``) into the slot's storage."""
         raise NotImplementedError
 
-    def prefix_kv(self, slot: int, n_pages: int):
-        """Materialize the slot's cached prefix k/v for a mid-sequence
-        prefill resume (prefix-cache hit). Paged-only."""
+    def prefix_kv(self, slot: int, upto_tokens: int):
+        """Materialize the slot's first ``upto_tokens`` committed k/v
+        positions (fp8 cache encoding, ``{"k","v"}: (L, 1, Hkv, T, D)``) for
+        a mid-sequence prefill resume — a prefix-cache hit or the next chunk
+        of a chunked prefill. Token-granular: chunk boundaries need not be
+        page-aligned."""
         raise NotImplementedError
 
 
@@ -127,7 +130,24 @@ class DenseKV(KVBackend):
         self.cache = new_state
 
     def write_prefill(self, slot, start, sub_cache, n) -> None:
-        self.cache = _splice_cache(self.cache, sub_cache, slot)
+        if start == 0:
+            self.cache = _splice_cache(self.cache, sub_cache, slot)
+            return
+        # chunked-prefill resume: only [start, start+n) is fresh — splicing
+        # the whole row would clobber the committed prefix with the chunk
+        # cache's zeros. GQA layout only (k/v: (L, B, Hkv, S, D)), which is
+        # the only family the mid-sequence prefill path supports.
+        new = dict(self.cache)
+        for key in ("k", "v"):
+            span = sub_cache[key][:, :, :, start:start + n]
+            new[key] = jax.lax.dynamic_update_slice(
+                self.cache[key], span.astype(self.cache[key].dtype),
+                (0, slot, 0, start, 0))
+        self.cache = new
+
+    def prefix_kv(self, slot, upto_tokens):
+        return {"k": self.cache["k"][:, slot:slot + 1, :, :upto_tokens],
+                "v": self.cache["v"][:, slot:slot + 1, :, :upto_tokens]}
 
 
 class PagedKV(KVBackend):
@@ -231,9 +251,12 @@ class PagedKV(KVBackend):
                              sub_cache["k"][:, 0, :, start:start + n],
                              sub_cache["v"][:, 0, :, start:start + n])
 
-    def prefix_kv(self, slot, n_pages):
+    def prefix_kv(self, slot, upto_tokens):
+        n_pages = self.pool.pages_for(upto_tokens)
         gk, gv = self.pool.gather_slot(slot, n_pages)
-        return {"k": gk, "v": gv}
+        # the final page may be partially filled (chunk boundaries are
+        # token-granular) — hand back exactly the committed span
+        return {"k": gk[:, :, :, :upto_tokens], "v": gv[:, :, :, :upto_tokens]}
 
 
 def as_backend(kv: Union[str, KVBackend, None], *, page: int = 64,

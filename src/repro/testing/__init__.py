@@ -1,0 +1,2 @@
+"""Test-support utilities (importable via the same ``PYTHONPATH=src`` the
+test suite already uses). Not part of the serving/runtime surface."""

@@ -1,0 +1,244 @@
+"""Chunked prefill: token identity + SLO isolation.
+
+Acceptance matrix for the chunked-prefill tentpole: splitting a long
+prompt's batched prefill into ``prefill_chunk``-token segments (chunk i
+resumes at ``pos_offset = i·C`` with the committed chunks as ``prefix_kv``)
+must be **token-identical** to monolithic prefill for every
+``{DenseKV, PagedKV} × {adapter, none} × chunk size`` combination,
+including a prefix-cache hit followed by a chunked resume of the remainder.
+Plus the behavioural half: decode slots keep emitting every tick while
+another request's prompt streams in chunks, preemption mid-prefill releases
+pages and replays cleanly, and the chunk planner follows priority order.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.train import reduce_config
+from repro.models.transformer import Model
+from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
+                           ServeEngine)
+from repro.serving.adapters import (AdapterRegistry, AdapterServing,
+                                    AdapterSpec, synthetic_adapter_stacks)
+from repro.serving.gateway import Gateway
+
+jax.config.update("jax_enable_x64", False)
+
+ADAPTER_SPEC = AdapterSpec(rank=8, alpha=16.0, targets=("q", "v"))
+LONG = 17                      # longest prompt in the identity workload
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def registry(model_params):
+    model, _ = model_params
+    reg = AdapterRegistry(ADAPTER_SPEC)
+    rng = np.random.default_rng(11)
+    for i in range(2):
+        reg.register(f"tenant-{i}",
+                     synthetic_adapter_stacks(rng, model.cfg, ADAPTER_SPEC,
+                                              model.cfg.num_layers,
+                                              scale=0.05))
+    return reg
+
+
+def _prompts():
+    rng = np.random.default_rng(4)
+    return [list(rng.integers(0, 100, size=n)) for n in (LONG, 5, 12)]
+
+
+def _make_engine(model, params, registry, backend, adapter, chunk, **kw):
+    make = {"dense": DenseKV, "paged": lambda: PagedKV(page=PAGE)}[backend]
+    adapters = None
+    if adapter:
+        nbytes = registry.get("tenant-0").nbytes
+        adapters = AdapterServing(model, registry, budget_bytes=nbytes * 2,
+                                  max_resident=2)
+    return ServeEngine(model, params, max_slots=3, max_len=64,
+                       prefill="batched", prefill_chunk=chunk, kv=make(),
+                       seed=7, adapters=adapters, **kw)
+
+
+_memo = {}
+
+
+def _outputs(model_params, registry, backend, adapter, chunk):
+    """Greedy outputs for the standard workload (memoized: the unchunked
+    baseline is shared across every chunk-size case)."""
+    key = (backend, adapter, chunk)
+    if key not in _memo:
+        model, params = model_params
+        eng = _make_engine(model, params, registry, backend, adapter, chunk)
+        reqs = [eng.submit(p, RequestSpec(max_new_tokens=5,
+                                          adapter_id=adapter))
+                for p in _prompts()]
+        stats = eng.run_until_drained()
+        assert stats.completed == len(reqs)
+        _memo[key] = ([list(r.output) for r in reqs], stats.prefill_chunks)
+    return _memo[key]
+
+
+class TestTokenIdentityMatrix:
+    @pytest.mark.parametrize("backend", ["dense", "paged"])
+    @pytest.mark.parametrize("adapter", [None, "tenant-0"])
+    @pytest.mark.parametrize("chunk", [1, 4, LONG, LONG + 7])
+    def test_chunked_matches_unchunked(self, model_params, registry,
+                                       backend, adapter, chunk):
+        base, _ = _outputs(model_params, registry, backend, adapter, None)
+        got, n_chunks = _outputs(model_params, registry, backend, adapter,
+                                 chunk)
+        assert got == base, (backend, adapter, chunk)
+        if chunk < LONG - 1:
+            # the small chunk sizes must actually exercise the chunk path
+            assert n_chunks > 0
+
+    def test_chunk_accounting(self, model_params, registry):
+        """A C-token chunker spends ceil((len-1)/C) segments on a prompt
+        longer than C+1 and transitions to decode with no tokens lost."""
+        model, params = model_params
+        eng = _make_engine(model, params, registry, "paged", None, 4)
+        req = eng.submit(list(range(1, LONG + 1)),
+                         RequestSpec(max_new_tokens=3))
+        eng.run_until_drained()
+        assert req.state == "done" and len(req.output) == 3
+        assert req.prefill_chunks == -(-(LONG - 1) // 4)
+
+
+class TestPrefixCacheThenChunkedResume:
+    def test_hit_then_chunked_remainder(self, model_params, registry):
+        """A prefix-cache hit resumes *and* the remainder is chunked: the
+        slot starts at the shared span, streams the rest in chunks, and the
+        output matches the unchunked prefix-cache engine token for token."""
+        model, params = model_params
+        rng = np.random.default_rng(9)
+        shared = list(rng.integers(0, 100, size=2 * PAGE))  # 2 full pages
+        tail = list(rng.integers(0, 100, size=13))
+        outs = {}
+        for chunk in (None, 3):
+            eng = _make_engine(model, params, registry, "paged", None, chunk,
+                               prefix_cache=True)
+            warm = eng.submit(shared + [7, 8], RequestSpec(max_new_tokens=2))
+            eng.run_until_drained()
+            assert warm.state == "done"
+            req = eng.submit(shared + tail, RequestSpec(max_new_tokens=5))
+            eng.run_until_drained()
+            assert req.state == "done"
+            assert req.prefix_hit_tokens == 2 * PAGE
+            if chunk:
+                assert req.prefill_chunks == -(-(len(tail) - 1) // chunk)
+            outs[chunk] = list(req.output)
+        assert outs[3] == outs[None]
+
+
+class TestSLOIsolation:
+    def test_decode_keeps_emitting_during_chunked_prefill(self, model_params,
+                                                          registry):
+        """The SLO-isolation contract: while a long prompt streams in
+        chunks, an already-decoding slot emits one token on every tick —
+        zero starvation ticks — and the prefill still completes."""
+        model, params = model_params
+        eng = _make_engine(model, params, registry, "paged", None, 2)
+        short = eng.submit([1, 2, 3], RequestSpec(max_new_tokens=30))
+        for _ in range(3):
+            eng.tick()
+        have = len(short.output)
+        assert have > 0
+        long_req = eng.submit(list(range(1, LONG + 1)),
+                              RequestSpec(max_new_tokens=2))
+        for i in range(1, 9):
+            eng.tick()
+            assert len(short.output) == have + i, \
+                "decode slot starved during another request's chunked prefill"
+        assert long_req.prefill_chunks > 0
+        eng.run_until_drained()
+        assert long_req.state == "done" and short.state == "done"
+
+    def test_chunk_planner_priority_order(self, model_params, registry):
+        """With two prompts mid-chunked-prefill and a decode slot active,
+        the interactive (priority 0) prompt's chunks advance first."""
+        model, params = model_params
+        eng = _make_engine(model, params, registry, "paged", None, 2)
+        busy = eng.submit([1, 2], RequestSpec(max_new_tokens=40))
+        eng.tick()
+        assert len(busy.output) >= 1
+        bg = eng.submit(list(range(1, 14)),
+                        RequestSpec(max_new_tokens=2, priority=2))
+        fg = eng.submit(list(range(2, 15)),
+                        RequestSpec(max_new_tokens=2, priority=0))
+        eng.tick()                 # both admitted; one chunk budget: fg first
+        assert fg.prefill_chunks == 1
+        assert bg.prefill_chunks == 0
+        eng.run_until_drained()
+        assert fg.state == bg.state == "done"
+        # fg finished prefill strictly before bg started emitting
+        assert fg.t_first <= bg.t_first
+
+    def test_preempt_mid_prefill_releases_and_replays(self, model_params,
+                                                      registry):
+        """Preemption-safe partial-prefill release: a mid-chunked-prefill
+        victim gives its pages back (no leak), requeues, and still produces
+        the same tokens as an undisturbed run."""
+        model, params = model_params
+        # solo reference
+        eng = _make_engine(model, params, registry, "paged", None, 3)
+        ref = eng.submit(list(range(1, LONG + 1)), RequestSpec(max_new_tokens=4))
+        eng.run_until_drained()
+        assert ref.state == "done"
+
+        # 7-page (28-token) pool: bg's prefill holds 5 pages, so admitting
+        # the priority-0 fg (4 pages) forces a mid-prefill preemption
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          prefill="batched", prefill_chunk=3, seed=7,
+                          kv=PagedKV(page=4, n_pages=7))
+        bg = eng.submit(list(range(1, LONG + 1)),
+                        RequestSpec(max_new_tokens=4, priority=2))
+        eng.tick()                              # bg starts chunking
+        assert eng.slot_prefill_todo[0]
+        fg = eng.submit(list(range(1, 16)),
+                        RequestSpec(max_new_tokens=4, priority=0))
+        eng.tick()
+        assert bg.n_preempts == 1 and bg.state in ("preempted", "running")
+        assert not bg.output      # it was still mid-prefill when evicted
+        eng.run_until_drained()
+        assert fg.state == "done" and bg.state == "done"
+        assert eng.stats.preemptions >= 1
+        assert list(bg.output) == list(ref.output)
+        # all pages returned once both slots drained
+        assert eng.pool.pages_free == 7
+        assert eng.kv.pages_free == 7
+
+    def test_preempt_mid_decode_replays_through_chunks(self, model_params,
+                                                       registry):
+        """A request preempted *while decoding* replays prompt+output
+        through chunked prefill on re-admission — it must stay out of the
+        decode batch until the replay commits (feeding it mid-prefill would
+        shift its KV positions) and still match an undisturbed run."""
+        model, params = model_params
+        prompt = list(range(3, 13))                      # 10 tokens
+        eng = _make_engine(model, params, registry, "paged", None, 3)
+        ref = eng.submit(prompt, RequestSpec(max_new_tokens=6))
+        eng.run_until_drained()
+        assert ref.state == "done"
+
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          prefill="batched", prefill_chunk=3, seed=7,
+                          kv=PagedKV(page=4, n_pages=7))
+        bg = eng.submit(prompt, RequestSpec(max_new_tokens=6, priority=2))
+        for _ in range(6):       # 3 chunk ticks + ~3 decode ticks
+            eng.tick()
+        assert len(bg.output) >= 2          # genuinely mid-decode
+        fg = eng.submit(list(range(1, 16)),
+                        RequestSpec(max_new_tokens=4, priority=0))
+        eng.run_until_drained()
+        assert fg.state == "done" and bg.state == "done"
+        assert bg.n_preempts >= 1
+        assert list(bg.output) == list(ref.output)
+        assert eng.pool.pages_free == 7

@@ -4,8 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings  # noqa: E402
+try:                      # real hypothesis when installed (CI does)
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+except ImportError:       # deterministic fallback — properties never skip
+    from repro.testing.hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import fp8, ternary
 from repro.kernels.flash_decode import ops as fd_ops

@@ -1,0 +1,252 @@
+"""Seeded deterministic serving stress harness.
+
+Random request streams — mixed prompt lengths, priorities, deadlines,
+adapters, sampling params, cancels — driven tick-by-tick against the full
+engine stack (paged KV + prefix cache + chunked prefill + multi-tenant
+adapters + SLO scheduler), with structural invariants asserted on *every
+tick*:
+
+  * **no page leaks**: every pool page is owned by exactly one of
+    {free list, prefix-cache trie, a slot's private table span}; shared
+    lead pages always belong to the trie;
+  * **pinned adapters are never evicted** while their request is in flight;
+  * **EDF is never inverted within a priority class**: the scheduler hands
+    out a request only if no admissible queued entry has a strictly more
+    urgent (priority, deadline) key (checked by a wrapping scheduler);
+  * **every stream terminates** with eos / budget / cancel / expiry — no
+    zombie requests after drain, and no output ever exceeds its budget.
+
+The stream is generated from ``FUZZ_SEED`` (env, default 0): the fast lane
+pins it, a non-blocking CI job rotates it per run. Every assertion message
+carries the seed, so a red run reproduces with
+``FUZZ_SEED=<n> pytest tests/test_serving_fuzz.py``.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.train import reduce_config
+from repro.models.transformer import Model
+from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
+                           ServeEngine)
+from repro.serving.adapters import (AdapterRegistry, AdapterServing,
+                                    AdapterSpec, synthetic_adapter_stacks)
+from repro.serving.gateway import Gateway
+from repro.serving.gateway.scheduler import Scheduler
+
+jax.config.update("jax_enable_x64", False)
+
+pytestmark = pytest.mark.fuzz
+
+SEED = int(os.environ.get("FUZZ_SEED", "0"))
+TICKS = int(os.environ.get("FUZZ_TICKS", "220"))
+PAGE = 4
+N_PAGES = 24      # tight: 3 slots' worst case + trie overflows it → pressure
+ADAPTER_SPEC = AdapterSpec(rank=4, alpha=8.0, targets=("q", "v"))
+TERMINAL = ("done", "cancelled", "expired", "rejected")
+
+
+def _fail(msg):
+    pytest.fail(f"[fuzz seed={SEED}] {msg} — reproduce with "
+                f"FUZZ_SEED={SEED} pytest tests/test_serving_fuzz.py")
+
+
+def check(cond, msg):
+    if not cond:
+        _fail(msg)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def registry(model_params):
+    model, _ = model_params
+    reg = AdapterRegistry(ADAPTER_SPEC)
+    rng = np.random.default_rng(23)
+    for i in range(2):
+        reg.register(f"tenant-{i}",
+                     synthetic_adapter_stacks(rng, model.cfg, ADAPTER_SPEC,
+                                              model.cfg.num_layers,
+                                              scale=0.05))
+    return reg
+
+
+class EDFCheckingScheduler(Scheduler):
+    """Asserts the no-inversion invariant on every hand-out: among entries
+    admissible *right now*, the one granted has the minimal
+    (priority, deadline) key — ``prefer`` may only break exact-key ties."""
+
+    def pop_next(self, can_admit=lambda r: True, prefer=None):
+        admissible = [r for r in self._entries if can_admit(r)]
+        got = super().pop_next(can_admit, prefer)
+        if got is not None and admissible:
+            gk = self._key(got)[:2]
+            best = min(self._key(r)[:2] for r in admissible)
+            check(gk <= best,
+                  f"EDF inversion: granted key {gk} but {best} was "
+                  f"admissible and more urgent")
+        return got
+
+
+def _page_invariants(eng):
+    """Exactly-once page ownership across free list / trie / slot tables."""
+    pool = eng.pool
+    free = list(pool.free)
+    check(len(free) == len(set(free)), "duplicate page ids in the free list")
+    trie = {nd.page_id for nd in eng.prefix.nodes.values()} \
+        if eng.prefix is not None else set()
+    owned = []
+    for slot in range(eng.max_slots):
+        shared = pool.tables[slot][: eng.slot_cached[slot]]
+        check(set(shared) <= trie,
+              f"slot {slot} claims cache-shared pages {shared} the trie "
+              f"does not own")
+        owned += pool.tables[slot][eng.slot_cached[slot]:]
+    check(len(owned) == len(set(owned)),
+          "one page privately owned by two slots")
+    every = free + sorted(trie) + owned
+    check(len(every) == len(set(every)),
+          "page owned by more than one of {free, trie, slot}")
+    check(len(every) == pool.cfg.n_pages,
+          f"page leak: {pool.cfg.n_pages - len(every)} pages unaccounted")
+
+
+def _adapter_invariants(eng):
+    for slot, req in eng._active_pairs():
+        if req.adapter_id is not None:
+            check(eng.adapters.is_resident(req.adapter_id),
+                  f"in-flight adapter {req.adapter_id} not resident")
+            check(eng.adapters.cache.pinned(req.adapter_id),
+                  f"in-flight adapter {req.adapter_id} not pinned")
+
+
+def _terminal_invariants(reqs):
+    for req in reqs:
+        check(req.state in TERMINAL,
+              f"request {req.uid} stuck in state {req.state!r} after drain")
+        check(len(req.output) <= req.max_new_tokens,
+              f"request {req.uid} overran its token budget")
+        if req.state == "done":
+            ended_by_eos = (req.spec.eos_id is not None
+                            and req.output[-1] == req.spec.eos_id)
+            check(len(req.output) == req.max_new_tokens or ended_by_eos,
+                  f"request {req.uid} 'done' without eos or budget "
+                  f"({len(req.output)}/{req.max_new_tokens})")
+
+
+def _random_spec(rng, tick):
+    priority = int(rng.integers(0, 3))
+    deadline = None
+    roll = rng.random()
+    if roll < 0.25:
+        deadline = float(rng.integers(30_000, 90_000))   # far future: EDF order
+    elif roll < 0.30:
+        deadline = -1.0                                  # already expired
+    adapter = None
+    if rng.random() < 0.4:
+        adapter = f"tenant-{int(rng.integers(0, 2))}"
+    eos = int(rng.integers(0, 50)) if rng.random() < 0.3 else None
+    return RequestSpec(max_new_tokens=int(rng.integers(1, 7)),
+                       priority=priority, deadline_ms=deadline,
+                       adapter_id=adapter, eos_id=eos)
+
+
+def _random_sampling(rng):
+    if rng.random() < 0.6:
+        return SamplingParams()          # greedy
+    return SamplingParams(temperature=0.8, top_k=int(rng.integers(0, 8)),
+                          top_p=float(rng.choice([1.0, 0.9])),
+                          seed=int(rng.integers(0, 1000)))
+
+
+def _random_prompt(rng, prefixes):
+    tail = list(rng.integers(0, 50, size=int(rng.integers(1, 12))))
+    if rng.random() < 0.5:               # shared system prefix → trie traffic
+        return list(prefixes[int(rng.integers(0, len(prefixes)))]) + tail
+    return tail
+
+
+def _drive(eng, gw, rng, ticks, reqs, prefixes, paged):
+    live_uids = []
+    for t in range(ticks):
+        if rng.random() < 0.18 and len(reqs) < 64:
+            req = gw.submit(_random_prompt(rng, prefixes),
+                            _random_spec(rng, t), _random_sampling(rng))
+            reqs.append(req)
+            if req.state != "rejected":
+                live_uids.append(req.uid)
+        if live_uids and rng.random() < 0.04:
+            gw.cancel(live_uids.pop(int(rng.integers(0, len(live_uids)))))
+        gw.step()
+        if paged:
+            _page_invariants(eng)
+        if eng.adapters is not None:
+            _adapter_invariants(eng)
+
+
+class TestServingFuzz:
+    def test_paged_full_stack(self, model_params, registry):
+        """The headline harness: paged KV + prefix cache + chunked prefill +
+        adapters + cancels, >= TICKS seeded ticks, invariants every tick."""
+        model, params = model_params
+        nbytes = registry.get("tenant-0").nbytes
+        adapters = AdapterServing(model, registry, budget_bytes=nbytes * 2,
+                                  max_resident=2)
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=PagedKV(page=PAGE, n_pages=N_PAGES),
+                          prefix_cache=True, seed=SEED,
+                          scheduler=EDFCheckingScheduler(),
+                          adapters=adapters)
+        gw = Gateway(eng)
+        rng = np.random.default_rng(SEED)
+        prefixes = [list(rng.integers(0, 50, size=2 * PAGE))
+                    for _ in range(2)]
+        reqs = []
+        _drive(eng, gw, rng, TICKS, reqs, prefixes, paged=True)
+        check(len(reqs) >= 10, "stream produced too few requests to stress "
+                               "anything — raise the submit rate")
+        # drain: no new arrivals, invariants still per tick
+        for _ in range(3000):
+            if not (len(eng.scheduler)
+                    or any(r is not None for r in eng.slot_req)):
+                break
+            gw.step()
+            _page_invariants(eng)
+            _adapter_invariants(eng)
+        _terminal_invariants(reqs)
+        # after full drain only trie-owned pages may stay out of the pool
+        trie = len({nd.page_id for nd in eng.prefix.nodes.values()})
+        check(eng.pool.pages_free + trie == N_PAGES,
+              "pages missing after full drain")
+        check(eng.stats.prefill_chunks > 0,
+              "stream never exercised chunked prefill — lengthen prompts")
+
+    def test_dense_backend(self, model_params):
+        """Same stream shape on DenseKV (no paging/prefix): termination and
+        EDF invariants must hold there too."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=DenseKV(), seed=SEED + 1,
+                          scheduler=EDFCheckingScheduler())
+        gw = Gateway(eng)
+        rng = np.random.default_rng(SEED + 1)
+        prefixes = [list(rng.integers(0, 50, size=6))]
+        reqs = []
+        _drive(eng, gw, rng, max(60, TICKS // 3), reqs, prefixes,
+               paged=False)
+        for _ in range(2000):
+            if not (len(eng.scheduler)
+                    or any(r is not None for r in eng.slot_req)):
+                break
+            gw.step()
+        _terminal_invariants(reqs)

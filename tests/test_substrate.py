@@ -8,9 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings  # noqa: E402
-import hypothesis.strategies as st  # noqa: E402
+try:                      # real hypothesis when installed (CI does)
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+except ImportError:       # deterministic fallback — properties never skip
+    from repro.testing.hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.ckpt import checkpoint as C
 from repro.data import DataConfig, TokenPipeline, write_token_file
@@ -259,10 +261,12 @@ class TestHLOAnalysis:
             assert total >= 6, (counts, "expected >=1 collective x 6 trips")
             print("OK", counts)
         """)
+        # inherit the parent env (JAX_PLATFORMS et al.) — a hand-stripped env
+        # made jax hang probing platforms under the forced 4-device flag
         res = subprocess.run(
             [sys.executable, "-c", script], capture_output=True, text=True,
             timeout=300,
-            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+            env={**os.environ, "PYTHONPATH": "src"},
             cwd=str(pathlib.Path(__file__).resolve().parents[1]))
         assert res.returncode == 0, res.stderr[-1500:]
         assert "OK" in res.stdout
