@@ -11,7 +11,9 @@ Three workloads over the same reduced BitNet-2B base and arrival process:
 
 Reports throughput, TTFT p50/p99 and the adapter-cache hit rate; row names
 are stable so the bench trajectory tracks multi-tenant perf across PRs.
-Emits both the standard Report JSON and ``artifacts/BENCH_multitenant.json``.
+Emits both the standard Report JSON and ``BENCH_multitenant.json`` at the
+repo root (artifacts/ is gitignored; the root copy is the committed
+trajectory).
 
     PYTHONPATH=src python -m benchmarks.bench_multitenant [--quick]
 """
@@ -21,7 +23,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import (ARTIFACTS, Report, drive_gateway,
+from benchmarks.common import (Report, drive_gateway, write_bench_json,
                                poisson_arrivals)
 
 
@@ -116,8 +118,7 @@ def run(quick: bool = False) -> Report:
     r.row("multi/adapter_overhead_bytes",
           n_tenants // 2 * per_adapter,
           f"{n_tenants} tenants, {per_adapter}B each, half resident")
-    (ARTIFACTS / "BENCH_multitenant.json").write_text(
-        json.dumps(results, indent=1))
+    write_bench_json("multitenant", results)
     print("[bench_multitenant]", json.dumps(results))
     r.save()
     return r

@@ -6,8 +6,22 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Dict, List
 
-ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+REPO_ROOT = Path(__file__).resolve().parent.parent
+ARTIFACTS = REPO_ROOT / "artifacts"
 ARTIFACTS.mkdir(exist_ok=True)
+
+
+def write_bench_json(name: str, payload) -> Path:
+    """Write a perf-trajectory artifact (``BENCH_<name>.json``) to the repo
+    root. ``artifacts/`` is gitignored, so anything written there silently
+    drops out of the committed trajectory — BENCH_*.json files are the
+    cross-PR record and must live at the root where they get committed (a
+    copy still lands in artifacts/ for CI upload globs)."""
+    text = json.dumps(payload, indent=1)
+    out = REPO_ROOT / f"BENCH_{name}.json"
+    out.write_text(text)
+    (ARTIFACTS / f"BENCH_{name}.json").write_text(text)
+    return out
 
 
 def time_fn(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 5) -> float:

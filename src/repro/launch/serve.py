@@ -53,7 +53,7 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                  ckpt_dir: Optional[str] = None,
                  seed: int = 0, kv: str = "dense", page: int = 64,
                  n_pages: Optional[int] = None,
-                 prefix_cache: bool = False,
+                 prefix_cache: bool = False, spec_k: int = 0,
                  n_adapters: int = 0, adapter_rank: int = 8,
                  adapter_budget_kb: Optional[float] = None) -> ServeEngine:
     cfg = reduce_config(get_config(arch), preset)
@@ -89,7 +89,7 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                else DenseKV())
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
                        prefill=prefill, prefill_chunk=prefill_chunk,
-                       seed=seed, kv=backend,
+                       seed=seed, kv=backend, spec_decode=spec_k > 0,
                        prefix_cache=prefix_cache, adapters=adapters)
 
 
@@ -108,6 +108,11 @@ def main(argv=None) -> int:
                          "tick (SLO isolation: decode slots keep emitting "
                          "during a long prompt's prefill; requires "
                          "--prefill batched)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to this many tokens "
+                         "per tick by n-gram prompt lookup and verify them "
+                         "in one multi-token step (0 = off; greedy/seeded "
+                         "requests only, outputs token-identical either way)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 = disabled)")
@@ -141,7 +146,7 @@ def main(argv=None) -> int:
                        prefill_chunk=args.prefill_chunk,
                        ckpt_dir=args.ckpt_dir, seed=args.seed, kv=args.kv,
                        page=args.page, n_pages=args.n_pages,
-                       prefix_cache=args.prefix_cache,
+                       prefix_cache=args.prefix_cache, spec_k=args.spec_k,
                        n_adapters=args.adapters,
                        adapter_rank=args.adapter_rank,
                        adapter_budget_kb=args.adapter_budget_kb)
@@ -162,7 +167,8 @@ def main(argv=None) -> int:
                         priority=i % 2,            # mixed SLO classes
                         deadline_ms=args.deadline_ms,
                         adapter_id=adapter_id),
-            SamplingParams(temperature=args.temperature, top_p=args.top_p)))
+            SamplingParams(temperature=args.temperature, top_p=args.top_p,
+                           spec_k=args.spec_k)))
 
     t0 = time.time()
     stats = gw.run_until_drained()
@@ -182,6 +188,11 @@ def main(argv=None) -> int:
         "latency_p50_ms": round(float(np.median(lats)) * 1e3, 1),
         "metrics": gw.metrics_dict(),
     }
+    if args.spec_k:
+        out["spec"] = {"drafted": stats.spec_drafted,
+                       "accepted": stats.spec_accepted,
+                       "accept_rate": round(stats.spec_accept_rate, 4),
+                       "verify_ticks": stats.spec_ticks}
     if eng.adapters is not None:
         out["adapters"] = eng.adapters.stats()
     print("[serve]", json.dumps(out))

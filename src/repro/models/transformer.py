@@ -582,6 +582,76 @@ class Model:
         return self._logits(p, x), dataclasses.replace(state, k_pool=kp,
                                                        v_pool=vp)
 
+    # -- speculative-decode verify ---------------------------------------------
+    def verify_step(self, p: Params, cache, tokens: jax.Array,
+                    pos: jax.Array, adapter_idx: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Params]:
+        """Score S = k+1 positions per slot in one jitted call (speculative
+        decoding's verify). ``tokens`` (B, S) int32 — position 0 is the
+        tick's fed token, positions 1.. the proposer's drafts; ``pos`` (B,)
+        is each slot's next cache position. Returns ``(logits (B, S, V) f32,
+        spans {"k","v"}: (L, B, Hkv, S, D))`` in the fp8 cache encoding.
+
+        The S positions run as a ``lax.scan`` of :meth:`decode_step` —
+        op-for-op the single-token decode on every backend (dense math, the
+        XLA gather reference, the Pallas ``paged_flash_decode`` views with
+        drafts landing page-by-page), so per-position logits are
+        **bit-identical** to what sequential decode would produce. That is
+        the accept/reject contract: greedy and seeded choices match the
+        non-speculative engine exactly, never just approximately. One jit
+        dispatch replaces k+1 tick round-trips (the tick-bound overhead
+        speculation exists to amortize), and XLA hoists the loop-invariant
+        ternary weight decode out of the scan, so drafted positions reuse
+        the ROM stream a sequential host loop would re-read.
+
+        Cache/pool mutations stay inside the trace: the dense carry and the
+        paged pool copy are discarded by the engine, which commits only the
+        accepted span from the returned ``spans`` through the KV backend
+        (sliced dense writes / ``PagePool.write_span``) — rejected drafts
+        never reach storage. For a paged ``cache``, ``write_page`` /
+        ``write_off`` must be the **(B, S)** per-position targets from
+        ``PagedKV.verify_state``. GQA families only (same restriction as
+        the mid-sequence prefill)."""
+        cfg = self.cfg
+        assert cfg.attention_kind == "gqa" and cfg.family not in ("ssm", "hybrid"), \
+            "speculative verify needs a GQA KV cache"
+        assert pos.ndim == 1, "verify is batched (per-slot positions)"
+        s = tokens.shape[1]
+        if isinstance(cache, attn_mod.PagedKVState):
+            def body(state, inp):
+                t_j, j, wp_j, wo_j = inp
+                st_j = dataclasses.replace(state, write_page=wp_j,
+                                           write_off=wo_j,
+                                           lengths=pos + j + 1)
+                lg, st_new = self.decode_step(p, st_j, t_j, pos + j,
+                                              adapter_idx)
+                state = dataclasses.replace(state, k_pool=st_new.k_pool,
+                                            v_pool=st_new.v_pool)
+                return state, lg
+
+            state, lgs = jax.lax.scan(
+                body, cache, (tokens.T, jnp.arange(s),
+                              jnp.moveaxis(cache.write_page, 1, 0),
+                              jnp.moveaxis(cache.write_off, 1, 0)))
+            # pull the drafted span back out of the (functional) pool copy:
+            # advanced (B, S) page/offset indices land the batch dims first
+            wp, wo = cache.write_page, cache.write_off
+            k_span = state.k_pool[:, wp, :, wo].transpose(2, 0, 3, 1, 4)
+            v_span = state.v_pool[:, wp, :, wo].transpose(2, 0, 3, 1, 4)
+            return jnp.moveaxis(lgs, 0, 1), {"k": k_span, "v": v_span}
+
+        def body(c, inp):
+            t_j, j = inp
+            lg, c = self.decode_step(p, c, t_j, pos + j, adapter_idx)
+            return c, lg
+
+        c, lgs = jax.lax.scan(body, cache, (tokens.T, jnp.arange(s)))
+        idx = (pos[:, None] + jnp.arange(s))[None, :, None, :, None]
+        k_span = jnp.take_along_axis(c["k"], idx, axis=3)
+        v_span = jnp.take_along_axis(c["v"], idx, axis=3)
+        return jnp.moveaxis(lgs, 0, 1), {"k": k_span, "v": v_span}
+
+
     def _cache_pair(self, cache):
         if self.cfg.attention_kind == "mla":
             return cache["latent"], cache["k_rope"]

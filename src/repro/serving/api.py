@@ -42,11 +42,19 @@ class SamplingParams:
     seed         per-request RNG stream: draws depend only on
                  (seed, tokens-generated-so-far), so a seeded request
                  reproduces its outputs regardless of co-scheduled traffic.
+    spec_k       speculative decoding: draft up to this many tokens per tick
+                 from the request's own history (n-gram prompt lookup) and
+                 verify them in one multi-token step (0 = off, the default).
+                 Only acts when the engine was built with
+                 ``spec_decode=True`` and the request is greedy or seeded —
+                 outputs are token-identical to spec_k=0 either way; the
+                 knob trades verify width for accept rate.
     """
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: Optional[int] = None
+    spec_k: int = 0
 
     def __post_init__(self):
         if not 0.0 < self.top_p <= 1.0:
@@ -56,6 +64,10 @@ class SamplingParams:
         if self.seed is not None and not -2**31 <= self.seed < 2**31:
             # the seed rides into the jitted sampler as int32
             raise ValueError(f"seed must fit int32, got {self.seed}")
+        if not 0 <= self.spec_k <= 15:
+            # verify width is pow2-bucketed; 16-wide drafts are already past
+            # any plausible accept horizon for an n-gram proposer
+            raise ValueError(f"spec_k must be in [0, 15], got {self.spec_k}")
 
 
 @dataclasses.dataclass(frozen=True)

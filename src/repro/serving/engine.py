@@ -52,6 +52,17 @@ token, weights in ROM). This engine generalizes it to the production mesh:
     (seed, tokens generated) — reproducible regardless of co-scheduled
     traffic. All vector arguments, so one request's narrow top-k/top-p
     never leaks into its batch neighbours.
+  * **speculative decoding** (``spec_decode=True`` + per-request
+    ``SamplingParams.spec_k``): eligible slots (greedy or seeded) draft up
+    to k tokens per tick from their own history (cycle extrapolation +
+    n-gram prompt lookup, serving/spec.py) and one jitted
+    ``Model.verify_step`` — a ``lax.scan`` of the exact ``decode_step``
+    graph — scores all k+1 positions with bit-identical logits. The engine
+    commits only the accepted span (``PagePool.write_span`` / sliced dense
+    writes), so rejected drafts never reach storage and outputs are
+    token-identical to ``spec_decode=False``. Draft memory is
+    opportunistic: widths trim before they would evict a prefix page or
+    preempt a neighbour.
   * **events**: ``on_token / on_done / on_admit / on_preempt / on_expire``
     hooks fire inline; the gateway (gateway/gateway.py) wires them to
     streaming callbacks and the metrics registry.
@@ -80,6 +91,8 @@ import numpy as np
 from repro.models.transformer import Model
 from repro.serving.api import RequestSpec, SamplingParams, coerce_submit
 from repro.serving.kv import KVBackend, as_backend
+from repro.serving.spec import (accepted_prefix, plan_emit, propose,
+                                quantize_width)
 
 Params = Any
 NEG_INF = -1e30
@@ -142,6 +155,8 @@ class Request:
     prefix_hit_tokens: int = 0      # prompt tokens served from the prefix cache
     prefill_ticks: int = 0          # decode ticks spent consuming the prompt
     prefill_chunks: int = 0         # chunked-prefill segments run for this req
+    spec_drafted: int = 0           # draft tokens proposed for this request
+    spec_accepted: int = 0          # draft tokens accepted (free extra tokens)
     _seq: int = 0                   # scheduler arrival order
 
     def __post_init__(self):
@@ -201,11 +216,20 @@ class EngineStats:
     prefix_hit_tokens: int = 0
     prefill_chunks: int = 0       # chunked-prefill segments run
     decode_stall_s: float = 0.0   # wall time decode slots waited on prefill
+    spec_ticks: int = 0           # ticks that ran the multi-token verify
+    spec_drafted: int = 0         # draft tokens proposed across all requests
+    spec_accepted: int = 0        # draft tokens accepted (extra tokens/tick)
     wall_s: float = 0.0
 
     @property
     def tps(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Draft hit rate: accepted / proposed (0.0 when nothing drafted)."""
+        return self.spec_accepted / self.spec_drafted if self.spec_drafted \
+            else 0.0
 
 
 class ServeEngine:
@@ -214,6 +238,7 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  kv: Union[str, KVBackend, None] = None, page: int = 64,
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
+                 spec_decode: bool = False, spec_ngram: int = 3,
                  scheduler=None, adapters=None):
         assert model.mode in ("serve", "qlora")
         assert prefill_chunk is None or prefill_chunk >= 1, \
@@ -232,6 +257,20 @@ class ServeEngine:
         # meaningful with prefill="batched" on GQA families — token mode is
         # already maximally chunked (one prompt token per tick).
         self.prefill_chunk = prefill_chunk
+        # speculative decoding (master switch; per-request width is
+        # SamplingParams.spec_k): each eligible slot drafts up to spec_k
+        # tokens per tick by n-gram prompt lookup over its own history and a
+        # single jitted multi-token verify scores all of them — accepted
+        # drafts commit in bulk (PagePool.write_span / sliced dense writes),
+        # rejected ones never touch the cache, so greedy outputs are
+        # token-identical to spec_decode=False. GQA families only (the
+        # verify shares the mid-sequence prefill's attention restriction).
+        self.spec_decode = spec_decode
+        self.spec_ngram = spec_ngram
+        if spec_decode:
+            assert model.cfg.attention_kind == "gqa" \
+                and model.cfg.family not in ("ssm", "hybrid"), \
+                "spec_decode needs a GQA KV cache"
         self.key = jax.random.PRNGKey(seed)
         # multi-tenant adapters (serving/adapters/AdapterServing): per-request
         # adapter_id selects a frozen ternary LoRA; resident adapters ride in
@@ -276,6 +315,14 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_fn)
         self._sample = jax.jit(self._sample_fn,
                                static_argnames=("use_topp", "use_seeds"))
+        # multi-token verify (speculative decoding): compiled per
+        # (draft-width bucket, table-view bucket) pair — widths are padded to
+        # powers of two so the compile cache stays small; warm every bucket
+        # the workload will hit before timing anything
+        self._verify = jax.jit(self._verify_fn)
+        self._verify_sample = jax.jit(self._verify_sample_fn,
+                                      static_argnames=("use_topp",
+                                                       "use_seeds"))
 
         # event hooks (wired by the gateway; req-first signatures)
         self.on_token: Optional[Callable[[Request, int, float], None]] = None
@@ -341,6 +388,30 @@ class ServeEngine:
             sampled = jnp.where(has_seed, seeded, sampled)
         use_greedy = temperature <= 0.0
         return jnp.where(use_greedy, greedy, sampled).astype(jnp.int32)
+
+    def _verify_fn(self, params, kv_state, tokens, pos, adapter_idx=None):
+        return self.model.verify_step(params, kv_state, tokens, pos,
+                                      adapter_idx)
+
+    def _verify_sample_fn(self, logits, key, temperature, top_k, top_p,
+                          seeds, has_seed, steps0, *, use_topp=True,
+                          use_seeds=True):
+        """Per-position sampling over a verify tick's (B, S, V) logits. Row
+        (b, j) runs exactly `_sample_fn`'s math at output step
+        ``steps0[b] + j``, so greedy picks and seeded draws match the
+        single-token sampler token for token — the accept/reject identity
+        contract reduces to "does the draft equal this row's choice"."""
+        b, s, v = logits.shape
+
+        def rep(a):
+            return jnp.repeat(a, s)
+
+        steps = (steps0[:, None] + jnp.arange(s)[None, :]).reshape(-1)
+        flat = self._sample_fn(logits.reshape(b * s, v), key,
+                               rep(temperature), rep(top_k), rep(top_p),
+                               rep(seeds), rep(has_seed), steps,
+                               use_topp=use_topp, use_seeds=use_seeds)
+        return flat.reshape(b, s)
 
     # -- public API ---------------------------------------------------------------
     def submit(self, prompt: List[int], spec: Optional[RequestSpec] = None,
@@ -744,11 +815,210 @@ class ServeEngine:
             return None
         return jnp.asarray(self.slot_adapter)
 
+    def _sampling_vectors(self, active):
+        """Per-slot sampling parameter vectors for the jitted samplers."""
+        temps = np.zeros((self.max_slots,), np.float32)
+        topks = np.zeros((self.max_slots,), np.int32)
+        topps = np.ones((self.max_slots,), np.float32)
+        seeds = np.zeros((self.max_slots,), np.int32)
+        has_seed = np.zeros((self.max_slots,), bool)
+        steps = np.zeros((self.max_slots,), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            temps[i] = req.temperature
+            topks[i] = req.top_k
+            topps[i] = req.top_p
+            if req.seed is not None:
+                seeds[i] = req.seed
+                has_seed[i] = True
+            steps[i] = len(req.output)
+        return temps, topks, topps, seeds, has_seed, steps
+
+    def _fed_token(self, i: int) -> int:
+        """The token decode consumes for slot ``i`` this tick: the next
+        pending prompt token, else the last emitted one."""
+        if self.pending_prompt[i]:
+            return self.pending_prompt[i][0]
+        return self.slot_req[i].output[-1]
+
+    def _pop_pending(self, i: int) -> bool:
+        """Consume the fed prompt token; True while the prompt is still
+        being consumed (no emission this tick). When the prompt empties, its
+        full pages are donated to the prefix trie — callers on the verify
+        path must have committed the fed token's KV *first*, since a
+        page-aligned prompt's last page is donated here."""
+        req = self.slot_req[i]
+        if not self.pending_prompt[i]:
+            return False
+        self.pending_prompt[i].pop(0)
+        req.prefill_ticks += 1
+        if self.pending_prompt[i]:
+            return True
+        if self.prefix is not None:
+            keys = self.prefix.commit(self.slot_feed[i],
+                                      self.pool.tables[i],
+                                      self.slot_cached[i])
+            self.slot_keys[i].extend(keys)
+            self.slot_cached[i] += len(keys)
+        return False
+
+    def _emit_token(self, i: int, req: Request, tok: int, now: float) -> bool:
+        """Output-token bookkeeping shared by the single-token and verify
+        ticks; returns True when the request finished (or vanished — an
+        on_token callback may cancel requests mid-tick, so re-check slot
+        ownership after it fires rather than double-releasing)."""
+        if not req.output:
+            req.t_first = now
+        req.output.append(tok)
+        self.stats.tokens_out += 1
+        if self.on_token:
+            self.on_token(req, tok, now)
+        if self.slot_req[i] is not req:
+            return True     # cancelled/released from inside the callback
+        req.t_last = now
+        done = (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and req.output[-1] == req.eos_id)
+                or self.pos[i] >= self.max_len)
+        if done:
+            req.t_done = now
+            req.state = "done"
+            self.stats.completed += 1
+            self._release_slot(i)
+            if self.on_done:
+                self.on_done(req)
+        return done
+
+    # -- speculative decoding --------------------------------------------------
+    def _spec_eligible(self, i: int) -> bool:
+        """Drafting is worthwhile only when acceptance is decidable without
+        perturbing the request's sampling contract: greedy (accept iff the
+        draft is the argmax) or seeded (draws depend only on (seed, step),
+        so the verify row reproduces the exact token the sequential sampler
+        would emit). Unseeded stochastic slots keep one token per tick."""
+        req = self.slot_req[i]
+        s = req.sampling
+        return (s.spec_k > 0
+                and (s.temperature <= 0.0 or s.seed is not None)
+                and len(self.pending_prompt[i]) <= 1)
+
+    def _plan_drafts(self, active: List[int]) -> List[List[int]]:
+        """Per-slot draft tokens for this tick (empty = plain decode).
+        Width is capped by the request's remaining budget and cache room,
+        then drafts are trimmed (longest first) until the worst-case commit
+        fits the page pool — speculation is opportunistic and must never
+        evict a prefix page or preempt a neighbour to make room."""
+        drafts: List[List[int]] = [[] for _ in range(self.max_slots)]
+        for i in active:
+            req = self.slot_req[i]
+            if not self._spec_eligible(i):
+                continue
+            k = min(req.sampling.spec_k,
+                    req.max_new_tokens - len(req.output) - 1,
+                    self.max_len - int(self.pos[i]) - 1)
+            # quantize to a pow2-minus-one width (1, 3, 7, 15): the verify
+            # scan runs s_bucket sequential steps whatever the true draft
+            # length, so a k=4 draft would pay for an 8-wide bucket — 3
+            # steps of pure padding waste
+            k = quantize_width(k)
+            if k <= 0:
+                continue
+            proposed = propose(self._feed_tokens(req), k, self.spec_ngram)
+            drafts[i] = proposed[:quantize_width(len(proposed))]
+        if self.kv.supports_paging and any(drafts[i] for i in active):
+            # _ensure_capacity already guaranteed the +1 pages; drafts may
+            # only spend what is left beyond that baseline
+            base_need = sum(
+                max(0, self.kv.pages_for(int(self.pos[i]) + 1)
+                    - self.kv.slot_pages(i))
+                for i in active)
+            budget = self.kv.pages_free - base_need
+
+            def extra(i):
+                return (self.kv.pages_for(int(self.pos[i]) + 1
+                                          + len(drafts[i]))
+                        - self.kv.pages_for(int(self.pos[i]) + 1))
+
+            while sum(extra(i) for i in active) > budget:
+                victim = max((i for i in active if drafts[i]),
+                             key=lambda i: len(drafts[i]), default=None)
+                if victim is None:
+                    break
+                drafts[victim] = []
+        return drafts
+
+    def _tick_verify(self, active: List[int],
+                     drafts: List[List[int]]) -> None:
+        """The speculative tick: one jitted ``verify_step`` scores every
+        slot's fed token plus its drafts (width padded to a power of two),
+        the per-position sampler names the token the sequential engine would
+        have emitted at each step, and each slot commits exactly the
+        accepted span — ``plan_emit`` truncates where the sequential engine
+        would have stopped (budget / eos / max_len), so rejected drafts
+        never reach the KV store and bookkeeping is step-identical."""
+        n_in = np.ones((self.max_slots,), np.int32)
+        for i in active:
+            n_in[i] = 1 + len(drafts[i])
+        s_bucket = 1 << int(max(int(n_in[i]) for i in active) - 1).bit_length()
+        tokens = np.zeros((self.max_slots, s_bucket), np.int32)
+        for i in active:
+            row = [self._fed_token(i)] + drafts[i]
+            tokens[i, :len(row)] = row
+        temps, topks, topps, seeds, has_seed, steps = \
+            self._sampling_vectors(active)
+
+        state = self.kv.verify_state(active, self.pos, n_in, s_bucket)
+        logits, spans = self._verify(self._effective_params(), state,
+                                     jnp.asarray(tokens),
+                                     jnp.asarray(self.pos),
+                                     self._adapter_idx())
+        self.key, sub = jax.random.split(self.key)
+        choice = np.asarray(self._verify_sample(
+            logits, sub, jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(topps), jnp.asarray(seeds), jnp.asarray(has_seed),
+            jnp.asarray(steps),
+            use_topp=bool(np.any(topps < 1.0)),
+            use_seeds=bool(np.any(has_seed))))
+
+        now = time.time()
+        self.stats.ticks += 1
+        self.stats.spec_ticks += 1
+        for i in active:
+            req = self.slot_req[i]
+            if req is None:
+                continue        # released by a callback earlier in the loop
+            if len(self.pending_prompt[i]) > 1:
+                # mid-prompt (token-mode prefill): commit the fed token's KV
+                # and keep consuming — drafting was ineligible here
+                self.kv.commit_span(i, int(self.pos[i]), spans, 1)
+                self.pos[i] += 1
+                self._pop_pending(i)
+                continue
+            acc = accepted_prefix(drafts[i], choice[i])
+            emit = plan_emit(acc, choice[i],
+                             budget=req.max_new_tokens - len(req.output),
+                             room=self.max_len - int(self.pos[i]),
+                             eos_id=req.eos_id)
+            # commit before _pop_pending: trie donation of a page-aligned
+            # prompt needs the fed token's KV in its page already
+            self.kv.commit_span(i, int(self.pos[i]), spans, len(emit))
+            self._pop_pending(i)
+            req.spec_drafted += len(drafts[i])
+            self.stats.spec_drafted += len(drafts[i])
+            gained = max(0, len(emit) - 1)
+            req.spec_accepted += gained
+            self.stats.spec_accepted += gained
+            for tok in emit:
+                self.pos[i] += 1
+                if self._emit_token(i, req, int(tok), now):
+                    break
+
     def tick(self) -> None:
         """One decode step for the whole slot batch, preceded by the tick's
         chunked-prefill budget. A slot mid-chunked-prefill is excluded from
         the decode batch, so co-resident decode slots keep emitting every
-        tick while its prompt streams in chunk by chunk."""
+        tick while its prompt streams in chunk by chunk. With
+        ``spec_decode=True`` and any drafts on offer, the tick runs the
+        multi-token verify instead and commits every accepted token."""
         self._admit()
         chunks = self._advance_prefill()
         active = [i for i in range(self.max_slots) if self._is_decoding(i)]
@@ -759,26 +1029,17 @@ class ServeEngine:
                 self.stats.ticks += 1   # prefill-only tick still progresses
             return
 
+        if self.spec_decode:
+            drafts = self._plan_drafts(active)
+            if any(drafts[i] for i in active):
+                self._tick_verify(active, drafts)
+                return
+
         tokens = np.zeros((self.max_slots,), np.int32)
-        temps = np.zeros((self.max_slots,), np.float32)
-        topks = np.zeros((self.max_slots,), np.int32)
-        topps = np.ones((self.max_slots,), np.float32)
-        seeds = np.zeros((self.max_slots,), np.int32)
-        has_seed = np.zeros((self.max_slots,), bool)
-        steps = np.zeros((self.max_slots,), np.int32)
         for i in active:
-            req = self.slot_req[i]
-            if self.pending_prompt[i]:
-                tokens[i] = self.pending_prompt[i][0]
-            else:
-                tokens[i] = req.output[-1]
-            temps[i] = req.temperature
-            topks[i] = req.top_k
-            topps[i] = req.top_p
-            if req.seed is not None:
-                seeds[i] = req.seed
-                has_seed[i] = True
-            steps[i] = len(req.output)
+            tokens[i] = self._fed_token(i)
+        temps, topks, topps, seeds, has_seed, steps = \
+            self._sampling_vectors(active)
 
         state = self.kv.decode_state(active, self.pos)
         logits, new_state = self._decode(self._effective_params(), state,
@@ -799,35 +1060,9 @@ class ServeEngine:
         self.stats.ticks += 1
         for i in active:
             req = self.slot_req[i]
+            if req is None:
+                continue        # released by a callback earlier in the loop
             self.pos[i] += 1
-            if self.pending_prompt[i]:
-                self.pending_prompt[i].pop(0)
-                req.prefill_ticks += 1
-                if self.pending_prompt[i]:
-                    continue  # still consuming the prompt
-                # prompt fully in the cache → donate its full pages to the trie
-                if self.prefix is not None:
-                    keys = self.prefix.commit(self.slot_feed[i],
-                                              self.pool.tables[i],
-                                              self.slot_cached[i])
-                    self.slot_keys[i].extend(keys)
-                    self.slot_cached[i] += len(keys)
-            # the model has now seen the full prompt → this is an output token
-            tok = int(nxt[i])
-            if not req.output:
-                req.t_first = now
-            req.output.append(tok)
-            self.stats.tokens_out += 1
-            if self.on_token:
-                self.on_token(req, tok, now)
-            req.t_last = now
-            done = (len(req.output) >= req.max_new_tokens
-                    or (req.eos_id is not None and req.output[-1] == req.eos_id)
-                    or self.pos[i] >= self.max_len)
-            if done:
-                req.t_done = now
-                req.state = "done"
-                self.stats.completed += 1
-                self._release_slot(i)
-                if self.on_done:
-                    self.on_done(req)
+            if self._pop_pending(i):
+                continue  # still consuming the prompt
+            self._emit_token(i, req, int(nxt[i]), now)

@@ -151,6 +151,14 @@ class Gateway:
         self.metrics.set_gauge("prefill_chunks", eng.stats.prefill_chunks)
         self.metrics.set_gauge("decode_stall_s",
                                round(eng.stats.decode_stall_s, 4))
+        # speculative decoding: proposer volume, accepted (free) tokens and
+        # the draft hit rate — the accept rate is the signal for tuning
+        # spec_k (wide drafts only pay off when the history is repetitive)
+        self.metrics.set_gauge("spec_drafted_tokens", eng.stats.spec_drafted)
+        self.metrics.set_gauge("spec_accepted_tokens",
+                               eng.stats.spec_accepted)
+        self.metrics.set_gauge("spec_accept_rate",
+                               round(eng.stats.spec_accept_rate, 4))
         if eng.pool is not None:
             total = eng.pool.cfg.n_pages
             self.metrics.set_gauge("pool_pages_free", eng.pool.pages_free)

@@ -73,7 +73,8 @@ class Metrics:
                completed / preempted, tokens_out, prefix_hit_tokens,
                prefill_ticks_saved
     gauges:    queue_depth, active_slots, prefilling_slots, prefill_chunks,
-               decode_stall_s, pool_pages_free, pool_occupancy
+               decode_stall_s, pool_pages_free, pool_occupancy,
+               spec_drafted_tokens, spec_accepted_tokens, spec_accept_rate
     histograms (ms): ttft_ms, tbt_ms, e2e_ms, queue_wait_ms
     """
 

@@ -103,6 +103,24 @@ class KVBackend:
         positions ``start .. start+n``) into the slot's storage."""
         raise NotImplementedError
 
+    # -- speculative decode ----------------------------------------------------
+    def verify_state(self, active: Sequence[int], pos: np.ndarray,
+                     n_tokens: np.ndarray, s_bucket: int):
+        """State pytree for ``Model.verify_step`` scoring up to ``s_bucket``
+        positions per slot this tick (``n_tokens`` (B,) = each slot's
+        planned fed+draft count). Must cover the committed context plus room
+        for the drafted span (paged: pages reserved through
+        ``pos + n_tokens[i]``); nothing is written device-side here."""
+        raise NotImplementedError
+
+    def commit_span(self, slot: int, start: int, spans, n: int) -> None:
+        """Commit the first ``n`` verified positions of a slot's span from a
+        verify step's ``{"k","v"}: (L, B, Hkv, S, D)`` output — the
+        multi-token analogue of :meth:`commit`. Callers pass ``n`` = tokens
+        the sequential engine would have written, so rejected drafts
+        (positions >= n) are never stored."""
+        raise NotImplementedError
+
     def prefix_kv(self, slot: int, upto_tokens: int):
         """Materialize the slot's first ``upto_tokens`` committed k/v
         positions (fp8 cache encoding, ``{"k","v"}: (L, 1, Hkv, T, D)``) for
@@ -148,6 +166,23 @@ class DenseKV(KVBackend):
     def prefix_kv(self, slot, upto_tokens):
         return {"k": self.cache["k"][:, slot:slot + 1, :, :upto_tokens],
                 "v": self.cache["v"][:, slot:slot + 1, :, :upto_tokens]}
+
+    # -- speculative decode ----------------------------------------------------
+    def verify_state(self, active, pos, n_tokens, s_bucket):
+        # the contiguous cache is already the full context view; stale rows
+        # at/beyond each slot's pos are masked by position inside the model
+        return self.cache
+
+    def commit_span(self, slot, start, spans, n) -> None:
+        # sliced dense writes: only [start, start+n) of the slot's row moves
+        # — a whole-cache splice would resurrect rejected draft positions
+        new = dict(self.cache)
+        for key in ("k", "v"):
+            span = spans[key][:, slot:slot + 1, :, :n]
+            new[key] = jax.lax.dynamic_update_slice(
+                self.cache[key], span.astype(self.cache[key].dtype),
+                (0, slot, 0, start, 0))
+        self.cache = new
 
 
 class PagedKV(KVBackend):
@@ -210,20 +245,26 @@ class PagedKV(KVBackend):
     def free_pages(self, page_ids: List[int]) -> None:
         self.pool.free_pages(page_ids)
 
-    # -- decode tick ----------------------------------------------------------
-    def decode_state(self, active, pos) -> PagedKVState:
-        """Block tables + write targets for this tick. The table view is
-        bucketed (next power of two over the longest active table, capped at
-        the max_len footprint) so jit recompiles only on bucket growth;
-        inactive rows point at the pool's scratch page."""
+    def _table_view(self, active) -> np.ndarray:
+        """Bucketed (B, P) block-table matrix: next power of two over the
+        longest active table, capped at the max_len footprint, so jit
+        recompiles only on bucket growth; inactive rows point at the pool's
+        scratch page."""
         pool = self.pool
-        for i in active:
-            pool.reserve(i, int(pos[i]) + 1)
         max_pages = max(len(pool.tables[i]) for i in active)
         view = 1 << max(0, (max_pages - 1).bit_length())
         view = min(view, pool.pages_for(self.max_len))
         view = max(view, max_pages)
-        tables = pool.batch_tables(active, view, self.max_slots)
+        return pool.batch_tables(active, view, self.max_slots)
+
+    # -- decode tick ----------------------------------------------------------
+    def decode_state(self, active, pos) -> PagedKVState:
+        """Block tables + write targets for this tick (see `_table_view` for
+        the bucketing that bounds recompiles)."""
+        pool = self.pool
+        for i in active:
+            pool.reserve(i, int(pos[i]) + 1)
+        tables = self._table_view(active)
         page_ids = np.full((self.max_slots,), pool.scratch_page, np.int32)
         offsets = np.zeros((self.max_slots,), np.int32)
         lengths = np.zeros((self.max_slots,), np.int32)
@@ -257,6 +298,42 @@ class PagedKV(KVBackend):
         # the final page may be partially filled (chunk boundaries are
         # token-granular) — hand back exactly the committed span
         return {"k": gk[:, :, :, :upto_tokens], "v": gv[:, :, :, :upto_tokens]}
+
+    # -- speculative decode ----------------------------------------------------
+    def verify_state(self, active, pos, n_tokens, s_bucket) -> PagedKVState:
+        """Verify-tick view: tables cover the committed context *plus* each
+        slot's drafted span (pages reserved through ``pos + n_tokens[i]`` —
+        the engine budgets draft lengths against ``pages_free`` first, so
+        this never raises mid-tick). ``write_page``/``write_off`` are
+        **(B, s_bucket)** per-position targets, consumed only by the Pallas
+        kernel path's functional in-jit scatter (padding rows beyond a
+        slot's planned span target the scratch page); the gather path
+        ignores them. Nothing is written to the real pool here —
+        `commit_span` is the only writer."""
+        pool = self.pool
+        for i in active:
+            pool.reserve(i, int(pos[i]) + int(n_tokens[i]))
+        tables = self._table_view(active)
+        page_ids = np.full((self.max_slots, s_bucket), pool.scratch_page,
+                           np.int32)
+        offsets = np.zeros((self.max_slots, s_bucket), np.int32)
+        lengths = np.zeros((self.max_slots,), np.int32)
+        for i in active:
+            for j in range(int(n_tokens[i])):
+                pj = int(pos[i]) + j
+                page_ids[i, j] = pool.tables[i][pj // pool.cfg.page]
+                offsets[i, j] = pj % pool.cfg.page
+            lengths[i] = int(pos[i])
+        return PagedKVState(
+            k_pool=pool.k, v_pool=pool.v,
+            tables=jnp.asarray(tables),
+            write_page=jnp.asarray(page_ids),
+            write_off=jnp.asarray(offsets),
+            lengths=jnp.asarray(lengths))
+
+    def commit_span(self, slot, start, spans, n) -> None:
+        self.pool.write_span(slot, start, spans["k"][:, slot, :, :n],
+                             spans["v"][:, slot, :, :n])
 
 
 def as_backend(kv: Union[str, KVBackend, None], *, page: int = 64,

@@ -242,3 +242,98 @@ class TestSLOIsolation:
         assert bg.n_preempts >= 1
         assert list(bg.output) == list(ref.output)
         assert eng.pool.pages_free == 7
+
+
+class TestCancelMidPrefill:
+    """Satellite regression: cancel() on a slot whose chunked prefill is
+    still in flight must release exactly the committed chunk pages, exactly
+    once — no double-free against `_release_slot`'s partial-prefill path,
+    and prefix-cache-owned lead pages must stay with the trie."""
+
+    def test_cancel_releases_committed_chunks_once(self, model_params,
+                                                   registry):
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=PagedKV(page=4, n_pages=24))
+        gw = Gateway(eng)
+        req = gw.submit(list(range(2, 32)), RequestSpec(max_new_tokens=4))
+        gw.step()
+        slot = next(i for i, q in enumerate(eng.slot_req) if q is req)
+        assert eng.slot_prefill_todo[slot], "prefill should be mid-flight"
+        held = len(eng.pool.tables[slot])
+        assert held > 0
+        assert gw.cancel(req.uid) and req.state == "cancelled"
+        # every page back on the free list, each exactly once
+        assert eng.pool.pages_free == 24
+        free = list(eng.pool.free)
+        assert len(free) == len(set(free))
+        assert not eng.slot_prefill_todo[slot]
+        assert eng.slot_req[slot] is None
+        # double-cancel is a no-op, not a second release
+        assert not gw.cancel(req.uid)
+        assert eng.pool.pages_free == 24
+        # the engine keeps serving afterwards
+        ok = gw.submit(list(range(5)), RequestSpec(max_new_tokens=3))
+        gw.run_until_drained()
+        assert ok.state == "done" and eng.pool.pages_free == 24
+
+    def test_cancel_mid_prefill_after_prefix_hit(self, model_params,
+                                                 registry):
+        """Cancel during the chunked *remainder* of a prefix-cache hit:
+        the shared lead pages stay trie-owned (refcount decremented, not
+        freed), only the slot's private chunk pages return to the pool."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=PagedKV(page=4, n_pages=24), prefix_cache=True)
+        gw = Gateway(eng)
+        shared = list(range(40, 48))                 # 2 full pages
+        warm = gw.submit(shared + [1, 2], RequestSpec(max_new_tokens=2))
+        gw.run_until_drained()
+        assert warm.state == "done"
+        trie = {nd.page_id for nd in eng.prefix.nodes.values()}
+        assert trie
+        req = gw.submit(shared + list(range(60, 80)),
+                        RequestSpec(max_new_tokens=2))
+        gw.step()
+        slot = next(i for i, q in enumerate(eng.slot_req) if q is req)
+        assert eng.slot_cached[slot] > 0 and eng.slot_prefill_todo[slot]
+        assert gw.cancel(req.uid)
+        trie_after = {nd.page_id for nd in eng.prefix.nodes.values()}
+        assert trie_after == trie, "cancel must not free trie-owned pages"
+        every = list(eng.pool.free) + sorted(trie_after) + [
+            p for i, t in enumerate(eng.pool.tables)
+            for p in t[eng.slot_cached[i]:]]
+        assert len(every) == len(set(every)) == 24, \
+            "page owned by more than one of {free, trie, slot} after cancel"
+
+    def test_cancel_from_stream_callback_mid_tick(self, model_params,
+                                                  registry):
+        """A stream callback cancelling a co-resident request mid-tick must
+        not corrupt the tick loop (slots released under it) or double-count
+        terminal states."""
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          prefill="batched", kv=PagedKV(page=4, n_pages=48),
+                          spec_decode=True)
+        gw = Gateway(eng)
+        reqs = []
+
+        def cb(req, tok):
+            for q in reqs:
+                if q.uid != req.uid and q.state == "running":
+                    gw.cancel(q.uid)
+                    return
+
+        for j in range(4):
+            reqs.append(gw.submit(
+                list(range(3 + j, 9 + j)),
+                RequestSpec(max_new_tokens=6,
+                            stream_cb=cb if j == 0 else None),
+                SamplingParams(spec_k=2 if j % 2 else 0)))
+        gw.run_until_drained()
+        assert all(q.state in ("done", "cancelled") for q in reqs)
+        assert eng.pool.pages_free == 48
+        free = list(eng.pool.free)
+        assert len(free) == len(set(free))

@@ -1,10 +1,12 @@
 """Seeded deterministic serving stress harness.
 
 Random request streams — mixed prompt lengths, priorities, deadlines,
-adapters, sampling params, cancels — driven tick-by-tick against the full
-engine stack (paged KV + prefix cache + chunked prefill + multi-tenant
-adapters + SLO scheduler), with structural invariants asserted on *every
-tick*:
+adapters, sampling params (including speculative ``spec_k`` on greedy and
+seeded rows), cancels (including targeted cancels of slots whose chunked
+prefill is mid-flight) — driven tick-by-tick against the full engine stack
+(paged KV + prefix cache + chunked prefill + speculative decoding +
+multi-tenant adapters + SLO scheduler), with structural invariants asserted
+on *every tick*:
 
   * **no page leaks**: every pool page is owned by exactly one of
     {free list, prefix-cache trie, a slot's private table span}; shared
@@ -160,11 +162,14 @@ def _random_spec(rng, tick):
 
 
 def _random_sampling(rng):
+    # spec_k > 0 on greedy/seeded rows exercises the multi-token verify +
+    # span-commit path under the same invariants (0 = plain decode)
+    spec_k = int(rng.choice([0, 2, 4]))
     if rng.random() < 0.6:
-        return SamplingParams()          # greedy
+        return SamplingParams(spec_k=spec_k)          # greedy
     return SamplingParams(temperature=0.8, top_k=int(rng.integers(0, 8)),
                           top_p=float(rng.choice([1.0, 0.9])),
-                          seed=int(rng.integers(0, 1000)))
+                          seed=int(rng.integers(0, 1000)), spec_k=spec_k)
 
 
 def _random_prompt(rng, prefixes):
@@ -176,6 +181,7 @@ def _random_prompt(rng, prefixes):
 
 def _drive(eng, gw, rng, ticks, reqs, prefixes, paged):
     live_uids = []
+    mid_prefill_cancels = 0
     for t in range(ticks):
         if rng.random() < 0.18 and len(reqs) < 64:
             req = gw.submit(_random_prompt(rng, prefixes),
@@ -185,11 +191,24 @@ def _drive(eng, gw, rng, ticks, reqs, prefixes, paged):
                 live_uids.append(req.uid)
         if live_uids and rng.random() < 0.04:
             gw.cancel(live_uids.pop(int(rng.integers(0, len(live_uids)))))
+        # targeted: cancel a slot whose chunked prefill is mid-flight —
+        # committed chunk pages must release exactly once (no double-free
+        # against _release_slot's partial-prefill path)
+        if rng.random() < 0.08:
+            prefilling = [q for i, q in enumerate(eng.slot_req)
+                          if q is not None and eng.slot_prefill_todo[i]]
+            if prefilling:
+                victim = prefilling[int(rng.integers(0, len(prefilling)))]
+                if gw.cancel(victim.uid):
+                    mid_prefill_cancels += 1
+                    if victim.uid in live_uids:
+                        live_uids.remove(victim.uid)
         gw.step()
         if paged:
             _page_invariants(eng)
         if eng.adapters is not None:
             _adapter_invariants(eng)
+    return mid_prefill_cancels
 
 
 class TestServingFuzz:
@@ -203,7 +222,7 @@ class TestServingFuzz:
         eng = ServeEngine(model, params, max_slots=3, max_len=64,
                           prefill="batched", prefill_chunk=3,
                           kv=PagedKV(page=PAGE, n_pages=N_PAGES),
-                          prefix_cache=True, seed=SEED,
+                          prefix_cache=True, seed=SEED, spec_decode=True,
                           scheduler=EDFCheckingScheduler(),
                           adapters=adapters)
         gw = Gateway(eng)
@@ -211,7 +230,10 @@ class TestServingFuzz:
         prefixes = [list(rng.integers(0, 50, size=2 * PAGE))
                     for _ in range(2)]
         reqs = []
-        _drive(eng, gw, rng, TICKS, reqs, prefixes, paged=True)
+        mid_cancels = _drive(eng, gw, rng, TICKS, reqs, prefixes, paged=True)
+        check(mid_cancels > 0,
+              "stream never cancelled a mid-chunked-prefill slot — raise "
+              "the targeted-cancel rate or prompt lengths")
         check(len(reqs) >= 10, "stream produced too few requests to stress "
                                "anything — raise the submit rate")
         # drain: no new arrivals, invariants still per tick
@@ -236,7 +258,7 @@ class TestServingFuzz:
         model, params = model_params
         eng = ServeEngine(model, params, max_slots=3, max_len=64,
                           prefill="batched", prefill_chunk=3,
-                          kv=DenseKV(), seed=SEED + 1,
+                          kv=DenseKV(), seed=SEED + 1, spec_decode=True,
                           scheduler=EDFCheckingScheduler())
         gw = Gateway(eng)
         rng = np.random.default_rng(SEED + 1)
