@@ -23,8 +23,9 @@ import json
 
 import numpy as np
 
-from benchmarks.common import (Report, drive_gateway, write_bench_json,
-                               poisson_arrivals)
+from benchmarks.common import (Report, drive_gateway, obs_summary,
+                               poisson_arrivals, write_bench_json,
+                               write_prom_artifact)
 
 
 def run(quick: bool = False) -> Report:
@@ -101,6 +102,12 @@ def run(quick: bool = False) -> Report:
                 "adapter_budget_bytes": st["budget_bytes"],
             })
         results[workload] = row
+        if workload == "multi":
+            # observability gauges from the churny leg (adapter residency
+            # feeds the SRAM term of the energy model); Prometheus copy of
+            # the same registry lands under artifacts/
+            results["observability"] = obs_summary(gw)
+            write_prom_artifact("multitenant_metrics", gw)
         r.row(f"{workload}/completed", row["completed"], f"of {n_req}")
         r.row(f"{workload}/tps", row["tps"], "decode tokens/s (host CPU)")
         r.row(f"{workload}/ttft_p50_ms", row["ttft_p50_ms"], "")

@@ -43,8 +43,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (Report, drive_gateway, poisson_arrivals,
-                               write_bench_json)
+from benchmarks.common import (Report, drive_gateway, obs_summary,
+                               poisson_arrivals, write_bench_json,
+                               write_prom_artifact)
 
 
 def _summarize(gw, reqs, wall):
@@ -176,13 +177,19 @@ def _spec_scenario(model, params, spec_k, quick):
 
 
 def run(quick: bool = False, kv_backend: str = "both",
-        prefill_chunk: int = 16, spec_k: int = 7) -> Report:
+        prefill_chunk: int = 16, spec_k: int = 7,
+        trace_out: str = None) -> Report:
     import jax
     from repro.configs.base import get_config
     from repro.launch.train import reduce_config
     from repro.models.transformer import Model
     from repro.serving import DenseKV, PagedKV, RequestSpec, ServeEngine
     from repro.serving.gateway import Gateway
+
+    tracer = None
+    if trace_out:
+        from repro.serving.obs import Tracer
+        tracer = Tracer()
 
     r = Report("serving")
     rng = np.random.default_rng(0)
@@ -206,15 +213,20 @@ def run(quick: bool = False, kv_backend: str = "both",
         backends = {kv_backend: backends[kv_backend]}
 
     results = {}
+    obs = None
     # -- A/B: the unique (cold-KV) workload per backend ------------------------
     for name, make in backends.items():
-        eng = ServeEngine(model, params, max_slots=4, max_len=128, kv=make())
+        eng = ServeEngine(model, params, max_slots=4, max_len=128, kv=make(),
+                          tracer=tracer)
         gw = Gateway(eng)
         specs = [(uniques[i] + tails[i],
                   RequestSpec(max_new_tokens=max_new, priority=i % 2))
                  for i in range(n_req)]
         reqs, wall = drive_gateway(gw, specs, arrivals)
         results[f"unique/{name}"] = w = _summarize(gw, reqs, wall)
+        # observability block from the last unique leg (paged when both run)
+        obs = obs_summary(gw)
+        write_prom_artifact(f"serving_metrics_{name}", gw)
         r.row(f"unique/{name}/completed", w["completed"], f"of {n_req}")
         r.row(f"unique/{name}/tps", w["tps"], "decode tokens/s (host CPU)")
         r.row(f"unique/{name}/ttft_p50_ms", w["ttft_p50_ms"], "")
@@ -305,6 +317,21 @@ def run(quick: bool = False, kv_backend: str = "both",
     bench_out["spec/off"] = results["spec/off"]
     bench_out["spec/on"] = dict(results[f"spec/k{spec_k}"], spec_k=spec_k)
     bench_out["spec/tps_gain"] = round(spec_gain, 3)
+    # observability: per-phase tick breakdown + dispatch-gap + energy gauges
+    # from the unique leg (the open-loop workload; Prometheus copies of the
+    # same registry land under artifacts/serving_metrics_<backend>.prom)
+    if obs is not None:
+        bench_out["observability"] = obs
+        r.row("obs/tick_gap_ms_p50", obs["tick_gap_ms"],
+              "host bubble between device dispatches (async-runtime signal)")
+        r.row("obs/energy_per_token_j", obs["energy_per_token_j"],
+              "Fig-12 power model integrated over live tick state")
+        r.row("obs/gated_bank_fraction", obs["gated_bank_fraction"],
+              "time-averaged ROM banks gated off")
+    if trace_out:
+        tracer.dump(trace_out)
+        print(f"[bench_serving] trace -> {trace_out} "
+              f"({len(tracer.events)} events)")
     write_bench_json("serving", bench_out)
     print("[bench_serving]", json.dumps(results))
     r.save()
@@ -323,6 +350,11 @@ if __name__ == "__main__":
     ap.add_argument("--spec-k", type=int, default=7,
                     help="draft width for the speculative-decoding A/B "
                          "(A/B'd against one-token-per-tick decode)")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump a Chrome trace_event capture of the unique-"
+                         "leg tick loops (*.jsonl = strict JSONL; opens at "
+                         "ui.perfetto.dev)")
     args = ap.parse_args()
     run(quick=args.quick, kv_backend=args.kv_backend,
-        prefill_chunk=args.prefill_chunk, spec_k=args.spec_k)
+        prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
+        trace_out=args.trace_out)

@@ -1,0 +1,132 @@
+"""Bench regression gate: fresh BENCH_*.json vs the committed baselines.
+
+Compares every numeric leaf of a freshly generated bench artifact against
+the copy committed at ``HEAD`` (read via ``git show`` so the comparison
+still works after the bench overwrote the root file in place). Leaves that
+moved more than ``--tol`` (default ±30% — the container-jitter band the
+ROADMAP calls out for this 2-core CI host) are reported one per line; in a
+GitHub Actions environment each regression is also emitted as a
+``::warning`` annotation.
+
+Non-blocking by default (exit 0, the CI step is advisory); ``--strict``
+exits 1 when any leaf regressed. Counters that measure *work done*
+(completed, ticks, drafted...) still compare — a bench that silently
+completes fewer requests is exactly the kind of drift this catches.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--names serving multitenant] [--tol 0.30] [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+#: leaves that are pure wall-clock noise on a shared CI host — walls move
+#: with machine load even when per-token work is identical, so they are
+#: excluded rather than widening the tolerance for everything else
+NOISY_LEAVES = ("wall_s",)
+
+
+def _git_show(path: str) -> Dict | None:
+    """The committed (HEAD) version of ``path``, or None if it wasn't
+    committed yet (first run of a new bench)."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"], cwd=REPO_ROOT,
+            capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def _leaves(obj, prefix: str = "") -> Iterator[Tuple[str, float]]:
+    """Flatten to (dotted-path, numeric-value) pairs."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _leaves(v, f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _leaves(v, f"{prefix}[{i}]")
+    elif isinstance(obj, bool):
+        return
+    elif isinstance(obj, (int, float)):
+        yield prefix, float(obj)
+
+
+def compare(fresh: Dict, base: Dict, tol: float):
+    """(path, fresh, base, rel_change) for every numeric leaf outside the
+    tolerance band. Leaves present on only one side are skipped (bench
+    schema growth is expected across PRs, not a regression)."""
+    fresh_leaves = dict(_leaves(fresh))
+    base_leaves = dict(_leaves(base))
+    out = []
+    for path, b in sorted(base_leaves.items()):
+        if path not in fresh_leaves:
+            continue
+        if any(path.split(".")[-1] == n for n in NOISY_LEAVES):
+            continue
+        f = fresh_leaves[path]
+        denom = max(abs(b), 1e-9)
+        rel = (f - b) / denom
+        if abs(rel) > tol:
+            out.append((path, f, b, rel))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--names", nargs="+", default=["serving", "multitenant"],
+                    help="bench artifact names (BENCH_<name>.json)")
+    ap.add_argument("--tol", type=float, default=0.30,
+                    help="relative tolerance band (0.30 = ±30%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any out-of-band leaf (default: report "
+                         "only — CI runs this as a non-blocking step)")
+    args = ap.parse_args(argv)
+
+    gha = bool(os.environ.get("GITHUB_ACTIONS"))
+    total = 0
+    checked = 0
+    for name in args.names:
+        rel_path = f"BENCH_{name}.json"
+        fresh_path = REPO_ROOT / rel_path
+        if not fresh_path.exists():
+            print(f"[check_regression] {rel_path}: no fresh artifact "
+                  f"(bench not run) — skipped")
+            continue
+        base = _git_show(rel_path)
+        if base is None:
+            print(f"[check_regression] {rel_path}: no committed baseline — "
+                  f"skipped")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        diffs = compare(fresh, base, args.tol)
+        n_leaves = sum(1 for _ in _leaves(base))
+        checked += 1
+        print(f"[check_regression] {rel_path}: {len(diffs)} of {n_leaves} "
+              f"leaves moved > ±{args.tol:.0%}")
+        for path, f, b, rel in diffs:
+            line = (f"  {name}/{path}: {b:g} -> {f:g} "
+                    f"({'+' if rel >= 0 else ''}{rel:.1%})")
+            print(line)
+            if gha:
+                print(f"::warning title=bench drift {name}::"
+                      f"{path}: {b:g} -> {f:g} "
+                      f"({'+' if rel >= 0 else ''}{rel:.1%})")
+        total += len(diffs)
+    if checked == 0:
+        print("[check_regression] nothing compared (no artifacts/baselines)")
+    if args.strict and total:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,32 @@ def write_bench_json(name: str, payload) -> Path:
     return out
 
 
+def obs_summary(gw) -> Dict[str, Any]:
+    """Observability block for BENCH_*.json: mean per-phase tick breakdown,
+    the host dispatch-gap gauge (histogram p50 preferred over the raw mean —
+    arrival sleeps dominate the mean in open-loop benches), jit compile
+    count and the energy gauges driven by the live power model."""
+    st = gw.engine.stats
+    gap = gw.metrics.histograms.get("tick_gap_ms")
+    return {
+        "phase_breakdown_ms": st.phase_breakdown_ms(),
+        "tick_gap_ms": round(gap.percentile(50), 4) if gap is not None
+        else round(st.tick_gap_ms_mean, 4),
+        "tick_gap_ms_mean": round(st.tick_gap_ms_mean, 4),
+        "jit_compiles": int(st.jit_compiles),
+        **gw.energy.gauges(),
+    }
+
+
+def write_prom_artifact(name: str, gw) -> Path:
+    """Dump the gateway registry as Prometheus text under artifacts/ (CI
+    uploads the glob; not part of the committed trajectory)."""
+    from repro.serving.obs.prom import write_prom
+    out = ARTIFACTS / f"{name}.prom"
+    write_prom(out, gw.metrics.to_prom_text())
+    return out
+
+
 def time_fn(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 5) -> float:
     """Median wall seconds per call (after warmup)."""
     for _ in range(warmup):

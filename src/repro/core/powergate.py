@@ -79,6 +79,40 @@ def energy_per_token_j(schedule: GatingSchedule, tbt_s: float) -> float:
     return chip_power(schedule).total_w * tbt_s
 
 
+#: Fraction of SRAM power that is leakage/retention (drawn even when the
+#: arrays are idle); the rest scales with how much of the SRAM budget is
+#: actually resident (KV pages + pinned adapters).
+SRAM_STATIC_FRACTION = 0.2
+
+
+def live_power(schedule: GatingSchedule, *, exec_fraction: float,
+               sram_utilization: float = 1.0) -> PowerReport:
+    """Fig-12 power model driven by *live* engine state over a wall-clock
+    window (the measurement half of workload-aware gating).
+
+    ``exec_fraction`` — fraction of the window the device actually spent
+    executing layers (decode / verify / prefill dispatches). While
+    executing, gating keeps only the active layer (+ pre-wake) powered —
+    `powered_layer_fraction`; while the host stalls between dispatches
+    every ROM bank is gated, so ROM and compute power scale with
+    ``exec_fraction``. ``sram_utilization`` — occupancy of the SRAM budget
+    (KV page-pool occupancy / resident-adapter bytes): SRAM retention is
+    charged on the resident fraction plus a static floor, because unlike
+    ROM banks the KV arrays must hold state across the idle gaps. The
+    ``other`` rail (clock/IO/controller) is always on.
+    """
+    exec_fraction = min(max(exec_fraction, 0.0), 1.0)
+    sram_utilization = min(max(sram_utilization, 0.0), 1.0)
+    return PowerReport(
+        rom_w=rom.POWER_ROM_UNGATED_W
+        * schedule.powered_layer_fraction() * exec_fraction,
+        sram_w=_SRAM_W * (SRAM_STATIC_FRACTION
+                          + (1.0 - SRAM_STATIC_FRACTION) * sram_utilization),
+        compute_w=_COMPUTE_W * exec_fraction,
+        other_w=_OTHER_W,
+    )
+
+
 def gating_timeline(n_layers: int, layer_cycles: Sequence[int],
                     prewake_fraction: float = rom.PREWAKE_FRACTION
                     ) -> List[Dict[str, float]]:

@@ -55,7 +55,8 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                  n_pages: Optional[int] = None,
                  prefix_cache: bool = False, spec_k: int = 0,
                  n_adapters: int = 0, adapter_rank: int = 8,
-                 adapter_budget_kb: Optional[float] = None) -> ServeEngine:
+                 adapter_budget_kb: Optional[float] = None,
+                 tracer=None) -> ServeEngine:
     cfg = reduce_config(get_config(arch), preset)
     model = Model(cfg, mode="serve")
     params = model.init(jax.random.PRNGKey(seed))
@@ -90,7 +91,8 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
                        prefill=prefill, prefill_chunk=prefill_chunk,
                        seed=seed, kv=backend, spec_decode=spec_k > 0,
-                       prefix_cache=prefix_cache, adapters=adapters)
+                       prefix_cache=prefix_cache, adapters=adapters,
+                       tracer=tracer)
 
 
 def main(argv=None) -> int:
@@ -139,8 +141,26 @@ def main(argv=None) -> int:
                     help="fraction of requests that carry an adapter_id")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="capture a Chrome trace_event trace of the tick "
+                         "loop: *.jsonl → strict JSONL, anything else → "
+                         "{'traceEvents': [...]} JSON; both open at "
+                         "ui.perfetto.dev")
+    ap.add_argument("--trace-ring", type=int, default=None,
+                    help="keep only the newest N trace events (bounded "
+                         "memory on long runs; default unbounded)")
+    ap.add_argument("--prom-out", default=None,
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format to this path (atomic rewrite "
+                         "every --prom-every ticks and once at exit)")
+    ap.add_argument("--prom-every", type=int, default=50,
+                    help="tick window between --prom-out rewrites")
     args = ap.parse_args(argv)
 
+    tracer = None
+    if args.trace_out:
+        from repro.serving.obs import Tracer
+        tracer = Tracer(ring=args.trace_ring)
     eng = build_engine(args.arch, args.preset, slots=args.slots,
                        max_len=args.max_len, prefill=args.prefill,
                        prefill_chunk=args.prefill_chunk,
@@ -149,8 +169,12 @@ def main(argv=None) -> int:
                        prefix_cache=args.prefix_cache, spec_k=args.spec_k,
                        n_adapters=args.adapters,
                        adapter_rank=args.adapter_rank,
-                       adapter_budget_kb=args.adapter_budget_kb)
+                       adapter_budget_kb=args.adapter_budget_kb,
+                       tracer=tracer)
     gw = Gateway(eng)
+    if args.prom_out:
+        gw.prom_out = args.prom_out
+        gw.prom_every = args.prom_every
     rng = np.random.default_rng(args.seed)
     vocab = eng.cfg.vocab_size
     system = list(rng.integers(0, min(vocab, 1000), size=args.shared_prefix))
@@ -186,6 +210,10 @@ def main(argv=None) -> int:
         "ttft_p50_ms": round(float(np.median(ttfts)) * 1e3, 1),
         "ttft_p99_ms": round(float(np.quantile(ttfts, 0.99)) * 1e3, 1),
         "latency_p50_ms": round(float(np.median(lats)) * 1e3, 1),
+        "phase_breakdown_ms": stats.phase_breakdown_ms(),
+        "tick_gap_ms_mean": round(stats.tick_gap_ms_mean, 4),
+        "jit_compiles": stats.jit_compiles,
+        "energy": gw.energy.gauges(),
         "metrics": gw.metrics_dict(),
     }
     if args.spec_k:
@@ -195,6 +223,14 @@ def main(argv=None) -> int:
                        "verify_ticks": stats.spec_ticks}
     if eng.adapters is not None:
         out["adapters"] = eng.adapters.stats()
+    if args.trace_out:
+        eng.trace.dump(args.trace_out)
+        print(f"[serve] trace → {args.trace_out} "
+              f"({len(eng.trace.events)} events; open at ui.perfetto.dev)",
+              file=sys.stderr)
+    if args.prom_out:
+        from repro.serving.obs.prom import write_prom
+        write_prom(args.prom_out, gw.metrics.to_prom_text())
     print("[serve]", json.dumps(out))
     return 0
 

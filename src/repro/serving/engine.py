@@ -82,7 +82,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +91,7 @@ import numpy as np
 from repro.models.transformer import Model
 from repro.serving.api import RequestSpec, SamplingParams, coerce_submit
 from repro.serving.kv import KVBackend, as_backend
+from repro.serving.obs.tracer import NULL_TRACER, CompileWatch, Tracer
 from repro.serving.spec import (accepted_prefix, plan_emit, propose,
                                 quantize_width)
 
@@ -220,6 +221,13 @@ class EngineStats:
     spec_drafted: int = 0         # draft tokens proposed across all requests
     spec_accepted: int = 0        # draft tokens accepted (extra tokens/tick)
     wall_s: float = 0.0
+    # observability: per-phase self-time (ms) accumulated across ticks —
+    # schedule / prefill / prefill_chunk / decode / spec_verify / sample /
+    # commit / emit; nested phases subtract, so values sum to tick wall
+    phase_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    tick_gap_ms_sum: float = 0.0  # host time between device dispatches
+    tick_gaps: int = 0
+    jit_compiles: int = 0         # jit cache growth events (CompileWatch)
 
     @property
     def tps(self) -> float:
@@ -231,6 +239,46 @@ class EngineStats:
         return self.spec_accepted / self.spec_drafted if self.spec_drafted \
             else 0.0
 
+    @property
+    def tick_gap_ms_mean(self) -> float:
+        """Mean host-side bubble between device dispatches — the feedback
+        signal the ROADMAP's async disaggregated runtime will shrink."""
+        return self.tick_gap_ms_sum / self.tick_gaps if self.tick_gaps \
+            else 0.0
+
+    def phase_breakdown_ms(self) -> Dict[str, float]:
+        """Mean self-time per phase per tick (ms)."""
+        n = max(self.ticks, 1)
+        return {k: round(v / n, 4) for k, v in sorted(self.phase_ms.items())}
+
+
+class _Phase:
+    """Phase timer + optional trace span. Accumulates *self-time* into
+    ``stats.phase_ms`` — a nested phase's time is subtracted from its
+    parent (via the engine's running self-time total), so the per-phase
+    breakdown sums to tick wall time instead of double-counting."""
+    __slots__ = ("eng", "name", "t0", "self0", "span")
+
+    def __init__(self, eng: "ServeEngine", name: str):
+        self.eng = eng
+        self.name = name
+
+    def __enter__(self):
+        self.span = self.eng.trace.span(self.name, pid=self.eng._tpid)
+        self.span.__enter__()
+        self.self0 = self.eng._phase_self_total
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = (time.perf_counter() - self.t0) * 1e3
+        nested = self.eng._phase_self_total - self.self0
+        own = max(dt - nested, 0.0)
+        pm = self.eng.stats.phase_ms
+        pm[self.name] = pm.get(self.name, 0.0) + own
+        self.eng._phase_self_total = self.self0 + nested + own
+        return self.span.__exit__(*exc)
+
 
 class ServeEngine:
     def __init__(self, model: Model, params: Params, *, max_slots: int = 8,
@@ -239,7 +287,8 @@ class ServeEngine:
                  kv: Union[str, KVBackend, None] = None, page: int = 64,
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
                  spec_decode: bool = False, spec_ngram: int = 3,
-                 scheduler=None, adapters=None):
+                 scheduler=None, adapters=None,
+                 tracer: Optional[Tracer] = None):
         assert model.mode in ("serve", "qlora")
         assert prefill_chunk is None or prefill_chunk >= 1, \
             "prefill_chunk must be >= 1 tokens (or None for monolithic prefill)"
@@ -310,19 +359,42 @@ class ServeEngine:
         self.stats = EngineStats()
         self._uid = 0
 
+        # observability: the tracer records per-tick phase spans, request
+        # lifecycle tracks and jit-compile instants (disabled by default —
+        # a null object that allocates nothing per span); phase self-times
+        # and the tick-gap clock accumulate in stats either way.
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self._tpid = (self.trace.register(f"engine[{self.kv.name}]")
+                      if self.trace.enabled else 1)
+        self._phase_self_total = 0.0
+        self._t_dev_end: Optional[float] = None  # last device-dispatch return
+        self._tick_gap_ms: Optional[float] = None  # gap observed this tick
+        self._last_verify_width = 1
+        self._prefill_watch = None
+
+        def _watch(fn, name):
+            return CompileWatch(fn, name, self.trace,
+                                on_compile=self._note_compile, pid=self._tpid)
+
         # ONE decode path: the backend's state pytree picks the model's
         # dense or paged decode inside decode_step — no engine branches.
-        self._decode = jax.jit(self._decode_fn)
-        self._sample = jax.jit(self._sample_fn,
-                               static_argnames=("use_topp", "use_seeds"))
+        # Every jitted entry point rides a CompileWatch: cache growth bumps
+        # stats.jit_compiles and emits a jit_compile instant naming the
+        # offending shape bucket (recompile stalls become visible in-trace).
+        self._decode = _watch(jax.jit(self._decode_fn), "decode_step")
+        self._sample = _watch(jax.jit(self._sample_fn,
+                                      static_argnames=("use_topp",
+                                                       "use_seeds")),
+                              "sample")
         # multi-token verify (speculative decoding): compiled per
         # (draft-width bucket, table-view bucket) pair — widths are padded to
         # powers of two so the compile cache stays small; warm every bucket
         # the workload will hit before timing anything
-        self._verify = jax.jit(self._verify_fn)
-        self._verify_sample = jax.jit(self._verify_sample_fn,
-                                      static_argnames=("use_topp",
-                                                       "use_seeds"))
+        self._verify = _watch(jax.jit(self._verify_fn), "verify_step")
+        self._verify_sample = _watch(
+            jax.jit(self._verify_sample_fn,
+                    static_argnames=("use_topp", "use_seeds")),
+            "verify_sample")
 
         # event hooks (wired by the gateway; req-first signatures)
         self.on_token: Optional[Callable[[Request, int, float], None]] = None
@@ -330,6 +402,9 @@ class ServeEngine:
         self.on_admit: Optional[Callable[[Request, int], None]] = None
         self.on_preempt: Optional[Callable[[Request], None]] = None
         self.on_expire: Optional[Callable[[Request], None]] = None
+        # per-tick summary hook (gateway → tick_gap histogram + energy
+        # monitor): fires after every tick() with wall/busy/token counts
+        self.on_tick: Optional[Callable[[Dict[str, Any]], None]] = None
 
     @property
     def kv_mode(self) -> str:
@@ -340,6 +415,38 @@ class ServeEngine:
     def cache(self):
         """Back-compat view of DenseKV's contiguous cache (None if paged)."""
         return getattr(self.kv, "cache", None)
+
+    # -- observability helpers -------------------------------------------------
+    def _phase(self, name: str) -> _Phase:
+        """Tick-phase timer (+ trace span when the tracer is enabled)."""
+        return _Phase(self, name)
+
+    def _note_compile(self, name: str, shapes: str) -> None:
+        self.stats.jit_compiles += 1
+
+    def _dispatch(self, fn, *args, **kwargs):
+        """Run one device dispatch, recording the host-side gap since the
+        previous dispatch returned (``tick_gap_ms``): sampling, scheduling
+        and bookkeeping time during which the device sits idle — the named
+        feedback signal for the ROADMAP's async disaggregated runtime."""
+        t = time.perf_counter()
+        if self._t_dev_end is not None:
+            gap = (t - self._t_dev_end) * 1e3
+            self._tick_gap_ms = gap
+            self.stats.tick_gap_ms_sum += gap
+            self.stats.tick_gaps += 1
+            self.trace.counter("tick_gap_ms", gap, pid=self._tpid)
+        out = fn(*args, **kwargs)
+        self._t_dev_end = time.perf_counter()
+        return out
+
+    #: phases counted as device-execution time for the energy monitor
+    _BUSY_PHASES = ("prefill", "prefill_chunk", "decode", "spec_verify",
+                    "sample", "commit")
+
+    def _busy_ms(self) -> float:
+        pm = self.stats.phase_ms
+        return sum(pm.get(k, 0.0) for k in self._BUSY_PHASES)
 
     # -- jitted kernels --------------------------------------------------------
     def _decode_fn(self, params, kv_state, tokens, pos, adapter_idx=None):
@@ -429,9 +536,10 @@ class ServeEngine:
             # unknown tenant, no adapter runtime, or an adapter bigger than
             # the whole SRAM budget: it could never be scheduled
             req.state = "rejected"
-            return req
-        if not self.scheduler.push(req):
+        elif not self.scheduler.push(req):
             req.state = "rejected"
+        self.trace.lifecycle(req.uid, "rejected" if req.state == "rejected"
+                             else "queued", pid=self._tpid)
         return req
 
     def _adapter_servable(self, adapter_id: str) -> bool:
@@ -459,12 +567,14 @@ class ServeEngine:
         if req is not None:
             req.state = "cancelled"
             self.stats.cancelled += 1
+            self.trace.lifecycle(uid, "cancelled", pid=self._tpid)
             return True
         for slot, r in enumerate(self.slot_req):
             if r is not None and r.uid == uid:
                 r.state = "cancelled"
                 self.stats.cancelled += 1
                 self._release_slot(slot)
+                self.trace.lifecycle(uid, "cancelled", pid=self._tpid)
                 return True
         return False
 
@@ -549,6 +659,7 @@ class ServeEngine:
         for req in self.scheduler.drop_expired(now):
             req.state = "expired"
             self.stats.expired += 1
+            self.trace.lifecycle(req.uid, "expired", pid=self._tpid)
             if self.on_expire:
                 self.on_expire(req)
         for slot in self._free_slots():
@@ -650,6 +761,11 @@ class ServeEngine:
         else:
             # paper mode: prompt tokens stream through decode_step
             self.pending_prompt[slot] = list(remainder)
+        if self.trace.enabled:
+            state = ("prefilling" if (self.slot_prefill_todo[slot]
+                                      or len(self.pending_prompt[slot]) > 1)
+                     else "decoding")
+            self.trace.lifecycle(req.uid, state, pid=self._tpid)
         if self.on_admit:
             self.on_admit(req, slot)
 
@@ -664,7 +780,20 @@ class ServeEngine:
         # last prompt token goes through decode
         self._prefill_span(slot, feed[:-1], matched)
 
-    def _prefill_span(self, slot: int, tokens: List[int], start: int) -> None:
+    def _prefill_fns(self) -> Tuple[CompileWatch, CompileWatch]:
+        """The (fresh, resume) prefill jits behind this engine's compile
+        watches (the jits themselves stay shared on the model)."""
+        if self._prefill_watch is None:
+            fresh, resume = _prefill_jits(self.model)
+            self._prefill_watch = (
+                CompileWatch(fresh, "prefill_fresh", self.trace,
+                             on_compile=self._note_compile, pid=self._tpid),
+                CompileWatch(resume, "prefill_resume", self.trace,
+                             on_compile=self._note_compile, pid=self._tpid))
+        return self._prefill_watch
+
+    def _prefill_span(self, slot: int, tokens: List[int], start: int,
+                      phase: str = "prefill") -> None:
         """Prefill ``tokens`` into positions ``start .. start+n`` of the
         slot's cache (bucketed length). ``start`` > 0 resumes mid-sequence:
         positions offset by the committed span (prefix-cache pages and/or
@@ -676,46 +805,49 @@ class ServeEngine:
         if n <= 0:
             return
         t0 = time.time()
-        bucket = 1 << max(4, (n - 1).bit_length())
-        bucket = min(bucket, self.max_len - start)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :n] = tokens
-        aidx = None
-        if self.adapters is not None and self.slot_adapter[slot]:
-            aidx = jnp.asarray([self.slot_adapter[slot]], jnp.int32)
-        use_jit = self.cfg.attention_kind == "gqa" \
-            and self.cfg.family not in ("ssm", "hybrid")
-        if start:
-            # pad the committed prefix to a power-of-two bucket (the padded
-            # tail is masked by position inside the model) so consecutive
-            # chunks hit the same compiled resume graph
-            pref = self.kv.prefix_kv(slot, start)
-            pbucket = min(1 << max(4, (start - 1).bit_length()), self.max_len)
-            if pbucket > start:
-                pad = [(0, 0)] * 5
-                pad[3] = (0, pbucket - start)
-                pref = {k: jnp.pad(v, pad) for k, v in pref.items()}
-            _, sub_cache = _prefill_jits(self.model)[1](
-                self._effective_params(), jnp.asarray(toks),
-                self.max_len, jnp.int32(start), pref, aidx)
-        elif use_jit:
-            _, sub_cache = _prefill_jits(self.model)[0](
-                self._effective_params(), jnp.asarray(toks),
-                self.max_len, aidx)
-        else:
-            kwargs = {} if aidx is None else {"adapter_idx": aidx}
-            _, sub_cache = self.model.prefill(self._effective_params(),
-                                              {"tokens": jnp.asarray(toks)},
-                                              self.max_len, **kwargs)
-        self.kv.write_prefill(slot, start, sub_cache, n)
-        self.pos[slot] = start + n
-        if any(self._is_decoding(i) for i in range(self.max_slots)
-               if i != slot):
-            # charge real prefill compute, not just async dispatch time —
-            # without the sync, the stall gauge under-reports on async
-            # backends and the monolithic-vs-chunked A/B inverts
-            jax.block_until_ready(sub_cache)
-            self.stats.decode_stall_s += time.time() - t0
+        with self._phase(phase):
+            bucket = 1 << max(4, (n - 1).bit_length())
+            bucket = min(bucket, self.max_len - start)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = tokens
+            aidx = None
+            if self.adapters is not None and self.slot_adapter[slot]:
+                aidx = jnp.asarray([self.slot_adapter[slot]], jnp.int32)
+            use_jit = self.cfg.attention_kind == "gqa" \
+                and self.cfg.family not in ("ssm", "hybrid")
+            if start:
+                # pad the committed prefix to a power-of-two bucket (the
+                # padded tail is masked by position inside the model) so
+                # consecutive chunks hit the same compiled resume graph
+                pref = self.kv.prefix_kv(slot, start)
+                pbucket = min(1 << max(4, (start - 1).bit_length()),
+                              self.max_len)
+                if pbucket > start:
+                    pad = [(0, 0)] * 5
+                    pad[3] = (0, pbucket - start)
+                    pref = {k: jnp.pad(v, pad) for k, v in pref.items()}
+                _, sub_cache = self._dispatch(
+                    self._prefill_fns()[1], self._effective_params(),
+                    jnp.asarray(toks), self.max_len, jnp.int32(start), pref,
+                    aidx)
+            elif use_jit:
+                _, sub_cache = self._dispatch(
+                    self._prefill_fns()[0], self._effective_params(),
+                    jnp.asarray(toks), self.max_len, aidx)
+            else:
+                kwargs = {} if aidx is None else {"adapter_idx": aidx}
+                _, sub_cache = self.model.prefill(
+                    self._effective_params(),
+                    {"tokens": jnp.asarray(toks)}, self.max_len, **kwargs)
+            self.kv.write_prefill(slot, start, sub_cache, n)
+            self.pos[slot] = start + n
+            if any(self._is_decoding(i) for i in range(self.max_slots)
+                   if i != slot):
+                # charge real prefill compute, not just async dispatch time —
+                # without the sync, the stall gauge under-reports on async
+                # backends and the monolithic-vs-chunked A/B inverts
+                jax.block_until_ready(sub_cache)
+                self.stats.decode_stall_s += time.time() - t0
 
     def _advance_prefill(self) -> int:
         """Run the prefill chunks the scheduler planned for this tick.
@@ -734,7 +866,8 @@ class ServeEngine:
         for slot in self.scheduler.plan_prefill(prefilling, n_decoding):
             todo = self.slot_prefill_todo[slot]
             n = min(self.prefill_chunk, len(todo) - 1)
-            self._prefill_span(slot, todo[:n], int(self.pos[slot]))
+            self._prefill_span(slot, todo[:n], int(self.pos[slot]),
+                               phase="prefill_chunk")
             req = self.slot_req[slot]
             req.prefill_chunks += 1
             self.stats.prefill_chunks += 1
@@ -781,6 +914,7 @@ class ServeEngine:
         req.state = "preempted"
         req.n_preempts += 1
         self.stats.preemptions += 1
+        self.trace.lifecycle(req.uid, "preempt", pid=self._tpid)
         self._release_slot(slot)
         self.scheduler.requeue(req)
         if self.on_preempt:
@@ -854,6 +988,7 @@ class ServeEngine:
         req.prefill_ticks += 1
         if self.pending_prompt[i]:
             return True
+        self.trace.lifecycle(req.uid, "decoding", pid=self._tpid)
         if self.prefix is not None:
             keys = self.prefix.commit(self.slot_feed[i],
                                       self.pool.tables[i],
@@ -884,6 +1019,7 @@ class ServeEngine:
             req.state = "done"
             self.stats.completed += 1
             self._release_slot(i)
+            self.trace.lifecycle(req.uid, "done", pid=self._tpid)
             if self.on_done:
                 self.on_done(req)
         return done
@@ -955,62 +1091,71 @@ class ServeEngine:
         accepted span — ``plan_emit`` truncates where the sequential engine
         would have stopped (budget / eos / max_len), so rejected drafts
         never reach the KV store and bookkeeping is step-identical."""
-        n_in = np.ones((self.max_slots,), np.int32)
-        for i in active:
-            n_in[i] = 1 + len(drafts[i])
-        s_bucket = 1 << int(max(int(n_in[i]) for i in active) - 1).bit_length()
-        tokens = np.zeros((self.max_slots, s_bucket), np.int32)
-        for i in active:
-            row = [self._fed_token(i)] + drafts[i]
-            tokens[i, :len(row)] = row
-        temps, topks, topps, seeds, has_seed, steps = \
-            self._sampling_vectors(active)
+        with self._phase("spec_verify"):
+            n_in = np.ones((self.max_slots,), np.int32)
+            for i in active:
+                n_in[i] = 1 + len(drafts[i])
+            s_bucket = 1 << int(max(int(n_in[i])
+                                    for i in active) - 1).bit_length()
+            self._last_verify_width = s_bucket
+            tokens = np.zeros((self.max_slots, s_bucket), np.int32)
+            for i in active:
+                row = [self._fed_token(i)] + drafts[i]
+                tokens[i, :len(row)] = row
+            temps, topks, topps, seeds, has_seed, steps = \
+                self._sampling_vectors(active)
 
-        state = self.kv.verify_state(active, self.pos, n_in, s_bucket)
-        logits, spans = self._verify(self._effective_params(), state,
-                                     jnp.asarray(tokens),
-                                     jnp.asarray(self.pos),
-                                     self._adapter_idx())
-        self.key, sub = jax.random.split(self.key)
-        choice = np.asarray(self._verify_sample(
-            logits, sub, jnp.asarray(temps), jnp.asarray(topks),
-            jnp.asarray(topps), jnp.asarray(seeds), jnp.asarray(has_seed),
-            jnp.asarray(steps),
-            use_topp=bool(np.any(topps < 1.0)),
-            use_seeds=bool(np.any(has_seed))))
+            state = self.kv.verify_state(active, self.pos, n_in, s_bucket)
+            logits, spans = self._dispatch(
+                self._verify, self._effective_params(), state,
+                jnp.asarray(tokens), jnp.asarray(self.pos),
+                self._adapter_idx())
+        with self._phase("sample"):
+            self.key, sub = jax.random.split(self.key)
+            choice = np.asarray(self._dispatch(
+                self._verify_sample,
+                logits, sub, jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(topps), jnp.asarray(seeds),
+                jnp.asarray(has_seed), jnp.asarray(steps),
+                use_topp=bool(np.any(topps < 1.0)),
+                use_seeds=bool(np.any(has_seed))))
 
         now = time.time()
         self.stats.ticks += 1
         self.stats.spec_ticks += 1
-        for i in active:
-            req = self.slot_req[i]
-            if req is None:
-                continue        # released by a callback earlier in the loop
-            if len(self.pending_prompt[i]) > 1:
-                # mid-prompt (token-mode prefill): commit the fed token's KV
-                # and keep consuming — drafting was ineligible here
-                self.kv.commit_span(i, int(self.pos[i]), spans, 1)
-                self.pos[i] += 1
+        with self._phase("emit"):
+            for i in active:
+                req = self.slot_req[i]
+                if req is None:
+                    continue    # released by a callback earlier in the loop
+                if len(self.pending_prompt[i]) > 1:
+                    # mid-prompt (token-mode prefill): commit the fed token's
+                    # KV and keep consuming — drafting was ineligible here
+                    with self._phase("commit"):
+                        self.kv.commit_span(i, int(self.pos[i]), spans, 1)
+                    self.pos[i] += 1
+                    self._pop_pending(i)
+                    continue
+                acc = accepted_prefix(drafts[i], choice[i])
+                emit = plan_emit(acc, choice[i],
+                                 budget=req.max_new_tokens - len(req.output),
+                                 room=self.max_len - int(self.pos[i]),
+                                 eos_id=req.eos_id)
+                # commit before _pop_pending: trie donation of a page-aligned
+                # prompt needs the fed token's KV in its page already
+                with self._phase("commit"):
+                    self.kv.commit_span(i, int(self.pos[i]), spans,
+                                        len(emit))
                 self._pop_pending(i)
-                continue
-            acc = accepted_prefix(drafts[i], choice[i])
-            emit = plan_emit(acc, choice[i],
-                             budget=req.max_new_tokens - len(req.output),
-                             room=self.max_len - int(self.pos[i]),
-                             eos_id=req.eos_id)
-            # commit before _pop_pending: trie donation of a page-aligned
-            # prompt needs the fed token's KV in its page already
-            self.kv.commit_span(i, int(self.pos[i]), spans, len(emit))
-            self._pop_pending(i)
-            req.spec_drafted += len(drafts[i])
-            self.stats.spec_drafted += len(drafts[i])
-            gained = max(0, len(emit) - 1)
-            req.spec_accepted += gained
-            self.stats.spec_accepted += gained
-            for tok in emit:
-                self.pos[i] += 1
-                if self._emit_token(i, req, int(tok), now):
-                    break
+                req.spec_drafted += len(drafts[i])
+                self.stats.spec_drafted += len(drafts[i])
+                gained = max(0, len(emit) - 1)
+                req.spec_accepted += gained
+                self.stats.spec_accepted += gained
+                for tok in emit:
+                    self.pos[i] += 1
+                    if self._emit_token(i, req, int(tok), now):
+                        break
 
     def tick(self) -> None:
         """One decode step for the whole slot batch, preceded by the tick's
@@ -1018,51 +1163,85 @@ class ServeEngine:
         the decode batch, so co-resident decode slots keep emitting every
         tick while its prompt streams in chunk by chunk. With
         ``spec_decode=True`` and any drafts on offer, the tick runs the
-        multi-token verify instead and commits every accepted token."""
-        self._admit()
+        multi-token verify instead and commits every accepted token.
+
+        The whole tick rides one "tick" trace span; ``on_tick`` (if wired)
+        receives a per-tick summary — wall/busy time, the tick's host-side
+        dispatch gap, tokens emitted, occupancy and the verify width — the
+        gateway feeds it to the tick-gap histogram and the energy monitor."""
+        t0 = time.perf_counter()
+        busy0 = self._busy_ms()
+        tokens0 = self.stats.tokens_out
+        ticks0 = self.stats.ticks
+        self._tick_gap_ms = None
+        self._last_verify_width = 1
+        with self.trace.span("tick", pid=self._tpid):
+            self._tick_impl()
+        if self.on_tick is not None:
+            self.on_tick({
+                "wall_ms": (time.perf_counter() - t0) * 1e3,
+                "busy_ms": self._busy_ms() - busy0,
+                "gap_ms": self._tick_gap_ms,
+                "tokens": self.stats.tokens_out - tokens0,
+                "ticked": self.stats.ticks > ticks0,
+                "active": sum(1 for r in self.slot_req if r is not None),
+                "prefilling": sum(1 for t in self.slot_prefill_todo if t),
+                "verify_width": self._last_verify_width,
+            })
+
+    def _tick_impl(self) -> None:
+        with self._phase("schedule"):
+            self._admit()
         chunks = self._advance_prefill()
         active = [i for i in range(self.max_slots) if self._is_decoding(i)]
         if active:
-            active = self._ensure_capacity(active)
+            with self._phase("schedule"):
+                active = self._ensure_capacity(active)
         if not active:
             if chunks:
                 self.stats.ticks += 1   # prefill-only tick still progresses
             return
 
         if self.spec_decode:
-            drafts = self._plan_drafts(active)
+            with self._phase("schedule"):
+                drafts = self._plan_drafts(active)
             if any(drafts[i] for i in active):
                 self._tick_verify(active, drafts)
                 return
 
-        tokens = np.zeros((self.max_slots,), np.int32)
-        for i in active:
-            tokens[i] = self._fed_token(i)
-        temps, topks, topps, seeds, has_seed, steps = \
-            self._sampling_vectors(active)
+        with self._phase("decode"):
+            tokens = np.zeros((self.max_slots,), np.int32)
+            for i in active:
+                tokens[i] = self._fed_token(i)
+            temps, topks, topps, seeds, has_seed, steps = \
+                self._sampling_vectors(active)
 
-        state = self.kv.decode_state(active, self.pos)
-        logits, new_state = self._decode(self._effective_params(), state,
-                                         jnp.asarray(tokens),
-                                         jnp.asarray(self.pos),
-                                         self._adapter_idx())
-        self.kv.commit(new_state, active, self.pos)
-        self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(self._sample(logits, sub, jnp.asarray(temps),
-                                      jnp.asarray(topks), jnp.asarray(topps),
-                                      jnp.asarray(seeds),
-                                      jnp.asarray(has_seed),
-                                      jnp.asarray(steps),
-                                      use_topp=bool(np.any(topps < 1.0)),
-                                      use_seeds=bool(np.any(has_seed))))
+            state = self.kv.decode_state(active, self.pos)
+            logits, new_state = self._dispatch(
+                self._decode, self._effective_params(), state,
+                jnp.asarray(tokens), jnp.asarray(self.pos),
+                self._adapter_idx())
+        with self._phase("commit"):
+            self.kv.commit(new_state, active, self.pos)
+        with self._phase("sample"):
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(self._dispatch(
+                self._sample,
+                logits, sub, jnp.asarray(temps),
+                jnp.asarray(topks), jnp.asarray(topps),
+                jnp.asarray(seeds), jnp.asarray(has_seed),
+                jnp.asarray(steps),
+                use_topp=bool(np.any(topps < 1.0)),
+                use_seeds=bool(np.any(has_seed))))
 
         now = time.time()
         self.stats.ticks += 1
-        for i in active:
-            req = self.slot_req[i]
-            if req is None:
-                continue        # released by a callback earlier in the loop
-            self.pos[i] += 1
-            if self._pop_pending(i):
-                continue  # still consuming the prompt
-            self._emit_token(i, req, int(nxt[i]), now)
+        with self._phase("emit"):
+            for i in active:
+                req = self.slot_req[i]
+                if req is None:
+                    continue    # released by a callback earlier in the loop
+                self.pos[i] += 1
+                if self._pop_pending(i):
+                    continue  # still consuming the prompt
+                self._emit_token(i, req, int(nxt[i]), now)

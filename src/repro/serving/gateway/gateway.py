@@ -23,20 +23,38 @@ from typing import Callable, Dict, Iterator, List, Optional
 from repro.serving.api import RequestSpec, SamplingParams, coerce_submit
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.gateway.metrics import Metrics
+from repro.serving.obs.energy import EnergyMonitor
 
 TokenCallback = Callable[[Request, int], None]
 
+#: tick_gap histogram buckets: sub-ms host bubbles up to multi-second stalls
+_GAP_BUCKETS = (0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0,
+                100.0, 500.0)
+
 
 class Gateway:
-    def __init__(self, engine: ServeEngine, metrics: Optional[Metrics] = None):
+    def __init__(self, engine: ServeEngine, metrics: Optional[Metrics] = None,
+                 energy: Optional[EnergyMonitor] = None):
         self.engine = engine
         self.metrics = metrics if metrics is not None else Metrics()
+        # energy observability: per-tick summaries drive the Fig-12 power
+        # model from live engine state (device-busy fraction + SRAM
+        # residency) → chip_power_w / gated_bank_fraction / energy_per_token_j
+        self.energy = energy if energy is not None else EnergyMonitor(
+            n_layers=engine.cfg.num_layers)
+        # optional Prometheus text sidecar: when set (launch/serve.py
+        # --prom-out), the registry is atomically rewritten every
+        # ``prom_every`` ticks
+        self.prom_out: Optional[str] = None
+        self.prom_every: int = 50
+        self._prom_tick = 0
         self._stream_cbs: Dict[int, TokenCallback] = {}
         engine.on_token = self._on_token
         engine.on_done = self._on_done
         engine.on_admit = self._on_admit
         engine.on_preempt = self._on_preempt
         engine.on_expire = self._on_expire
+        engine.on_tick = self._on_tick
 
     # -- frontend API ---------------------------------------------------------
     def submit(self, prompt: List[int], spec: Optional[RequestSpec] = None,
@@ -134,6 +152,50 @@ class Gateway:
         self.metrics.inc("requests_expired")
         self._stream_cbs.pop(req.uid, None)
 
+    def _on_tick(self, summary: Dict) -> None:
+        """Engine per-tick summary → tick-gap histogram + energy model.
+        ``gap_ms`` (the host-side bubble between device dispatches) goes to
+        a histogram, not just the running mean — the p50 is the steady-state
+        bubble while the max is dominated by compile/admission outliers."""
+        if summary.get("gap_ms") is not None:
+            self.metrics.observe("tick_gap_ms", summary["gap_ms"],
+                                 buckets=_GAP_BUCKETS)
+        self.energy.observe_tick(
+            wall_s=summary["wall_ms"] * 1e-3,
+            busy_s=summary["busy_ms"] * 1e-3,
+            tokens=summary["tokens"],
+            sram_utilization=self._sram_utilization(),
+            verify_width=summary.get("verify_width", 1))
+        if self.prom_out is not None:
+            self._prom_tick += 1
+            if self._prom_tick % max(self.prom_every, 1) == 0:
+                from repro.serving.obs.prom import write_prom
+                self._sample_gauges()
+                write_prom(self.prom_out, self.metrics.to_prom_text())
+
+    def _sram_utilization(self) -> float:
+        """Resident fraction of the SRAM budget the energy model charges
+        retention power on: KV page-pool occupancy when paged (the dominant
+        SRAM tenant), active-slot fraction when dense (the whole cache is
+        pre-allocated but only active rows hold live state), plus the
+        adapter cache's used fraction of its byte budget when present."""
+        eng = self.engine
+        if eng.pool is not None:
+            total = max(eng.pool.cfg.n_pages, 1)
+            kv_frac = 1.0 - eng.pool.pages_free / total
+        else:
+            kv_frac = (sum(1 for r in eng.slot_req if r is not None)
+                       / max(eng.max_slots, 1))
+        if eng.adapters is not None:
+            st = eng.adapters.stats()
+            budget = st.get("budget_bytes") or 0
+            if budget:
+                ad_frac = min(st.get("bytes_used", 0) / budget, 1.0)
+                # weight KV:adapters 4:1 — KV pages dwarf adapter stacks in
+                # the paper's SRAM budget split
+                return min(0.8 * kv_frac + 0.2 * ad_frac, 1.0)
+        return min(kv_frac, 1.0)
+
     # -- observability ---------------------------------------------------------
     def _sample_gauges(self) -> None:
         eng = self.engine
@@ -172,6 +234,17 @@ class Gateway:
             # adapter SRAM-cache residency / hit-rate / eviction telemetry
             for name, value in eng.adapters.stats().items():
                 self.metrics.set_gauge(f"adapter_cache_{name}", value)
+        # tick-loop health: host bubble between device dispatches and jit
+        # cache growth (recompile stalls), both from the engine's obs layer
+        self.metrics.set_gauge("tick_gap_ms_mean",
+                               round(eng.stats.tick_gap_ms_mean, 4))
+        self.metrics.set_gauge("jit_recompiles", eng.stats.jit_compiles)
+        hol = getattr(eng.scheduler, "hol_bypasses", None)
+        if hol is not None:
+            self.metrics.set_gauge("sched_hol_bypasses", hol)
+        # energy gauges: the Fig-12 model integrated over live tick state
+        for name, value in self.energy.gauges().items():
+            self.metrics.set_gauge(name, value)
 
     def metrics_dict(self) -> Dict:
         self._sample_gauges()

@@ -1,9 +1,11 @@
-"""Serving metrics registry: counters, gauges, histograms → one JSON blob.
+"""Serving metrics registry: counters, gauges, histograms → JSON blob +
+Prometheus text exposition.
 
 Prometheus-shaped (monotonic counters, point-in-time gauges, bucketed
-histograms) but in-process and dependency-free: the gateway observes
-TTFT / time-between-tokens / queue depth / pool occupancy here and
-`launch/serve.py` + `benchmarks/bench_serving.py` dump `to_dict()` as JSON.
+histograms with cumulative export) and dependency-free: the gateway
+observes TTFT / time-between-tokens / queue depth / pool occupancy here;
+`launch/serve.py` + `benchmarks/bench_serving.py` dump `to_dict()` as JSON
+and `to_prom_text()` renders the standard text format (``--prom-out``).
 Exact percentiles come from retained samples (serving runs here are
 bench-scale; a reservoir cap bounds memory for long soaks).
 """
@@ -11,7 +13,7 @@ from __future__ import annotations
 
 import bisect
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 DEFAULT_MS_BUCKETS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
                       500.0, 1000.0, 2000.0, 5000.0, 10000.0)
@@ -44,16 +46,33 @@ class Histogram:
                 self._samples[j] = value
 
     def percentile(self, p: float) -> float:
-        """Exact percentile over retained samples (p in [0, 100])."""
+        """Percentile over retained samples (p in [0, 100]), with linear
+        interpolation between adjacent order statistics — nearest-rank
+        rounding made p50 of [1, 2] arbitrarily 1 or 2 depending on the
+        rounding direction; interpolation gives 1.5."""
         if not self._samples:
             return 0.0
         s = sorted(self._samples)
-        idx = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
-        return s[idx]
+        rank = max(0.0, min(1.0, p / 100.0)) * (len(s) - 1)
+        lo = int(rank)
+        hi = min(lo + 1, len(s) - 1)
+        frac = rank - lo
+        return s[lo] + (s[hi] - s[lo]) * frac
 
     @property
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
+
+    def cumulative_buckets(self) -> List[Tuple[float, int]]:
+        """Prometheus-style cumulative (upper_edge, count<=edge) pairs,
+        ending with the (+Inf, total) tail."""
+        out: List[Tuple[float, int]] = []
+        cum = 0
+        for edge, n in zip(self.buckets, self.bucket_counts):
+            cum += n
+            out.append((edge, cum))
+        out.append((float("inf"), self.count))
+        return out
 
     def to_dict(self) -> Dict:
         return {
@@ -63,20 +82,23 @@ class Histogram:
             "p90": round(self.percentile(90), 3),
             "p99": round(self.percentile(99), 3),
             "max": round(self._max, 3) if self.count else 0.0,
+            # cumulative buckets were silently dropped before this fix —
+            # the registry was "Prometheus-shaped" with no buckets exported
+            "buckets": {("+Inf" if edge == float("inf") else f"{edge:g}"): n
+                        for edge, n in self.cumulative_buckets()},
         }
 
 
 class Metrics:
-    """Flat named registry. Conventional names used by the gateway:
+    """Flat named registry. Every conventional metric name the gateway
+    publishes (counters, gauges, histograms — including the observability
+    layer's tick/energy/jit gauges) is documented in one table in
+    README.md § "Observability"; this class is name-agnostic plumbing.
 
-    counters:  requests_submitted / rejected / expired / cancelled /
-               completed / preempted, tokens_out, prefix_hit_tokens,
-               prefill_ticks_saved
-    gauges:    queue_depth, active_slots, prefilling_slots, prefill_chunks,
-               decode_stall_s, pool_pages_free, pool_occupancy,
-               spec_drafted_tokens, spec_accepted_tokens, spec_accept_rate
-    histograms (ms): ttft_ms, tbt_ms, e2e_ms, queue_wait_ms
-    """
+    Two export surfaces: ``to_dict()`` (the JSON blob benches and
+    `launch/serve.py` dump) and ``to_prom_text()`` (standard Prometheus
+    text exposition incl. cumulative histogram buckets, rendered by
+    `repro.serving.obs.prom`)."""
 
     def __init__(self):
         self.counters: Dict[str, float] = {}
@@ -105,3 +127,10 @@ class Metrics:
             "gauges": dict(self.gauges),
             "histograms": {k: h.to_dict() for k, h in self.histograms.items()},
         }
+
+    def to_prom_text(self) -> str:
+        """The registry in Prometheus text exposition format (# TYPE
+        headers, cumulative buckets + +Inf, _sum/_count) — see
+        `repro.serving.obs.prom` for the format rules."""
+        from repro.serving.obs.prom import render_text
+        return render_text(self)

@@ -47,6 +47,11 @@ class Scheduler:
         # are in-order scans rather than per-call sorts
         self._entries: List[Request] = []
         self._seq = itertools.count()
+        # observability: admissions that bypassed a pool-blocked head —
+        # sustained growth means a large request is parked at the front of
+        # the queue while smaller ones flow around it (gateway gauge
+        # ``sched_hol_bypasses``)
+        self.hol_bypasses = 0
 
     # -- queue ----------------------------------------------------------------
     def __len__(self) -> int:
@@ -107,12 +112,15 @@ class Scheduler:
         with a cold adapter cannot be starved by warm low-priority traffic.
         """
         best_i: Optional[int] = None
+        blocked_ahead = 0
         for i, req in enumerate(self._entries):
             if best_i is None:
                 if can_admit(req):
                     best_i = i
                     if prefer is None or prefer(req):
                         break
+                else:
+                    blocked_ahead += 1
                 continue
             head = self._entries[best_i]
             head_dl = head.deadline_s if head.deadline_s is not None else math.inf
@@ -124,6 +132,8 @@ class Scheduler:
                 break
         if best_i is None:
             return None
+        if blocked_ahead:
+            self.hol_bypasses += 1
         return self._entries.pop(best_i)
 
     def plan_prefill(self, prefilling: Sequence[Tuple[int, Request]],

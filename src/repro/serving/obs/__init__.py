@@ -1,0 +1,29 @@
+"""Serving observability: per-tick phase tracing, Prometheus text
+exposition and live energy/power-gating gauges.
+
+Dependency-free (stdlib + the repo's own analytical power model). Three
+pieces, each usable alone:
+
+  * `obs.tracer` — `Tracer`: nested per-tick phase spans (tick → schedule /
+    prefill_chunk / decode / spec_verify / sample / commit / emit),
+    per-request lifecycle tracks (queued → prefilling → decoding → done,
+    with preempt/cancel edges) and jit-recompile instants, exported as
+    Chrome ``trace_event`` JSON(L) loadable in Perfetto. A ring-buffer mode
+    bounds memory on long soaks; disabled (the default in the engine) it
+    allocates nothing per span.
+  * `obs.prom` — renders the gateway `Metrics` registry in the standard
+    Prometheus text exposition format (``# TYPE`` lines, cumulative
+    histogram buckets incl. ``+Inf``) and writes it atomically.
+  * `obs.energy` — `EnergyMonitor`: drives `core.powergate.GatingSchedule`
+    from live engine state every tick (device-busy fraction, SRAM
+    residency) and integrates the paper's Fig-12 power model into
+    `energy_per_token_j` / `gated_bank_fraction` / `chip_power_w` gauges —
+    the measurement half of the ROADMAP power-gating item.
+"""
+from repro.serving.obs.energy import EnergyMonitor
+from repro.serving.obs.prom import render_text, write_prom
+from repro.serving.obs.tracer import (NULL_TRACER, CompileWatch, Tracer,
+                                      load_trace, validate_trace)
+
+__all__ = ["CompileWatch", "EnergyMonitor", "NULL_TRACER", "Tracer",
+           "load_trace", "render_text", "validate_trace", "write_prom"]

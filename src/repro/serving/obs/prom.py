@@ -1,0 +1,126 @@
+"""Prometheus text exposition for the gateway metrics registry.
+
+Renders a `repro.serving.gateway.metrics.Metrics` registry (or its
+`to_dict()` snapshot) in the standard text format — ``# TYPE`` lines,
+monotonic counters, point-in-time gauges and histograms with *cumulative*
+buckets including the ``+Inf`` tail plus ``_sum``/``_count`` — without any
+prometheus_client dependency.
+
+Name handling: metric names are sanitized to the legal charset
+(``[a-zA-Z_:][a-zA-Z0-9_:]*``) and the registry's per-tenant convention
+``base__<id>`` (e.g. ``adapter_requests__tenant-3``) is rendered as a
+labeled series ``base{id="tenant-3"}`` so tenant cardinality lives in
+labels, not metric names.
+
+``write_prom`` writes atomically (temp file + ``os.replace``) so a scraper
+tailing the file never sees a half-written window — this is what
+``launch/serve.py --prom-out`` calls once per tick window.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, List, Tuple
+
+_NAME_OK = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _sanitize(name: str) -> str:
+    name = _NAME_OK.sub("_", name)
+    if name and name[0].isdigit():
+        name = "_" + name
+    return name
+
+
+def _split_label(name: str) -> Tuple[str, str]:
+    """``base__value`` → (base, value); everything else → (name, "")."""
+    if "__" in name:
+        base, value = name.split("__", 1)
+        if base and value:
+            return base, value
+    return name, ""
+
+
+def _fmt(value: float) -> str:
+    f = float(value)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def render_text(metrics) -> str:
+    """The registry as Prometheus text exposition format (version 0.0.4).
+
+    ``metrics`` is a live `Metrics` registry; histogram buckets come from
+    the histogram objects themselves so the cumulative counts are exact
+    (the JSON snapshot also carries them since the bucket-export fix).
+    """
+    lines: List[str] = []
+
+    # counters — group base__label series under one # TYPE header
+    grouped: Dict[str, List[Tuple[str, float]]] = {}
+    for name in sorted(metrics.counters):
+        base, label = _split_label(name)
+        grouped.setdefault(_sanitize(base), []).append(
+            (label, metrics.counters[name]))
+    for base, series in grouped.items():
+        lines.append(f"# TYPE {base} counter")
+        for label, value in series:
+            suffix = f'{{id="{label}"}}' if label else ""
+            lines.append(f"{base}{suffix} {_fmt(value)}")
+
+    for name in sorted(metrics.gauges):
+        base = _sanitize(name)
+        lines.append(f"# TYPE {base} gauge")
+        lines.append(f"{base} {_fmt(metrics.gauges[name])}")
+
+    for name in sorted(metrics.histograms):
+        h = metrics.histograms[name]
+        base = _sanitize(name)
+        lines.append(f"# TYPE {base} histogram")
+        cum = 0
+        for edge, count in zip(h.buckets, h.bucket_counts):
+            cum += count
+            lines.append(f'{base}_bucket{{le="{edge:g}"}} {cum}')
+        lines.append(f'{base}_bucket{{le="+Inf"}} {h.count}')
+        lines.append(f"{base}_sum {_fmt(round(h.sum, 6))}")
+        lines.append(f"{base}_count {h.count}")
+
+    return "\n".join(lines) + "\n"
+
+
+def write_prom(path, text: str) -> None:
+    """Atomic write: a scraper never observes a torn exposition window."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+
+
+def parse_text(text: str) -> Dict[str, Dict]:
+    """Tiny parser for tests/tools: returns
+    ``{metric: {"type": t, "samples": {sample_name_with_labels: value}}}``.
+    Not a full OpenMetrics parser — just enough to round-trip our own
+    renderer and assert counter monotonicity / bucket cumulativity."""
+    out: Dict[str, Dict] = {}
+    current = None
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split()
+            current = out.setdefault(name, {"type": kind, "samples": {}})
+            continue
+        if line.startswith("#"):
+            continue
+        sample, value = line.rsplit(" ", 1)
+        base = sample.split("{", 1)[0]
+        root = base
+        for suffix in ("_bucket", "_sum", "_count"):
+            if root.endswith(suffix) and root[: -len(suffix)] in out:
+                root = root[: -len(suffix)]
+                break
+        target = out.get(root) if root in out else current
+        if target is None:
+            target = out.setdefault(base, {"type": "untyped", "samples": {}})
+        target["samples"][sample] = float(value)
+    return out

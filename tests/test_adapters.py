@@ -528,8 +528,12 @@ class TestMultiTenantBenchSmoke:
         from benchmarks.common import ARTIFACTS
         run(quick=True)
         out = json.loads((ARTIFACTS / "BENCH_multitenant.json").read_text())
-        assert set(out) == {"baseline", "single", "multi"}
+        assert set(out) == {"baseline", "single", "multi", "observability"}
         assert out["multi"]["completed"] == 8
+        obs = out["observability"]
+        assert obs["phase_breakdown_ms"], obs
+        assert obs["energy_per_token_j"] >= 0.0
+        assert 0.0 <= obs["gated_bank_fraction"] <= 1.0
         assert 0.0 <= out["multi"]["adapter_hit_rate"] <= 1.0
         assert out["multi"]["adapter_bytes_used"] \
             <= out["multi"]["adapter_budget_bytes"]

@@ -1,0 +1,351 @@
+"""Observability layer tests: tracer spans/lifecycle/ring, Chrome-trace
+validity, Prometheus text exposition, histogram percentile/bucket fixes,
+CompileWatch counting, the energy monitor, and the engine integration
+(phase breakdown + tick spans end-to-end on a tiny model)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving.gateway.metrics import Histogram, Metrics
+from repro.serving.obs import (CompileWatch, EnergyMonitor, NULL_TRACER,
+                               Tracer, load_trace, validate_trace)
+from repro.serving.obs.prom import parse_text, render_text
+from repro.serving.obs.tracer import _NULL_SPAN
+
+jax.config.update("jax_enable_x64", False)
+
+
+class FakeClock:
+    """Deterministic monotonic clock for tracer tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+class TestTracer:
+    def test_span_nesting_and_ordering(self, tmp_path):
+        clk = FakeClock()
+        tr = Tracer(clock=clk)
+        pid = tr.register("engine[test]")
+        with tr.span("tick", pid=pid):
+            clk.advance(0.001)
+            with tr.span("decode", pid=pid):
+                clk.advance(0.002)
+            with tr.span("sample", pid=pid):
+                clk.advance(0.001)
+        events = [e for e in tr.to_events() if e["ph"] == "X"]
+        names = [e["name"] for e in events]
+        # ts-sorted: the parent tick (earliest start) precedes its children
+        assert names == ["tick", "decode", "sample"]
+        tick, decode, sample = events
+        # children nest inside the parent interval
+        assert tick["ts"] <= decode["ts"]
+        assert decode["ts"] + decode["dur"] <= tick["ts"] + tick["dur"] + 1e-6
+        assert sample["ts"] >= decode["ts"] + decode["dur"] - 1e-6
+        assert tick["dur"] == pytest.approx(4000.0)   # 4 ms in µs
+
+    def test_dump_jsonl_valid_and_monotonic(self, tmp_path):
+        clk = FakeClock()
+        tr = Tracer(clock=clk)
+        pid = tr.register("e")
+        for _ in range(5):
+            with tr.span("tick", pid=pid):
+                clk.advance(0.001)
+                with tr.span("decode", pid=pid):
+                    clk.advance(0.001)
+            clk.advance(0.0005)
+        path = tmp_path / "trace.jsonl"
+        tr.dump(path)
+        # every line is a standalone JSON object
+        lines = path.read_text().strip().splitlines()
+        assert all(isinstance(json.loads(ln), dict) for ln in lines)
+        stats = validate_trace(path)
+        assert stats["tick_spans"] == 5
+        # the non-jsonl flavor is a traceEvents document, same content
+        jpath = tmp_path / "trace.json"
+        tr.dump(jpath)
+        doc = json.loads(jpath.read_text())
+        assert len(doc["traceEvents"]) == len(load_trace(path))
+        assert validate_trace(jpath)["tick_spans"] == 5
+
+    def test_lifecycle_states_and_preempt(self):
+        clk = FakeClock()
+        tr = Tracer(clock=clk)
+        pid = tr.register("e")
+        tr.lifecycle(7, "queued", pid=pid)
+        clk.advance(0.01)
+        tr.lifecycle(7, "decoding", pid=pid)
+        clk.advance(0.02)
+        tr.lifecycle(7, "preempt", pid=pid)      # closes decoding → queued
+        clk.advance(0.01)
+        tr.lifecycle(7, "decoding", pid=pid)
+        clk.advance(0.01)
+        tr.lifecycle(7, "done", pid=pid)
+        evts = [e for e in tr.to_events() if e.get("cat") == "request"]
+        spans = [e["name"] for e in evts if e["ph"] == "X"]
+        instants = [e["name"] for e in evts if e["ph"] == "i"]
+        assert spans == ["queued", "decoding", "queued", "decoding"]
+        assert instants == ["preempt", "done"]
+        # all on the request's own track (tid = uid)
+        assert {e["tid"] for e in evts} == {7}
+        # nothing left open → to_events adds no synthetic tail
+        assert len([e for e in tr.to_events() if e["ph"] == "X"]) == 4
+
+    def test_open_lifecycle_autoclosed_in_snapshot(self):
+        clk = FakeClock()
+        tr = Tracer(clock=clk)
+        tr.lifecycle(1, "queued")
+        clk.advance(0.05)
+        evts = tr.to_events()
+        (span,) = [e for e in evts if e["ph"] == "X"]
+        assert span["name"] == "queued"
+        assert span["dur"] == pytest.approx(50_000.0)
+
+    def test_ring_buffer_eviction(self):
+        clk = FakeClock()
+        tr = Tracer(ring=10, clock=clk)
+        pid = tr.register("e")
+        for i in range(100):
+            tr.instant(f"evt{i}", pid=pid)
+            clk.advance(0.001)
+        assert len(tr.events) == 10
+        names = [e["name"] for e in tr.to_events() if e["ph"] == "i"]
+        assert names == [f"evt{i}" for i in range(90, 100)]
+        # metadata (track names) survives eviction
+        assert any(e["ph"] == "M" for e in tr.to_events())
+
+    def test_disabled_tracer_allocates_nothing(self):
+        tr = Tracer(enabled=False)
+        s1 = tr.span("tick")
+        s2 = tr.span("decode", pid=3, something="else")
+        # one shared singleton, no span objects, no events
+        assert s1 is s2 is _NULL_SPAN
+        with s1:
+            pass
+        tr.instant("x")
+        tr.counter("c", 1.0)
+        tr.lifecycle(1, "queued")
+        assert len(tr.events) == 0 and tr.to_events() == []
+
+    def test_null_tracer_is_shared_and_inert(self):
+        assert not NULL_TRACER.enabled
+        assert NULL_TRACER.span("x") is _NULL_SPAN
+        assert len(NULL_TRACER.events) == 0
+
+
+class TestCompileWatch:
+    def test_counts_one_compile_per_shape(self):
+        import jax.numpy as jnp
+        compiled = []
+        tr = Tracer(clock=FakeClock())
+        fn = jax.jit(lambda x: x * 2)
+        w = CompileWatch(fn, "double", tr,
+                         on_compile=lambda n, s: compiled.append((n, s)))
+        a = jnp.ones((4,))
+        b = jnp.ones((8,))
+        np.testing.assert_allclose(np.asarray(w(a)), 2.0)
+        w(a)                       # cache hit: no new compile
+        w(b)                       # new shape bucket: compiles
+        w(b)
+        assert w.compiles == 2
+        assert [n for n, _ in compiled] == ["double", "double"]
+        instants = [e for e in tr.to_events() if e["name"] == "jit_compile"]
+        assert len(instants) == 2
+        assert instants[0]["args"]["fn"] == "double"
+        assert "4" in instants[0]["args"]["shapes"]
+
+
+class TestHistogram:
+    def test_percentile_linear_interpolation(self):
+        h = Histogram()
+        h.observe(1.0)
+        h.observe(2.0)
+        assert h.percentile(50) == pytest.approx(1.5)
+        assert h.percentile(0) == pytest.approx(1.0)
+        assert h.percentile(100) == pytest.approx(2.0)
+        h2 = Histogram()
+        for v in (10.0, 20.0, 30.0, 40.0):
+            h2.observe(v)
+        assert h2.percentile(50) == pytest.approx(25.0)
+        assert h2.percentile(25) == pytest.approx(17.5)
+
+    def test_to_dict_exports_cumulative_buckets(self):
+        h = Histogram(buckets=(1.0, 5.0, 10.0))
+        for v in (0.5, 0.7, 3.0, 7.0, 100.0):
+            h.observe(v)
+        d = h.to_dict()
+        assert d["buckets"] == {"1": 2, "5": 3, "10": 4, "+Inf": 5}
+        # cumulativity: counts never decrease along the edges
+        vals = list(d["buckets"].values())
+        assert vals == sorted(vals)
+        assert vals[-1] == d["count"]
+
+    def test_cumulative_buckets_inf_tail(self):
+        h = Histogram(buckets=(1.0,))
+        h.observe(0.5)
+        h.observe(99.0)
+        cb = h.cumulative_buckets()
+        assert cb == [(1.0, 1), (float("inf"), 2)]
+
+
+class TestPromText:
+    def _registry(self):
+        m = Metrics()
+        m.inc("tokens_out", 42)
+        m.inc("adapter_requests__tenant-0", 3)
+        m.set_gauge("queue_depth", 5)
+        for v in (0.5, 3.0, 7.0, 100.0):
+            m.observe("ttft_ms", v, buckets=(1.0, 5.0, 10.0))
+        return m
+
+    def test_render_parses_and_counters_match(self):
+        m = self._registry()
+        text = render_text(m)
+        parsed = parse_text(text)
+        assert parsed["tokens_out"]["type"] == "counter"
+        assert parsed["tokens_out"]["samples"]["tokens_out"] == 42.0
+        # label-split counter renders as base{id="..."}
+        assert 'adapter_requests{id="tenant-0"} 3' in text
+        assert parsed["queue_depth"]["samples"]["queue_depth"] == 5.0
+
+    def test_histogram_buckets_cumulative_with_inf(self):
+        text = render_text(self._registry())
+        parsed = parse_text(text)
+        samples = parsed["ttft_ms"]["samples"]
+        edges = [k for k in samples if "_bucket" in k]
+        counts = [samples[k] for k in edges]
+        assert counts == sorted(counts), "buckets must be cumulative"
+        assert samples['ttft_ms_bucket{le="+Inf"}'] == 4.0
+        assert samples["ttft_ms_count"] == 4.0
+        assert samples["ttft_ms_sum"] == pytest.approx(110.5)
+        assert parsed["ttft_ms"]["type"] == "histogram"
+
+    def test_type_headers_and_atomic_write(self, tmp_path):
+        from repro.serving.obs.prom import write_prom
+        text = render_text(self._registry())
+        assert "# TYPE tokens_out counter" in text
+        assert "# TYPE queue_depth gauge" in text
+        assert "# TYPE ttft_ms histogram" in text
+        out = tmp_path / "m.prom"
+        write_prom(out, text)
+        assert out.read_text() == text
+        assert not (tmp_path / "m.prom.tmp").exists()
+
+    def test_metrics_to_prom_text_roundtrip(self):
+        m = self._registry()
+        assert parse_text(m.to_prom_text()) == parse_text(render_text(m))
+
+
+class TestEnergyMonitor:
+    def test_idle_vs_busy(self):
+        idle = EnergyMonitor(n_layers=24)
+        busy = EnergyMonitor(n_layers=24)
+        for _ in range(50):
+            idle.observe_tick(wall_s=0.01, busy_s=0.0, tokens=0,
+                              sram_utilization=0.0)
+            busy.observe_tick(wall_s=0.01, busy_s=0.01, tokens=4,
+                              sram_utilization=1.0)
+        gi, gb = idle.gauges(), busy.gauges()
+        assert gb["chip_power_w"] > gi["chip_power_w"]
+        # idle: every ROM bank gated; busy: only active(+prewake) powered
+        assert gi["gated_bank_fraction"] == pytest.approx(1.0)
+        assert 0.0 < gb["gated_bank_fraction"] < 1.0
+        assert gb["energy_per_token_j"] > 0.0
+        assert gi["energy_total_j"] > 0.0    # static floor still burns
+
+    def test_energy_integrates_monotonically(self):
+        em = EnergyMonitor(n_layers=4)
+        last = 0.0
+        for _ in range(10):
+            em.observe_tick(wall_s=0.005, busy_s=0.003, tokens=1)
+            assert em.energy_j > last
+            last = em.energy_j
+
+    def test_gating_disabled_draws_more(self):
+        on = EnergyMonitor(n_layers=24, gating_enabled=True)
+        off = EnergyMonitor(n_layers=24, gating_enabled=False)
+        on.observe_tick(wall_s=0.01, busy_s=0.01, tokens=1)
+        off.observe_tick(wall_s=0.01, busy_s=0.01, tokens=1)
+        assert off.gauges()["chip_power_w"] > on.gauges()["chip_power_w"]
+        assert off.gauges()["gated_bank_fraction"] == pytest.approx(0.0)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    from repro.configs.base import get_config
+    from repro.launch.train import reduce_config
+    from repro.models.transformer import Model
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+class TestEngineIntegration:
+    def test_traced_engine_end_to_end(self, model_params, tmp_path):
+        from repro.serving import PagedKV, RequestSpec, ServeEngine
+        from repro.serving.gateway import Gateway
+        model, params = model_params
+        tr = Tracer()
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          kv=PagedKV(page=8, n_pages=24), tracer=tr)
+        gw = Gateway(eng)
+        reqs = [gw.submit(list(range(3 + i)), RequestSpec(max_new_tokens=4))
+                for i in range(3)]
+        gw.run_until_drained()
+        assert all(q.state == "done" for q in reqs)
+        # phase self-times accumulated for the real tick phases
+        assert {"schedule", "decode", "sample", "commit",
+                "emit"} <= set(eng.stats.phase_ms)
+        bd = eng.stats.phase_breakdown_ms()
+        assert all(v >= 0 for v in bd.values())
+        # every jitted entry rode a CompileWatch: >= decode + sample
+        assert eng.stats.jit_compiles >= 2
+        # host gaps between dispatches were observed
+        assert eng.stats.tick_gaps > 0 and eng.stats.tick_gap_ms_mean > 0
+        path = tmp_path / "t.jsonl"
+        tr.dump(path)
+        stats = validate_trace(path)
+        assert stats["tick_spans"] == eng.stats.ticks
+        assert stats["request_spans"] > 0
+        # each request's track reaches its terminal instant
+        done = [e for e in load_trace(path)
+                if e.get("cat") == "request" and e["ph"] == "i"]
+        assert {e["tid"] for e in done} == {q.uid for q in reqs}
+        assert all(e["name"] == "done" for e in done)
+
+    def test_default_engine_has_no_tracer_overhead(self, model_params):
+        """Tracer disabled is the default: no span objects, no events, but
+        the phase/gap accounting in stats still works."""
+        from repro.serving import RequestSpec, ServeEngine
+        model, params = model_params
+        before = len(NULL_TRACER.events)
+        eng = ServeEngine(model, params, max_slots=1, max_len=32)
+        assert eng.trace is NULL_TRACER
+        eng.submit(list(range(4)), RequestSpec(max_new_tokens=3))
+        eng.run_until_drained()
+        assert len(NULL_TRACER.events) == before       # recorded nothing
+        assert NULL_TRACER.span("x") is _NULL_SPAN     # still the singleton
+        assert eng.stats.phase_ms                      # accounting intact
+
+    def test_on_tick_summary_feeds_energy(self, model_params):
+        from repro.serving import RequestSpec, ServeEngine
+        from repro.serving.gateway import Gateway
+        model, params = model_params
+        eng = ServeEngine(model, params, max_slots=1, max_len=32)
+        gw = Gateway(eng)
+        gw.submit(list(range(4)), RequestSpec(max_new_tokens=3))
+        gw.run_until_drained()
+        assert gw.energy.ticks == eng.stats.ticks
+        g = gw.metrics_dict()["gauges"]
+        assert g["chip_power_w"] > 0
+        assert 0.0 <= g["gated_bank_fraction"] <= 1.0
+        assert g["energy_per_token_j"] > 0
+        assert "tick_gap_ms" in gw.metrics.histograms

@@ -16,7 +16,11 @@ on *every tick*:
     out a request only if no admissible queued entry has a strictly more
     urgent (priority, deadline) key (checked by a wrapping scheduler);
   * **every stream terminates** with eos / budget / cancel / expiry — no
-    zombie requests after drain, and no output ever exceeds its budget.
+    zombie requests after drain, and no output ever exceeds its budget;
+  * **metrics agree with ground truth**: the gateway's tokens_out counter
+    equals the tokens actually emitted, the page-occupancy gauge equals the
+    pool's own accounting, accept-rate / gated-bank-fraction stay in
+    [0, 1] and the energy integral never decreases.
 
 The stream is generated from ``FUZZ_SEED`` (env, default 0): the fast lane
 pins it, a non-blocking CI job rotates it per run. Every assertion message
@@ -130,6 +134,34 @@ def _adapter_invariants(eng):
                   f"in-flight adapter {req.adapter_id} not pinned")
 
 
+def _metrics_invariants(gw, reqs):
+    """Metrics consistency, asserted every tick: the registry must agree
+    with ground truth — the tokens_out counter with the tokens actually
+    emitted (request outputs AND the engine's own counter), the pool gauge
+    with the pool's accounting, rates with their domains, the energy
+    integrator with physics (non-negative, only growing)."""
+    eng = gw.engine
+    m = gw.metrics
+    emitted = sum(len(q.output) for q in reqs)
+    check(m.counter("tokens_out") == emitted,
+          f"tokens_out counter {m.counter('tokens_out')} != "
+          f"{emitted} tokens in request outputs")
+    check(m.counter("tokens_out") == eng.stats.tokens_out,
+          f"tokens_out counter {m.counter('tokens_out')} != engine stats "
+          f"{eng.stats.tokens_out}")
+    if eng.pool is not None:
+        check(m.gauges.get("pool_pages_free") == eng.pool.pages_free,
+              f"pool_pages_free gauge {m.gauges.get('pool_pages_free')} != "
+              f"pool accounting {eng.pool.pages_free}")
+    rate = m.gauges.get("spec_accept_rate", 0.0)
+    check(0.0 <= rate <= 1.0, f"spec_accept_rate {rate} outside [0, 1]")
+    frac = m.gauges.get("gated_bank_fraction", 1.0)
+    check(0.0 <= frac <= 1.0, f"gated_bank_fraction {frac} outside [0, 1]")
+    check(gw.energy.energy_j >= 0.0, "energy integral went negative")
+    check(m.gauges.get("energy_per_token_j", 0.0) >= 0.0,
+          "energy_per_token_j gauge negative")
+
+
 def _terminal_invariants(reqs):
     for req in reqs:
         check(req.state in TERMINAL,
@@ -208,6 +240,7 @@ def _drive(eng, gw, rng, ticks, reqs, prefixes, paged):
             _page_invariants(eng)
         if eng.adapters is not None:
             _adapter_invariants(eng)
+        _metrics_invariants(gw, reqs)
     return mid_prefill_cancels
 
 
@@ -244,6 +277,7 @@ class TestServingFuzz:
             gw.step()
             _page_invariants(eng)
             _adapter_invariants(eng)
+            _metrics_invariants(gw, reqs)
         _terminal_invariants(reqs)
         # after full drain only trie-owned pages may stay out of the pool
         trie = len({nd.page_id for nd in eng.prefix.nodes.values()})
