@@ -26,8 +26,9 @@ import dataclasses
 from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig, get_config
+from repro.obs.hardware import TPU_V5E
 
-HBM_PER_CHIP = 16 * 1024 ** 3
+HBM_PER_CHIP = TPU_V5E.hbm_bytes
 
 
 @dataclasses.dataclass

@@ -23,9 +23,9 @@ import json
 
 import numpy as np
 
-from benchmarks.common import (Report, drive_gateway, obs_summary,
-                               poisson_arrivals, write_bench_json,
-                               write_prom_artifact)
+from benchmarks.common import (Report, attribution_block, drive_gateway,
+                               obs_summary, poisson_arrivals,
+                               write_bench_json, write_prom_artifact)
 
 
 def run(quick: bool = False) -> Report:
@@ -116,6 +116,31 @@ def run(quick: bool = False) -> Report:
             r.row(f"{workload}/adapter_hit_rate", row["adapter_hit_rate"],
                   f"{row['adapter_loads']} loads, "
                   f"{row['adapter_evictions']} evictions")
+
+    # -- performance attribution: profiled multi-tenant leg (own engine so
+    # blocked dispatch + AOT captures never perturb the timed legs above) --
+    from repro.serving.obs import ProfileRegistry
+    prof = ProfileRegistry()
+    adapters = AdapterServing(model, registry,
+                              budget_bytes=per_adapter * (n_tenants // 2),
+                              max_resident=n_tenants // 2)
+    eng = ServeEngine(model, params, max_slots=2, max_len=128,
+                      prefill="batched", kv=PagedKV(page=16),
+                      adapters=adapters, profiler=prof)
+    gw = Gateway(eng)
+    for i in range(n_req // 2):
+        gw.submit(prompts[i],
+                  RequestSpec(max_new_tokens=max_new,
+                              adapter_id=f"tenant-{i % n_tenants}",
+                              deadline_ms=1.0 if i % 2 else None))
+    gw.run_until_drained()
+    attr = attribution_block(gw, prof)
+    results.setdefault("observability", {})["attribution"] = attr
+    r.row("obs/attr/host_overhead_frac",
+          attr["host_overhead"]["frac_of_tick"],
+          "tick_gap as fraction of tick wall (async-runtime headroom)")
+    r.row("obs/attr/slo_violations", attr["slo"]["violations_total"],
+          json.dumps(attr["slo"]["violations"]))
 
     mt = results["multi"]
     base = results["baseline"]

@@ -43,9 +43,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (Report, drive_gateway, obs_summary,
-                               poisson_arrivals, write_bench_json,
-                               write_prom_artifact)
+from benchmarks.common import (Report, attribution_block, drive_gateway,
+                               obs_summary, poisson_arrivals,
+                               write_bench_json, write_prom_artifact)
 
 
 def _summarize(gw, reqs, wall):
@@ -174,6 +174,31 @@ def _spec_scenario(model, params, spec_k, quick):
                 "accept_rate": round(st.spec_accept_rate, 4),
             }
     return best
+
+
+def _attribution_scenario(model, params, quick):
+    """Profiled leg: its own engine + gateway so the blocked dispatches and
+    one-off AOT cost captures the profiler needs never perturb the timed A/B
+    legs. Half the requests carry an unmeetable deadline so the per-phase
+    SLO violation attribution has something to attribute."""
+    from repro.serving import PagedKV, RequestSpec, ServeEngine
+    from repro.serving.gateway import Gateway
+    from repro.serving.obs import ProfileRegistry
+
+    n_req = 6 if quick else 10
+    prof = ProfileRegistry()
+    eng = ServeEngine(model, params, max_slots=2, max_len=128,
+                      prefill="batched", kv=PagedKV(page=16), profiler=prof)
+    gw = Gateway(eng)
+    rng = np.random.default_rng(7)
+    for i in range(n_req):
+        prompt = list(rng.integers(0, 1000, size=int(rng.integers(4, 12))))
+        gw.submit(prompt,
+                  RequestSpec(max_new_tokens=6 if quick else 10,
+                              priority=i % 2,
+                              deadline_ms=1.0 if i % 2 else None))
+    gw.run_until_drained()
+    return attribution_block(gw, prof)
 
 
 def run(quick: bool = False, kv_backend: str = "both",
@@ -328,6 +353,20 @@ def run(quick: bool = False, kv_backend: str = "both",
               "Fig-12 power model integrated over live tick state")
         r.row("obs/gated_bank_fraction", obs["gated_bank_fraction"],
               "time-averaged ROM banks gated off")
+    # -- performance attribution: profiled leg (own engine — blocked
+    # dispatch + AOT captures must not perturb the timed A/Bs above) --------
+    attr = _attribution_scenario(model, params, quick)
+    bench_out.setdefault("observability", {})["attribution"] = attr
+    if attr["functions"]:
+        top = attr["functions"][0]
+        r.row("obs/attr/top_fn_pct_of_roof", round(top["pct_of_roof"], 4),
+              f"{top['fn']} {top['bound']}-bound, "
+              f"{top['achieved_gflops']:.2f} GFLOP/s achieved")
+    r.row("obs/attr/host_overhead_frac",
+          attr["host_overhead"]["frac_of_tick"],
+          "tick_gap as fraction of tick wall (async-runtime headroom)")
+    r.row("obs/attr/slo_violations", attr["slo"]["violations_total"],
+          json.dumps(attr["slo"]["violations"]))
     if trace_out:
         tracer.dump(trace_out)
         print(f"[bench_serving] trace -> {trace_out} "

@@ -36,9 +36,27 @@ def obs_summary(gw) -> Dict[str, Any]:
         "tick_gap_ms": round(gap.percentile(50), 4) if gap is not None
         else round(st.tick_gap_ms_mean, 4),
         "tick_gap_ms_mean": round(st.tick_gap_ms_mean, 4),
+        "tick_host_overhead_frac": round(st.host_overhead_frac, 4),
         "jit_compiles": int(st.jit_compiles),
         **gw.energy.gauges(),
     }
+
+
+def attribution_block(gw, profiler) -> Dict[str, Any]:
+    """Merged performance-attribution block for BENCH_*.json observability:
+    per-compiled-function roofline placement, per-phase SLO breakdown,
+    recompile offenders and the %%-of-tick host overhead. Rows keep only the
+    report columns the trajectory tracks (full memory dicts and signatures
+    stay in the ``--profile-out`` path, not the committed artifact)."""
+    from repro.serving.obs import attribution_report
+    report = attribution_report(gw, profiler)
+    keep = ("fn", "signature", "calls", "compiles", "mean_ms", "flops", "bytes",
+            "flops_xla_ratio", "intensity", "bound", "pct_of_roof",
+            "achieved_gflops", "achieved_gbs", "peak_gflops", "peak_gbs")
+    report["functions"] = [
+        {k: (round(row[k], 4) if isinstance(row[k], float) else row[k])
+         for k in keep} for row in report["functions"]]
+    return report
 
 
 def write_prom_artifact(name: str, gw) -> Path:

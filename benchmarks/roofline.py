@@ -27,12 +27,17 @@ import sys
 from pathlib import Path
 from typing import Dict, List, Optional
 
+from repro.obs.hardware import TPU_V5E
+
 ARTIFACT_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
 OUT_MD = Path(__file__).resolve().parent.parent / "artifacts" / "roofline.md"
 
-PEAK_FLOPS = 197e12        # bf16 per chip
-HBM_BW = 819e9             # bytes/s per chip
-LINK_BW = 50e9             # bytes/s per ICI link (conservative: 1 link)
+# hardware peaks live in repro.obs.hardware (shared with the live serving
+# profiler and the analytic model); these aliases keep the module-level
+# names older callers import
+PEAK_FLOPS = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+LINK_BW = TPU_V5E.ici_link_bw
 
 
 def model_flops(rec: dict) -> float:

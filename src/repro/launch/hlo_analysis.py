@@ -394,3 +394,33 @@ def analyze(hlo: str) -> dict:
         "collective_wire_bytes": wire,
         "n_computations": len(comps),
     }
+
+
+def analyze_compiled(compiled) -> dict:
+    """Full cost picture of one compiled executable: the loop-weighted
+    structural pass over its HLO text, cross-checked against XLA's own
+    once-per-computation ``cost_analysis()`` (``xla_flops`` / ``xla_bytes``)
+    and ``memory_analysis()`` footprint. Every backend introspection call is
+    best-effort — missing APIs (CPU plugins, older jax) degrade to zeros so
+    the live profiler never takes the serving loop down with it."""
+    out = analyze(compiled.as_text())
+    cost: dict = {}
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):        # older jax: one dict/device
+            c = c[0] if c else {}
+        cost = dict(c or {})
+    except Exception:
+        pass
+    out["xla_flops"] = float(cost.get("flops", 0.0))
+    out["xla_bytes"] = float(cost.get("bytes accessed", 0.0))
+    mem = {}
+    try:
+        m = compiled.memory_analysis()
+        for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[key] = int(getattr(m, key, 0) or 0)
+    except Exception:
+        pass
+    out["memory"] = mem
+    return out

@@ -56,7 +56,7 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                  prefix_cache: bool = False, spec_k: int = 0,
                  n_adapters: int = 0, adapter_rank: int = 8,
                  adapter_budget_kb: Optional[float] = None,
-                 tracer=None) -> ServeEngine:
+                 tracer=None, profiler=None) -> ServeEngine:
     cfg = reduce_config(get_config(arch), preset)
     model = Model(cfg, mode="serve")
     params = model.init(jax.random.PRNGKey(seed))
@@ -92,7 +92,7 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                        prefill=prefill, prefill_chunk=prefill_chunk,
                        seed=seed, kv=backend, spec_decode=spec_k > 0,
                        prefix_cache=prefix_cache, adapters=adapters,
-                       tracer=tracer)
+                       tracer=tracer, profiler=profiler)
 
 
 def main(argv=None) -> int:
@@ -155,12 +155,22 @@ def main(argv=None) -> int:
                          "every --prom-every ticks and once at exit)")
     ap.add_argument("--prom-every", type=int, default=50,
                     help="tick window between --prom-out rewrites")
+    ap.add_argument("--profile-out", default=None,
+                    help="write the merged performance-attribution report "
+                         "(per-compiled-function roofline placement, "
+                         "per-phase SLO breakdown, recompile offenders, "
+                         "%%-of-tick host overhead) as JSON to this path; "
+                         "dispatches run blocked while profiling")
     args = ap.parse_args(argv)
 
     tracer = None
     if args.trace_out:
         from repro.serving.obs import Tracer
         tracer = Tracer(ring=args.trace_ring)
+    profiler = None
+    if args.profile_out:
+        from repro.serving.obs import ProfileRegistry
+        profiler = ProfileRegistry()
     eng = build_engine(args.arch, args.preset, slots=args.slots,
                        max_len=args.max_len, prefill=args.prefill,
                        prefill_chunk=args.prefill_chunk,
@@ -170,7 +180,7 @@ def main(argv=None) -> int:
                        n_adapters=args.adapters,
                        adapter_rank=args.adapter_rank,
                        adapter_budget_kb=args.adapter_budget_kb,
-                       tracer=tracer)
+                       tracer=tracer, profiler=profiler)
     gw = Gateway(eng)
     if args.prom_out:
         gw.prom_out = args.prom_out
@@ -212,6 +222,7 @@ def main(argv=None) -> int:
         "latency_p50_ms": round(float(np.median(lats)) * 1e3, 1),
         "phase_breakdown_ms": stats.phase_breakdown_ms(),
         "tick_gap_ms_mean": round(stats.tick_gap_ms_mean, 4),
+        "tick_host_overhead_frac": round(stats.host_overhead_frac, 4),
         "jit_compiles": stats.jit_compiles,
         "energy": gw.energy.gauges(),
         "metrics": gw.metrics_dict(),
@@ -231,6 +242,16 @@ def main(argv=None) -> int:
     if args.prom_out:
         from repro.serving.obs.prom import write_prom
         write_prom(args.prom_out, gw.metrics.to_prom_text())
+    if args.profile_out:
+        from repro.serving.obs import attribution_report
+        report = attribution_report(gw, profiler)
+        with open(args.profile_out, "w") as f:
+            json.dump(report, f, indent=2)
+        n_fns = len(report.get("functions", ()))
+        print(f"[serve] attribution → {args.profile_out} "
+              f"({n_fns} compiled functions, host overhead "
+              f"{report['host_overhead']['frac_of_tick']:.1%} of tick)",
+              file=sys.stderr)
     print("[serve]", json.dumps(out))
     return 0
 

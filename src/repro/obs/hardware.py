@@ -1,0 +1,86 @@
+"""Hardware peak specs — the single source of truth for roofline math.
+
+Factored out of ``benchmarks/roofline.py`` (which previously hardcoded the
+TPU v5e peaks inline) so the offline roofline report, the live serving
+profiler (``repro.serving.obs.profile``) and the analytic memory model
+(``benchmarks/analytic_model``) all read the same numbers.
+
+Two specs ship:
+
+* ``TPU_V5E`` — the paper's deployment target: 197 TFLOP/s bf16, 819 GB/s
+  HBM, ~50 GB/s per ICI link (conservative single-link figure), 16 GiB HBM.
+* ``CPU_HOST`` — an order-of-magnitude host fallback so the profiler
+  degrades gracefully when serving runs under ``JAX_PLATFORMS=cpu`` (CI,
+  dev boxes). Absolute efficiencies against it are directional only; the
+  memory-vs-compute *classification* is still meaningful because it depends
+  on operational intensity relative to the ridge point.
+
+``detect()`` picks by the active jax backend and never raises — off-TPU it
+always lands on ``CPU_HOST``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Peak rates for one chip (or one host, for the CPU fallback)."""
+
+    name: str
+    peak_flops: float       # FLOP/s (bf16 on TPU)
+    hbm_bw: float           # bytes/s main-memory bandwidth
+    ici_link_bw: float      # bytes/s per interconnect link
+    hbm_bytes: int          # main-memory capacity, bytes
+
+    @property
+    def ridge_intensity(self) -> float:
+        """FLOP/byte at the roofline ridge: below it a kernel is
+        bandwidth-limited, above it compute-limited."""
+        return self.peak_flops / self.hbm_bw
+
+    def roof_flops(self, intensity: float) -> float:
+        """Attainable FLOP/s at a given operational intensity."""
+        if intensity <= 0.0:
+            return self.hbm_bw  # degenerate: pure-memory op, 1 flop/byte roof
+        return min(self.peak_flops, intensity * self.hbm_bw)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "peak_flops": self.peak_flops,
+            "hbm_bw": self.hbm_bw,
+            "ici_link_bw": self.ici_link_bw,
+            "hbm_bytes": self.hbm_bytes,
+            "ridge_intensity": self.ridge_intensity,
+        }
+
+
+#: TPU v5e, per chip. The numbers roofline.py shipped with since PR 0.
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16 * 1024 ** 3,
+)
+
+#: Rough single-socket host: ~100 GFLOP/s sustained f32, ~20 GB/s DRAM.
+#: Deliberately conservative round numbers — a fallback, not a claim.
+CPU_HOST = HardwareSpec(
+    name="cpu-host",
+    peak_flops=100e9,
+    hbm_bw=20e9,
+    ici_link_bw=1e9,
+    hbm_bytes=8 * 1024 ** 3,
+)
+
+
+def detect() -> HardwareSpec:
+    """Spec for the active jax backend; CPU_HOST whenever not on TPU."""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        backend = "cpu"
+    return TPU_V5E if backend == "tpu" else CPU_HOST

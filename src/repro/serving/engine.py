@@ -153,6 +153,9 @@ class Request:
     t_last: float = 0.0
     t_done: float = 0.0
     n_preempts: int = 0
+    stall_s: float = 0.0            # wall time this slot's decode sat blocked
+                                    # behind another slot's prefill (SLO
+                                    # attribution carves it out of decode)
     prefix_hit_tokens: int = 0      # prompt tokens served from the prefix cache
     prefill_ticks: int = 0          # decode ticks spent consuming the prompt
     prefill_chunks: int = 0         # chunked-prefill segments run for this req
@@ -227,6 +230,7 @@ class EngineStats:
     phase_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
     tick_gap_ms_sum: float = 0.0  # host time between device dispatches
     tick_gaps: int = 0
+    tick_wall_ms_sum: float = 0.0  # total tick() wall time (gap denominator)
     jit_compiles: int = 0         # jit cache growth events (CompileWatch)
 
     @property
@@ -245,6 +249,14 @@ class EngineStats:
         signal the ROADMAP's async disaggregated runtime will shrink."""
         return self.tick_gap_ms_sum / self.tick_gaps if self.tick_gaps \
             else 0.0
+
+    @property
+    def host_overhead_frac(self) -> float:
+        """Host-side dispatch gaps as a fraction of total tick wall time —
+        the %-of-tick the device sits idle on host bookkeeping. This is the
+        single number the async disaggregated runtime has to drive to ~0."""
+        return self.tick_gap_ms_sum / self.tick_wall_ms_sum \
+            if self.tick_wall_ms_sum else 0.0
 
     def phase_breakdown_ms(self) -> Dict[str, float]:
         """Mean self-time per phase per tick (ms)."""
@@ -288,7 +300,7 @@ class ServeEngine:
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
                  spec_decode: bool = False, spec_ngram: int = 3,
                  scheduler=None, adapters=None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None, profiler=None):
         assert model.mode in ("serve", "qlora")
         assert prefill_chunk is None or prefill_chunk >= 1, \
             "prefill_chunk must be >= 1 tokens (or None for monolithic prefill)"
@@ -364,6 +376,11 @@ class ServeEngine:
         # a null object that allocates nothing per span); phase self-times
         # and the tick-gap clock accumulate in stats either way.
         self.trace = tracer if tracer is not None else NULL_TRACER
+        # roofline profiler (obs/profile.ProfileRegistry, opt-in): every
+        # _dispatch is blocked-and-timed per (fn, shape-signature) and each
+        # compiled executable's cost/memory analysis is captured once —
+        # None keeps dispatches async and adds zero per-call work.
+        self.profiler = profiler
         self._tpid = (self.trace.register(f"engine[{self.kv.name}]")
                       if self.trace.enabled else 1)
         self._phase_self_total = 0.0
@@ -437,6 +454,14 @@ class ServeEngine:
             self.stats.tick_gaps += 1
             self.trace.counter("tick_gap_ms", gap, pid=self._tpid)
         out = fn(*args, **kwargs)
+        if self.profiler is not None:
+            # profiling blocks the dispatch so the measured wall is real
+            # device time per compiled executable, not async enqueue time
+            out = jax.block_until_ready(out)
+            self.profiler.observe_call(
+                getattr(fn, "name", getattr(fn, "__name__", "fn")),
+                fn, args, kwargs, time.perf_counter() - t,
+                compiled=getattr(fn, "last_compiled", False))
         self._t_dev_end = time.perf_counter()
         return out
 
@@ -841,13 +866,19 @@ class ServeEngine:
                     {"tokens": jnp.asarray(toks)}, self.max_len, **kwargs)
             self.kv.write_prefill(slot, start, sub_cache, n)
             self.pos[slot] = start + n
-            if any(self._is_decoding(i) for i in range(self.max_slots)
-                   if i != slot):
+            stalled = [i for i in range(self.max_slots)
+                       if i != slot and self._is_decoding(i)]
+            if stalled:
                 # charge real prefill compute, not just async dispatch time —
                 # without the sync, the stall gauge under-reports on async
                 # backends and the monolithic-vs-chunked A/B inverts
                 jax.block_until_ready(sub_cache)
-                self.stats.decode_stall_s += time.time() - t0
+                dt = time.time() - t0
+                self.stats.decode_stall_s += dt
+                # each blocked decode slot experienced the full stall; SLO
+                # attribution carves it out of that request's decode time
+                for i in stalled:
+                    self.slot_req[i].stall_s += dt
 
     def _advance_prefill(self) -> int:
         """Run the prefill chunks the scheduler planned for this tick.
@@ -1177,9 +1208,11 @@ class ServeEngine:
         self._last_verify_width = 1
         with self.trace.span("tick", pid=self._tpid):
             self._tick_impl()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.tick_wall_ms_sum += wall_ms
         if self.on_tick is not None:
             self.on_tick({
-                "wall_ms": (time.perf_counter() - t0) * 1e3,
+                "wall_ms": wall_ms,
                 "busy_ms": self._busy_ms() - busy0,
                 "gap_ms": self._tick_gap_ms,
                 "tokens": self.stats.tokens_out - tokens0,

@@ -24,6 +24,8 @@ from repro.serving.api import RequestSpec, SamplingParams, coerce_submit
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.gateway.metrics import Metrics
 from repro.serving.obs.energy import EnergyMonitor
+from repro.serving.obs.slo import PHASES as SLO_PHASES
+from repro.serving.obs.slo import SLOAttribution
 
 TokenCallback = Callable[[Request, int], None]
 
@@ -37,6 +39,12 @@ class Gateway:
                  energy: Optional[EnergyMonitor] = None):
         self.engine = engine
         self.metrics = metrics if metrics is not None else Metrics()
+        # SLO attribution: a per-request wall-time decomposition (queue /
+        # prefill / decode / stall / preempted) driven by the same hooks;
+        # on close the components feed per-phase histograms and, for
+        # deadline violators, a slo_violation__<phase> counter naming the
+        # dominant phase
+        self.slo = SLOAttribution()
         # energy observability: per-tick summaries drive the Fig-12 power
         # model from live engine state (device-busy fraction + SRAM
         # residency) → chip_power_w / gated_bank_fraction / energy_per_token_j
@@ -75,6 +83,7 @@ class Gateway:
         if req.state == "rejected":
             self.metrics.inc("requests_rejected")
         else:
+            self.slo.observe_submit(req)
             if spec.adapter_id is not None:
                 # accepted ⇒ adapter_id is registered: per-tenant counter
                 # cardinality stays bounded by the registry, not by clients
@@ -85,11 +94,25 @@ class Gateway:
         return req
 
     def cancel(self, uid: int) -> bool:
+        req = self._find_req(uid)
         ok = self.engine.cancel(uid)
         if ok:
             self.metrics.inc("requests_cancelled")
             self._stream_cbs.pop(uid, None)
+            if req is not None:
+                self._slo_close(req, violated=False)
         return ok
+
+    def _find_req(self, uid: int) -> Optional[Request]:
+        """The live Request for ``uid`` (queue or slot), before cancel
+        detaches it from both."""
+        for r in self.engine.slot_req:
+            if r is not None and r.uid == uid:
+                return r
+        peek = getattr(self.engine.scheduler, "peek", None)
+        if peek is not None:
+            return peek(lambda r: r.uid == uid)
+        return None
 
     def stream(self, req: Request, max_ticks: int = 100_000
                ) -> Iterator[int]:
@@ -121,6 +144,7 @@ class Gateway:
 
     # -- engine event hooks ----------------------------------------------------
     def _on_token(self, req: Request, tok: int, now: float) -> None:
+        self.slo.observe_token(req, now)
         self.metrics.inc("tokens_out")
         if len(req.output) == 1:
             self.metrics.observe("ttft_ms", (now - req.t_submit) * 1e3)
@@ -135,22 +159,45 @@ class Gateway:
     def _on_done(self, req: Request) -> None:
         self.metrics.inc("requests_completed")
         self.metrics.observe("e2e_ms", req.latency_s * 1e3)
-        if req.deadline_s is not None and req.t_done > req.deadline_s:
+        violated = (req.deadline_s is not None
+                    and req.t_done > req.deadline_s)
+        if violated:
             self.metrics.inc("slo_misses")
+        self._slo_close(req, violated=violated)
         if req.prefix_hit_tokens:
             self.metrics.inc("prefix_hit_tokens", req.prefix_hit_tokens)
             self.metrics.inc("prefill_ticks_saved", req.prefix_hit_tokens)
         self._stream_cbs.pop(req.uid, None)
 
     def _on_admit(self, req: Request, slot: int) -> None:
+        self.slo.observe_admit(req)
         self.metrics.inc("admissions")
 
     def _on_preempt(self, req: Request) -> None:
+        self.slo.observe_preempt(req)
         self.metrics.inc("preemptions")
 
     def _on_expire(self, req: Request) -> None:
         self.metrics.inc("requests_expired")
+        # an expiry IS an SLO violation — the deadline passed while queued
+        self._slo_close(req, violated=True)
         self._stream_cbs.pop(req.uid, None)
+
+    def _slo_close(self, req: Request, violated: bool) -> None:
+        """Freeze the request's attribution track, feed the per-phase
+        latency histograms and — when the request violated its SLO — blame
+        the dominant phase via an attributed counter."""
+        comp = self.slo.close(req)
+        if comp is None:
+            return
+        for phase in SLO_PHASES:
+            self.metrics.observe(f"slo_phase_ms__{phase}",
+                                 comp.get(phase, 0.0) * 1e3)
+        if violated:
+            self.metrics.inc("slo_violations_total")
+            worst = max(SLO_PHASES, key=lambda p: comp.get(p, 0.0))
+            self.metrics.inc(f"slo_violation__{worst}")
+            self.slo.note_violation(worst)
 
     def _on_tick(self, summary: Dict) -> None:
         """Engine per-tick summary → tick-gap histogram + energy model.
@@ -238,6 +285,10 @@ class Gateway:
         # cache growth (recompile stalls), both from the engine's obs layer
         self.metrics.set_gauge("tick_gap_ms_mean",
                                round(eng.stats.tick_gap_ms_mean, 4))
+        # the same bubble as a fraction of total tick wall — the %-of-tick
+        # host overhead the async-runtime roadmap item must drive to ~0
+        self.metrics.set_gauge("tick_host_overhead_frac",
+                               round(eng.stats.host_overhead_frac, 4))
         self.metrics.set_gauge("jit_recompiles", eng.stats.jit_compiles)
         hol = getattr(eng.scheduler, "hol_bypasses", None)
         if hol is not None:
@@ -249,3 +300,27 @@ class Gateway:
     def metrics_dict(self) -> Dict:
         self._sample_gauges()
         return self.metrics.to_dict()
+
+    def slo_report(self) -> Dict:
+        """Per-phase SLO breakdown: closed-request latency percentiles per
+        attribution phase plus the attributed violation counters — the
+        "why did requests miss" half of the bench attribution block."""
+        phases: Dict[str, Dict] = {}
+        for phase in SLO_PHASES:
+            h = self.metrics.histograms.get(f"slo_phase_ms__{phase}")
+            if h is None:
+                continue
+            phases[phase] = {"p50_ms": round(h.percentile(50), 4),
+                             "p95_ms": round(h.percentile(95), 4),
+                             "mean_ms": round(h.mean, 4)}
+        violations = {
+            name.split("__", 1)[1]: int(v)
+            for name, v in self.metrics.counters.items()
+            if name.startswith("slo_violation__")}
+        return {
+            "phases": phases,
+            "violations": violations,
+            "violations_total": int(self.metrics.counter(
+                "slo_violations_total")),
+            "requests_closed": self.slo.closed,
+        }

@@ -1,0 +1,248 @@
+"""Live roofline profiler for the serving loop's compiled functions.
+
+A `ProfileRegistry` rides the engine's ``_dispatch`` probe: every device
+dispatch of a jitted serving callable (fresh/resume prefill per pow2
+bucket, the decode tick, ``verify_step`` per spec width, the samplers) is
+timed to completion (``block_until_ready``) and keyed by
+``(function, argument-shape signature)`` — one record per compiled
+executable. On a record's first dispatch the registry AOT-lowers the same
+call (``fn.lower(...).compile()``) and runs the full cost capture:
+
+  * the **loop-weighted structural HLO pass** (`launch.hlo_analysis`) —
+    the FLOP/byte source of truth (``cost_analysis()`` counts a
+    scan-over-layers body once; the structural pass multiplies by trip
+    count);
+  * XLA's own ``cost_analysis()`` / ``memory_analysis()`` as the
+    cross-check columns (``xla_flops`` / ``xla_bytes`` / peak temp bytes).
+
+Combining captured FLOPs/bytes with measured mean wall time yields achieved
+FLOP/s and GB/s and a roofline placement against `repro.obs.hardware`
+peaks: operational intensity vs the ridge point classifies each function as
+memory- or compute-bound, and ``pct_of_roof`` says how far it sits under
+the attainable roof at that intensity. Calls that triggered a jit compile
+are excluded from the wall-time mean (tracing+XLA time is not kernel time)
+but counted per record — ``report()`` ranks the top recompile offenders.
+
+Everything is opt-in (``ServeEngine(profiler=...)``) and fails soft: on
+backends without the introspection APIs a record degrades to measured wall
+time with ``bound="unknown"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.obs.hardware import HardwareSpec, detect
+from repro.serving.obs.tracer import CompileWatch
+
+
+def shape_sig(args) -> str:
+    """Canonical argument-shape signature (shared with CompileWatch)."""
+    return CompileWatch._shapes(args)
+
+
+@dataclasses.dataclass
+class FnProfile:
+    """One compiled executable: (function name, shape signature)."""
+    name: str
+    signature: str
+    calls: int = 0              # dispatches timed (compile calls excluded)
+    compiles: int = 0           # jit cache growth events for this key
+    wall_s: float = 0.0         # summed blocked wall time of timed calls
+    analyzed: bool = False      # AOT capture attempted (once per key)
+    capture_error: Optional[str] = None
+    flops: float = 0.0          # loop-weighted structural FLOPs
+    bytes: float = 0.0          # loop-weighted structural HBM-traffic proxy
+    xla_flops: float = 0.0      # cost_analysis() cross-check (once-counted)
+    xla_bytes: float = 0.0
+    memory: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def mean_s(self) -> float:
+        return self.wall_s / self.calls if self.calls else 0.0
+
+    @property
+    def flops_xla_ratio(self) -> float:
+        """structural / XLA FLOPs — ≈ the scan trip count for loop-heavy
+        graphs, ≈ 1.0 for loop-free ones (the cross-check agreement band)."""
+        return self.flops / self.xla_flops if self.xla_flops else 0.0
+
+
+def classify(flops: float, nbytes: float, mean_s: float,
+             hw: HardwareSpec) -> Dict[str, Any]:
+    """Roofline placement for one (flops, bytes, measured-time) triple.
+
+    Pure math on synthetic or captured numbers — no jax. ``bound`` is set
+    by operational intensity vs the ridge point; ``pct_of_roof`` compares
+    achieved FLOP/s against the attainable roof at that intensity (for
+    memory-bound kernels that equals achieved-vs-peak bandwidth).
+    """
+    if flops <= 0.0 and nbytes <= 0.0:
+        return {"intensity": 0.0, "bound": "unknown", "pct_of_roof": 0.0,
+                "achieved_gflops": 0.0, "achieved_gbs": 0.0,
+                "peak_gflops": hw.peak_flops / 1e9, "peak_gbs": hw.hbm_bw / 1e9}
+    intensity = flops / nbytes if nbytes else float("inf")
+    bound = "memory" if intensity < hw.ridge_intensity else "compute"
+    achieved_fs = flops / mean_s if mean_s else 0.0
+    achieved_bs = nbytes / mean_s if mean_s else 0.0
+    if flops > 0.0:
+        roof = hw.roof_flops(intensity)
+        pct = achieved_fs / roof if roof else 0.0
+    else:   # pure data movement: roof is the bandwidth peak
+        pct = achieved_bs / hw.hbm_bw
+    return {
+        "intensity": intensity if intensity != float("inf") else 0.0,
+        "bound": bound,
+        "pct_of_roof": pct,
+        "achieved_gflops": achieved_fs / 1e9,
+        "achieved_gbs": achieved_bs / 1e9,
+        "peak_gflops": hw.peak_flops / 1e9,
+        "peak_gbs": hw.hbm_bw / 1e9,
+    }
+
+
+class ProfileRegistry:
+    """Per-compiled-function cost/time registry fed by ``_dispatch``."""
+
+    def __init__(self, hw: Optional[HardwareSpec] = None,
+                 capture: bool = True):
+        self.hw = hw if hw is not None else detect()
+        self.capture = capture      # False: wall-time only (skip AOT lowers)
+        self.records: Dict[Tuple[str, str], FnProfile] = {}
+
+    # -- ingestion (engine hooks) -------------------------------------------
+    def observe_call(self, name: str, fn, args, kwargs, dt: float,
+                     compiled: bool = False) -> None:
+        """One blocked dispatch of ``fn`` (a CompileWatch or jit callable).
+        ``compiled=True`` marks a call that grew the jit cache: its wall
+        time is compile+trace, so it bumps the offender counter instead of
+        the timing mean. First sight of a key runs the AOT cost capture."""
+        rec = self._rec(name, shape_sig(args))
+        if compiled:
+            rec.compiles += 1
+        else:
+            rec.calls += 1
+            rec.wall_s += dt
+        if self.capture and not rec.analyzed:
+            self._capture(rec, fn, args, kwargs)
+
+    def _rec(self, name: str, sig: str) -> FnProfile:
+        key = (name, sig)
+        rec = self.records.get(key)
+        if rec is None:
+            rec = self.records[key] = FnProfile(name=name, signature=sig)
+        return rec
+
+    def _capture(self, rec: FnProfile, fn, args, kwargs) -> None:
+        """AOT-lower the call and harvest cost/memory/structural stats.
+        Runs once per record; any failure is recorded and never retried."""
+        rec.analyzed = True
+        from repro.launch import hlo_analysis
+        try:
+            inner = getattr(fn, "_fn", fn)      # unwrap CompileWatch
+            compiled = inner.lower(*args, **kwargs).compile()
+            info = hlo_analysis.analyze_compiled(compiled)
+        except Exception as e:                  # pragma: no cover - backend-dep
+            rec.capture_error = repr(e)
+            return
+        rec.flops = float(info.get("flops", 0.0))
+        rec.bytes = float(info.get("bytes", 0.0))
+        rec.xla_flops = float(info.get("xla_flops", 0.0))
+        rec.xla_bytes = float(info.get("xla_bytes", 0.0))
+        rec.memory = dict(info.get("memory", {}))
+
+    # -- reporting ----------------------------------------------------------
+    def function_rows(self) -> List[Dict[str, Any]]:
+        """One roofline row per compiled executable, heaviest first."""
+        rows = []
+        for rec in self.records.values():
+            roof = classify(rec.flops, rec.bytes, rec.mean_s, self.hw)
+            rows.append({
+                "fn": rec.name,
+                "signature": rec.signature,
+                "calls": rec.calls,
+                "compiles": rec.compiles,
+                "mean_ms": rec.mean_s * 1e3,
+                "total_s": rec.wall_s,
+                "flops": rec.flops,
+                "bytes": rec.bytes,
+                "xla_flops": rec.xla_flops,
+                "xla_bytes": rec.xla_bytes,
+                "flops_xla_ratio": rec.flops_xla_ratio,
+                "memory": rec.memory,
+                "capture_error": rec.capture_error,
+                **roof,
+            })
+        rows.sort(key=lambda r: r["total_s"], reverse=True)
+        return rows
+
+    def recompile_offenders(self, top: int = 8) -> List[Dict[str, Any]]:
+        offenders = [{"fn": r.name, "signature": r.signature,
+                      "compiles": r.compiles}
+                     for r in self.records.values() if r.compiles]
+        offenders.sort(key=lambda r: r["compiles"], reverse=True)
+        return offenders[:top]
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "hardware": self.hw.to_dict(),
+            "functions": self.function_rows(),
+            "recompile_offenders": self.recompile_offenders(),
+        }
+
+
+def attribution_report(gateway, profiler: Optional[ProfileRegistry] = None
+                       ) -> Dict[str, Any]:
+    """The merged performance-attribution report serve.py ``--profile-out``
+    and both benches emit: per-compiled-function roofline table + per-phase
+    SLO breakdown + top recompile offenders + host-overhead context for
+    ``tick_gap_ms`` (the %-of-tick number the async runtime must beat)."""
+    stats = gateway.engine.stats
+    report: Dict[str, Any] = {
+        "slo": gateway.slo_report(),
+        "host_overhead": {
+            "tick_gap_ms_mean": round(stats.tick_gap_ms_mean, 4),
+            "frac_of_tick": round(stats.host_overhead_frac, 4),
+        },
+    }
+    if profiler is None:
+        profiler = getattr(gateway.engine, "profiler", None)
+    if profiler is not None:
+        report.update(profiler.report())
+    return report
+
+
+#: roofline-row keys every report row must carry (CI schema validation)
+_ROW_KEYS = ("fn", "signature", "calls", "compiles", "mean_ms", "flops",
+             "bytes", "intensity", "bound", "pct_of_roof",
+             "achieved_gflops", "peak_gflops", "achieved_gbs", "peak_gbs")
+
+
+def validate_report(report: Dict[str, Any]) -> Dict[str, int]:
+    """Schema check for a ``ProfileRegistry.report()`` (or the merged bench
+    attribution block that embeds one). Raises AssertionError on the first
+    violation; returns summary counts. Used by tests and the CI smoke."""
+    assert isinstance(report, dict), "report must be a dict"
+    hw = report.get("hardware")
+    assert isinstance(hw, dict) and hw.get("peak_flops", 0) > 0, \
+        f"bad hardware spec: {hw!r}"
+    fns = report.get("functions")
+    assert isinstance(fns, list), "functions must be a list"
+    for row in fns:
+        for key in _ROW_KEYS:
+            assert key in row, f"roofline row missing {key!r}: {row}"
+        assert row["bound"] in ("memory", "compute", "unknown"), \
+            f"bad bound {row['bound']!r}"
+        assert row["pct_of_roof"] >= 0.0
+    for off in report.get("recompile_offenders", ()):
+        assert off.get("compiles", 0) >= 1, f"non-offender listed: {off}"
+    slo = report.get("slo")
+    if slo is not None:     # merged attribution block: SLO section schema
+        assert isinstance(slo.get("phases"), dict), f"bad slo.phases: {slo}"
+        for phase, row in slo["phases"].items():
+            assert "p95_ms" in row, f"slo phase {phase} missing p95_ms"
+        assert isinstance(slo.get("violations"), dict)
+        assert slo.get("violations_total", 0) >= \
+            sum(slo["violations"].values()) or not slo["violations"]
+    return {"functions": len(fns),
+            "offenders": len(report.get("recompile_offenders", ()))}

@@ -1,0 +1,160 @@
+"""Per-request SLO latency attribution: wall time decomposed by phase.
+
+Every request the gateway tracks gets a continuous-time state machine fed
+by the engine's lifecycle hooks:
+
+    queue_wait : submit → first admission (scheduler queue time)
+    prefill    : admission → first emitted token (prompt consumption:
+                 batched/chunked prefill ticks or token-mode streaming)
+    decode     : steady-state emission (first token → terminal)
+    decode_stall : carved out of ``decode`` — wall time this request's
+                 decode batch sat blocked behind another slot's prefill
+                 (the engine charges ``Request.stall_s`` per stalled slot)
+    preempted  : preemption → the next emitted token after re-admission
+                 (requeue wait + the replay prefill both count as
+                 preemption cost, not as queue/prefill time)
+
+Transitions telescope — each one closes the previous interval at a single
+timestamp — so the components **sum exactly to the request's wall time**
+(the fuzz harness asserts this every tick, for live and terminal requests
+alike). Closing a request (done/cancelled/expired) freezes the
+decomposition; the gateway then feeds per-phase histograms
+(``slo_phase_ms__<phase>`` → p95 breakdown in the registry/Prom text) and,
+for SLO-violating requests, increments ``slo_violation__<phase>`` against
+the dominant phase — "why did this request miss" as a counter.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, Dict, Optional, Tuple
+
+#: attribution components, in report order
+PHASES = ("queue_wait", "prefill", "decode", "decode_stall", "preempted")
+
+#: request states that freeze a track
+_TERMINAL = ("done", "cancelled", "expired", "rejected")
+
+
+class _Track:
+    __slots__ = ("state", "t0", "t_last", "acc", "done")
+
+    def __init__(self, t_submit: float):
+        self.state = "queue_wait"
+        self.t0 = t_submit
+        self.t_last = t_submit
+        self.acc = {p: 0.0 for p in PHASES}
+        self.done = False
+
+
+class SLOAttribution:
+    """Lifecycle-driven per-request decomposition registry.
+
+    All ``observe_*`` hooks are no-ops for unknown uids (requests submitted
+    around the gateway) and for frozen tracks, so the gateway can wire them
+    unconditionally. Closed tracks are retained (ring-capped) so terminal
+    requests stay queryable for invariant checks and reports.
+    """
+
+    def __init__(self, keep: int = 4096):
+        self._tracks: "collections.OrderedDict[int, _Track]" = \
+            collections.OrderedDict()
+        self._keep = keep
+        self.closed = 0
+        self.violations: Dict[str, int] = {}
+
+    # -- lifecycle hooks ----------------------------------------------------
+    def observe_submit(self, req) -> None:
+        if req.uid in self._tracks:
+            return
+        # Request timestamps use 0.0 = "not yet set" (engine convention)
+        self._tracks[req.uid] = _Track(req.t_submit or time.time())
+        # bound memory on long soaks: evict oldest *frozen* tracks only
+        while len(self._tracks) > self._keep:
+            uid, tr = next(iter(self._tracks.items()))
+            if not tr.done:
+                break
+            del self._tracks[uid]
+
+    def observe_admit(self, req) -> None:
+        tr = self._tracks.get(req.uid)
+        if tr is None or tr.done:
+            return
+        if tr.state == "queue_wait":
+            # re-admission after preempt stays in "preempted" (replay
+            # prefill is preemption cost); only the first admission ends
+            # the queue-wait interval
+            self._advance(tr, "prefill", req.t_admit or time.time())
+
+    def observe_token(self, req, now: Optional[float] = None) -> None:
+        tr = self._tracks.get(req.uid)
+        if tr is None or tr.done:
+            return
+        if tr.state != "decode":
+            self._advance(tr, "decode", now if now is not None else time.time())
+
+    def observe_preempt(self, req, now: Optional[float] = None) -> None:
+        tr = self._tracks.get(req.uid)
+        if tr is None or tr.done:
+            return
+        self._advance(tr, "preempted", now if now is not None else time.time())
+
+    def close(self, req, now: Optional[float] = None) -> Optional[Dict[str, float]]:
+        """Freeze the track at the request's terminal timestamp and return
+        the final components (seconds). Idempotent."""
+        tr = self._tracks.get(req.uid)
+        if tr is None:
+            return None
+        if not tr.done:
+            if now is None:
+                now = req.t_done or time.time()
+            self._advance(tr, None, now)
+            self._carve_stall(tr.acc, req)
+            tr.done = True
+            self.closed += 1
+        return dict(tr.acc)
+
+    # -- queries ------------------------------------------------------------
+    def snapshot(self, req, now: Optional[float] = None
+                 ) -> Optional[Tuple[Dict[str, float], float]]:
+        """(components, wall_s) — live view for in-flight requests, frozen
+        view for terminal ones. Components always sum to wall_s."""
+        tr = self._tracks.get(req.uid)
+        if tr is None:
+            return None
+        if not tr.done and req.state in _TERMINAL:
+            self.close(req)     # terminal transition the gateway missed
+        if tr.done:
+            return dict(tr.acc), tr.t_last - tr.t0
+        if now is None:
+            now = time.time()
+        acc = dict(tr.acc)
+        dt = max(now - tr.t_last, 0.0)
+        acc[tr.state] += dt
+        self._carve_stall(acc, req)
+        return acc, (tr.t_last - tr.t0) + dt
+
+    def note_violation(self, phase: str) -> None:
+        self.violations[phase] = self.violations.get(phase, 0) + 1
+
+    # -- internals ----------------------------------------------------------
+    @staticmethod
+    def _advance(tr: _Track, new_state: Optional[str], now: float) -> None:
+        """Close the open interval at ``now`` (clock-skew clipped) and move
+        to ``new_state``. Accumulation telescopes: Σ components is always
+        exactly ``t_last - t0``."""
+        dt = max(now - tr.t_last, 0.0)
+        tr.acc[tr.state] += dt
+        tr.t_last += dt
+        if new_state is not None:
+            tr.state = new_state
+
+    @staticmethod
+    def _carve_stall(acc: Dict[str, float], req) -> None:
+        """Split the request's measured decode-stall wall time out of its
+        decode interval (never out of other phases — the clamp keeps the
+        sum-to-wall identity exact even if stall accounting overlaps a
+        prefill-state tick)."""
+        stall = min(float(getattr(req, "stall_s", 0.0)), acc["decode"])
+        acc["decode"] -= stall
+        acc["decode_stall"] += stall

@@ -231,6 +231,10 @@ class CompileWatch:
         self.on_compile = on_compile
         self.pid = pid
         self.compiles = 0
+        #: whether the most recent call grew the jit cache — the engine's
+        #: dispatch probe reads this so the profiler can keep compile+trace
+        #: wall time out of the per-executable timing mean
+        self.last_compiled = False
         self._probe = getattr(fn, "_cache_size", None)
         self._seen_sigs: Optional[set] = None if self._probe else set()
 
@@ -262,6 +266,7 @@ class CompileWatch:
             compiled = sig not in self._seen_sigs
             self._seen_sigs.add(sig)
             out = self._fn(*args, **kwargs)
+        self.last_compiled = compiled
         if compiled:
             self.compiles += 1
             shapes = self._shapes(args)

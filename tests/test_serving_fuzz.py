@@ -20,7 +20,11 @@ on *every tick*:
   * **metrics agree with ground truth**: the gateway's tokens_out counter
     equals the tokens actually emitted, the page-occupancy gauge equals the
     pool's own accounting, accept-rate / gated-bank-fraction stay in
-    [0, 1] and the energy integral never decreases.
+    [0, 1] and the energy integral never decreases;
+  * **SLO attribution is a ledger**: every tracked request — live,
+    preempted, cancelled mid-prefill, expired or done — has non-negative
+    phase components (queue_wait/prefill/decode/decode_stall/preempted)
+    that sum to its wall time, every tick.
 
 The stream is generated from ``FUZZ_SEED`` (env, default 0): the fast lane
 pins it, a non-blocking CI job rotates it per run. Every assertion message
@@ -28,6 +32,7 @@ carries the seed, so a red run reproduces with
 ``FUZZ_SEED=<n> pytest tests/test_serving_fuzz.py``.
 """
 import os
+import time
 
 import jax
 import numpy as np
@@ -162,6 +167,29 @@ def _metrics_invariants(gw, reqs):
           "energy_per_token_j gauge negative")
 
 
+def _slo_invariants(gw, reqs):
+    """Attribution ledger, asserted every tick: for every tracked request —
+    in flight or terminal (done / cancelled / expired / preempted-and-back)
+    — the phase components are non-negative and sum exactly to the
+    request's wall time (float-addition tolerance only)."""
+    now = time.time()
+    for req in reqs:
+        snap = gw.slo.snapshot(req, now=now)
+        if snap is None:                 # rejected at submit: never tracked
+            check(req.state == "rejected",
+                  f"request {req.uid} in state {req.state!r} has no SLO track")
+            continue
+        comp, wall = snap
+        for phase, v in comp.items():
+            check(v >= 0.0,
+                  f"SLO component {phase} negative ({v}) for request "
+                  f"{req.uid} in state {req.state!r}")
+        total = sum(comp.values())
+        check(abs(total - wall) < 1e-6 + 1e-9 * abs(wall),
+              f"SLO components sum {total} != wall {wall} for request "
+              f"{req.uid} in state {req.state!r} ({comp})")
+
+
 def _terminal_invariants(reqs):
     for req in reqs:
         check(req.state in TERMINAL,
@@ -241,6 +269,7 @@ def _drive(eng, gw, rng, ticks, reqs, prefixes, paged):
         if eng.adapters is not None:
             _adapter_invariants(eng)
         _metrics_invariants(gw, reqs)
+        _slo_invariants(gw, reqs)
     return mid_prefill_cancels
 
 
@@ -278,7 +307,9 @@ class TestServingFuzz:
             _page_invariants(eng)
             _adapter_invariants(eng)
             _metrics_invariants(gw, reqs)
+            _slo_invariants(gw, reqs)
         _terminal_invariants(reqs)
+        _slo_invariants(gw, reqs)
         # after full drain only trie-owned pages may stay out of the pool
         trie = len({nd.page_id for nd in eng.prefix.nodes.values()})
         check(eng.pool.pages_free + trie == N_PAGES,
@@ -305,4 +336,6 @@ class TestServingFuzz:
                     or any(r is not None for r in eng.slot_req)):
                 break
             gw.step()
+            _slo_invariants(gw, reqs)
         _terminal_invariants(reqs)
+        _slo_invariants(gw, reqs)
