@@ -54,6 +54,7 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                  seed: int = 0, kv: str = "dense", page: int = 64,
                  n_pages: Optional[int] = None,
                  prefix_cache: bool = False, spec_k: int = 0,
+                 spec_adaptive: bool = False,
                  n_adapters: int = 0, adapter_rank: int = 8,
                  adapter_budget_kb: Optional[float] = None,
                  tracer=None, profiler=None) -> ServeEngine:
@@ -91,6 +92,7 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
                        prefill=prefill, prefill_chunk=prefill_chunk,
                        seed=seed, kv=backend, spec_decode=spec_k > 0,
+                       spec_adaptive=spec_adaptive,
                        prefix_cache=prefix_cache, adapters=adapters,
                        tracer=tracer, profiler=profiler)
 
@@ -115,6 +117,20 @@ def main(argv=None) -> int:
                          "per tick by n-gram prompt lookup and verify them "
                          "in one multi-token step (0 = off; greedy/seeded "
                          "requests only, outputs token-identical either way)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="adapt each slot's draft width to its live accept "
+                         "rate (EWMA, clamped to --spec-k; requires --spec-k)")
+    ap.add_argument("--async", dest="async_runtime", action="store_true",
+                    help="drive the engine through the asynchronous "
+                         "dispatch/backlog runtime (device kept >= 1 tick "
+                         "ahead; outputs token-identical to the sync loop)")
+    ap.add_argument("--async-depth", type=int, default=1,
+                    help="device-ahead pipeline depth for --async")
+    ap.add_argument("--http-port", type=int, default=None,
+                    help="serve an HTTP/SSE front on this port instead of "
+                         "the synthetic request stream (implies --async; "
+                         "0 = ephemeral; POST /v1/shutdown stops the "
+                         "process gracefully)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 = disabled)")
@@ -177,6 +193,7 @@ def main(argv=None) -> int:
                        ckpt_dir=args.ckpt_dir, seed=args.seed, kv=args.kv,
                        page=args.page, n_pages=args.n_pages,
                        prefix_cache=args.prefix_cache, spec_k=args.spec_k,
+                       spec_adaptive=args.spec_adaptive,
                        n_adapters=args.adapters,
                        adapter_rank=args.adapter_rank,
                        adapter_budget_kb=args.adapter_budget_kb,
@@ -185,17 +202,41 @@ def main(argv=None) -> int:
     if args.prom_out:
         gw.prom_out = args.prom_out
         gw.prom_every = args.prom_every
+
+    if args.http_port is not None:
+        # front-door mode: no synthetic stream — serve HTTP/SSE until a
+        # client POSTs /v1/shutdown (the CI smoke's graceful-stop path)
+        from repro.serving.runtime import AsyncServeRuntime, ServingHTTPFront
+        rt = AsyncServeRuntime(gw, depth=args.async_depth).start()
+        front = ServingHTTPFront(rt, port=args.http_port).start()
+        print(f"[serve] http/sse front on 127.0.0.1:{front.port} "
+              f"(async depth {args.async_depth})", flush=True)
+        try:
+            front.serve_until_shutdown()
+        finally:
+            front.close()
+            rt.close(raise_on_poison=False)
+        out = {"completed": eng.stats.completed,
+               "tokens_out": eng.stats.tokens_out,
+               "poisoned": rt.poisoned,
+               "tick_host_overhead_frac": round(
+                   eng.stats.host_overhead_frac, 4),
+               "energy": gw.energy.gauges(),
+               "metrics": gw.metrics_dict()}
+        print("[serve]", json.dumps(out))
+        return 1 if rt.poisoned else 0
+
     rng = np.random.default_rng(args.seed)
     vocab = eng.cfg.vocab_size
     system = list(rng.integers(0, min(vocab, 1000), size=args.shared_prefix))
-    reqs = []
+    workload = []
     for i in range(args.requests):
         plen = int(rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1))
         prompt = system + list(rng.integers(0, min(vocab, 1000), size=plen))
         adapter_id = None
         if args.adapters > 0 and rng.random() < args.adapter_rate:
             adapter_id = f"tenant-{i % args.adapters}"
-        reqs.append(gw.submit(
+        workload.append((
             prompt,
             RequestSpec(max_new_tokens=args.max_new,
                         priority=i % 2,            # mixed SLO classes
@@ -204,9 +245,21 @@ def main(argv=None) -> int:
             SamplingParams(temperature=args.temperature, top_p=args.top_p,
                            spec_k=args.spec_k)))
 
-    t0 = time.time()
-    stats = gw.run_until_drained()
-    wall = time.time() - t0
+    if args.async_runtime:
+        from repro.serving.runtime import AsyncServeRuntime
+        t0 = time.time()
+        with AsyncServeRuntime(gw, depth=args.async_depth) as rt:
+            tickets = [rt.submit(p, spec=s, sampling=sp)
+                       for p, s, sp in workload]
+            rt.drain()
+            reqs = [t.req for t in tickets]
+        wall = time.time() - t0
+        stats = eng.stats
+    else:
+        reqs = [gw.submit(p, s, sp) for p, s, sp in workload]
+        t0 = time.time()
+        stats = gw.run_until_drained()
+        wall = time.time() - t0
 
     done = [r for r in reqs if r.state == "done"]
     ttfts = [r.ttft_s for r in done] or [0.0]

@@ -524,9 +524,15 @@ class Model:
                  "v": attn_mod.gather_pages(state.v_pool, state.tables)}
         logits, new_cache = self.decode_step(p, cache, token_or_embed, pos,
                                              adapter_idx)
+        # clip, don't fill: inactive slots carry a stale `pos` that can
+        # exceed the gathered view (their write lands on the scratch page
+        # and is never read), and jnp's OOB fill value is NaN — which would
+        # poison the scratch page and leak into live rows via table padding
         idx = pos.reshape(1, -1, 1, 1, 1).astype(jnp.int32)
-        k_tok = jnp.take_along_axis(new_cache["k"], idx, axis=3)[:, :, :, 0]
-        v_tok = jnp.take_along_axis(new_cache["v"], idx, axis=3)[:, :, :, 0]
+        k_tok = jnp.take_along_axis(new_cache["k"], idx, axis=3,
+                                    mode="clip")[:, :, :, 0]
+        v_tok = jnp.take_along_axis(new_cache["v"], idx, axis=3,
+                                    mode="clip")[:, :, :, 0]
         k_pool = attn_mod.scatter_tokens(state.k_pool, state.write_page,
                                          state.write_off, k_tok)
         v_pool = attn_mod.scatter_tokens(state.v_pool, state.write_page,
@@ -646,9 +652,11 @@ class Model:
             return c, lg
 
         c, lgs = jax.lax.scan(body, cache, (tokens.T, jnp.arange(s)))
+        # mode="clip" for the same reason as the paged decode path: stale
+        # positions on inactive rows must not pull in jnp's NaN OOB fill
         idx = (pos[:, None] + jnp.arange(s))[None, :, None, :, None]
-        k_span = jnp.take_along_axis(c["k"], idx, axis=3)
-        v_span = jnp.take_along_axis(c["v"], idx, axis=3)
+        k_span = jnp.take_along_axis(c["k"], idx, axis=3, mode="clip")
+        v_span = jnp.take_along_axis(c["v"], idx, axis=3, mode="clip")
         return jnp.moveaxis(lgs, 0, 1), {"k": k_span, "v": v_span}
 
 

@@ -3,13 +3,17 @@ context-sharded fp8 KV cache, the unified request API
 (`repro.serving.api`: SamplingParams / RequestSpec), pluggable KV backends
 (`repro.serving.kv`: DenseKV / PagedKV behind the KVBackend protocol), plus
 the gateway layer (scheduler, prefix cache, streaming frontend, metrics) in
-`repro.serving.gateway` and the multi-tenant QLoRA adapter subsystem in
-`repro.serving.adapters`."""
+`repro.serving.gateway`, the multi-tenant QLoRA adapter subsystem in
+`repro.serving.adapters`, and the asynchronous dispatch/backlog runtime with
+its HTTP/SSE front in `repro.serving.runtime`."""
 from repro.serving.api import RequestSpec, SamplingParams
 from repro.serving.engine import EngineStats, Request, ServeEngine
 from repro.serving.kv import DenseKV, KVBackend, PagedKV
 from repro.serving.paged_kv import PagePool, PagedConfig
+from repro.serving.runtime import (AsyncServeRuntime, RuntimePoisoned,
+                                   ServingHTTPFront, Ticket)
 
-__all__ = ["DenseKV", "EngineStats", "KVBackend", "PagePool", "PagedConfig",
-           "PagedKV", "Request", "RequestSpec", "SamplingParams",
-           "ServeEngine"]
+__all__ = ["AsyncServeRuntime", "DenseKV", "EngineStats", "KVBackend",
+           "PagePool", "PagedConfig", "PagedKV", "Request", "RequestSpec",
+           "RuntimePoisoned", "SamplingParams", "ServeEngine",
+           "ServingHTTPFront", "Ticket"]

@@ -80,7 +80,9 @@ requires a GQA KV cache — ssm/hybrid/MLA families use `DenseKV`.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -92,8 +94,8 @@ from repro.models.transformer import Model
 from repro.serving.api import RequestSpec, SamplingParams, coerce_submit
 from repro.serving.kv import KVBackend, as_backend
 from repro.serving.obs.tracer import NULL_TRACER, CompileWatch, Tracer
-from repro.serving.spec import (accepted_prefix, plan_emit, propose,
-                                quantize_width)
+from repro.serving.spec import (AdaptiveSpecK, accepted_prefix, plan_emit,
+                                propose, quantize_width)
 
 Params = Any
 NEG_INF = -1e30
@@ -230,6 +232,12 @@ class EngineStats:
     phase_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
     tick_gap_ms_sum: float = 0.0  # host time between device dispatches
     tick_gaps: int = 0
+    # host gaps observed while a previous tick's dispatched work was still
+    # unmaterialized (async runtime pipelining): the device queue is
+    # non-empty, so this host time is *overlapped* with device compute and
+    # excluded from the idle-gap numerator above
+    tick_gap_overlap_ms_sum: float = 0.0
+    tick_gaps_overlap: int = 0
     tick_wall_ms_sum: float = 0.0  # total tick() wall time (gap denominator)
     jit_compiles: int = 0         # jit cache growth events (CompileWatch)
 
@@ -292,6 +300,34 @@ class _Phase:
         return self.span.__exit__(*exc)
 
 
+@dataclasses.dataclass
+class PendingTick:
+    """One dispatched-but-unmaterialized tick: the device-side sample array
+    plus the host bookkeeping deferred until ``tick_finish``. Produced by
+    ``tick_begin``; the async runtime holds at most ``depth`` of these so the
+    device stays a tick ahead, while the sync ``tick()`` finishes each one
+    immediately (the deque is empty between ticks — zero behavior change).
+
+    ``emits`` lists (slot, request, begin-time position) triples whose token
+    for this tick lives in ``nxt_dev`` — the position is captured at begin
+    because a later pipelined begin advances ``pos`` before this tick's
+    finish runs, and the max_len done-check must see this tick's value.
+    ``done_slots`` are slots whose request is predictably complete after
+    that emission (budget / max_len — eos is only discovered at finish), so
+    the next ``tick_begin`` must not decode them again."""
+    active: List[int] = dataclasses.field(default_factory=list)
+    emits: List[Tuple[int, "Request", int]] = dataclasses.field(
+        default_factory=list)
+    done_slots: set = dataclasses.field(default_factory=set)
+    nxt_dev: Optional[jax.Array] = None
+    gap_ms: Optional[float] = None
+    verify_width: int = 1
+    begin_s: float = 0.0          # host wall spent inside tick_begin
+    busy0: float = 0.0
+    tokens0: int = 0
+    ticks0: int = 0
+
+
 class ServeEngine:
     def __init__(self, model: Model, params: Params, *, max_slots: int = 8,
                  max_len: int = 1024, prefill: str = "token", seed: int = 0,
@@ -299,6 +335,7 @@ class ServeEngine:
                  kv: Union[str, KVBackend, None] = None, page: int = 64,
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
                  spec_decode: bool = False, spec_ngram: int = 3,
+                 spec_adaptive: bool = False,
                  scheduler=None, adapters=None,
                  tracer: Optional[Tracer] = None, profiler=None):
         assert model.mode in ("serve", "qlora")
@@ -328,6 +365,12 @@ class ServeEngine:
         # verify shares the mid-sequence prefill's attention restriction).
         self.spec_decode = spec_decode
         self.spec_ngram = spec_ngram
+        # adaptive draft width (spec_adaptive=True): a per-slot EWMA of the
+        # live accept rate shrinks/grows the next tick's draft width within
+        # [0, SamplingParams.spec_k] — width never changes *which* tokens
+        # are emitted (rejected drafts are discarded), only how many drafts
+        # each verify tick risks, so token identity is preserved.
+        self.spec_adaptive = spec_adaptive
         if spec_decode:
             assert model.cfg.attention_kind == "gqa" \
                 and model.cfg.family not in ("ssm", "hybrid"), \
@@ -368,8 +411,20 @@ class ServeEngine:
         self.slot_feed: List[List[int]] = [[] for _ in range(max_slots)]
         self.slot_keys: List[List] = [[] for _ in range(max_slots)]
         self.slot_cached: List[int] = [0] * max_slots     # cache-owned lead pages
+        # per-slot adaptive-width controller (spec_adaptive only; created at
+        # placement, dropped with the slot so each request starts fresh)
+        self.slot_spec_adapt: List[Optional[AdaptiveSpecK]] = \
+            [None] * max_slots
         self.stats = EngineStats()
         self._uid = 0
+
+        # split-tick pipeline (async runtime): tick_begin() dispatches the
+        # device work for one tick and parks the unmaterialized sample array
+        # in a PendingTick; tick_finish() materializes the oldest pending
+        # tick and runs its emit/eos/release bookkeeping. The sync tick()
+        # finishes immediately, so the deque is empty outside tick() and
+        # every legacy behavior is unchanged.
+        self._pending: "collections.deque[PendingTick]" = collections.deque()
 
         # observability: the tracer records per-tick phase spans, request
         # lifecycle tracks and jit-compile instants (disabled by default —
@@ -385,6 +440,7 @@ class ServeEngine:
                       if self.trace.enabled else 1)
         self._phase_self_total = 0.0
         self._t_dev_end: Optional[float] = None  # last device-dispatch return
+        self._dispatch_tid: Optional[int] = None  # thread of that dispatch
         self._tick_gap_ms: Optional[float] = None  # gap observed this tick
         self._last_verify_width = 1
         self._prefill_watch = None
@@ -445,14 +501,28 @@ class ServeEngine:
         """Run one device dispatch, recording the host-side gap since the
         previous dispatch returned (``tick_gap_ms``): sampling, scheduling
         and bookkeeping time during which the device sits idle — the named
-        feedback signal for the ROADMAP's async disaggregated runtime."""
+        feedback signal for the ROADMAP's async disaggregated runtime.
+
+        Threaded-dispatch semantics: the gap clock is *per dispatch thread*
+        — a dispatch issued from a different thread than the previous one
+        (warmup on the main thread, then the async runtime's dispatch
+        thread) records no gap and just re-arms the clock, so cross-thread
+        wall time never pollutes ``host_overhead_frac``. While the split-
+        tick pipeline holds an unfinished tick the device queue is
+        non-empty, so gaps observed then are *overlapped* host time and
+        land in ``tick_gap_overlap_ms_sum`` instead of the idle-gap sum."""
         t = time.perf_counter()
-        if self._t_dev_end is not None:
+        tid = threading.get_ident()
+        if self._t_dev_end is not None and tid == self._dispatch_tid:
             gap = (t - self._t_dev_end) * 1e3
             self._tick_gap_ms = gap
-            self.stats.tick_gap_ms_sum += gap
-            self.stats.tick_gaps += 1
-            self.trace.counter("tick_gap_ms", gap, pid=self._tpid)
+            if self._pending:
+                self.stats.tick_gap_overlap_ms_sum += gap
+                self.stats.tick_gaps_overlap += 1
+            else:
+                self.stats.tick_gap_ms_sum += gap
+                self.stats.tick_gaps += 1
+                self.trace.counter("tick_gap_ms", gap, pid=self._tpid)
         out = fn(*args, **kwargs)
         if self.profiler is not None:
             # profiling blocks the dispatch so the measured wall is real
@@ -463,6 +533,7 @@ class ServeEngine:
                 fn, args, kwargs, time.perf_counter() - t,
                 compiled=getattr(fn, "last_compiled", False))
         self._t_dev_end = time.perf_counter()
+        self._dispatch_tid = tid
         return out
 
     #: phases counted as device-execution time for the energy monitor
@@ -588,6 +659,10 @@ class ServeEngine:
 
     def cancel(self, uid: int) -> bool:
         """Cancel a queued or running request. Returns False if unknown."""
+        # settle any in-flight pipelined tick first: its deferred emissions
+        # may finish (or release) the very request being cancelled, and a
+        # cancel must never race a pending emit for the same slot
+        self._settle_pipeline()
         req = self.scheduler.remove(uid)
         if req is not None:
             req.state = "cancelled"
@@ -631,7 +706,34 @@ class ServeEngine:
         to decode mid-prefill would shift its KV positions)."""
         req = self.slot_req[slot]
         return (req is not None and not self.slot_prefill_todo[slot]
-                and bool(self.pending_prompt[slot] or req.output))
+                and bool(self.pending_prompt[slot] or req.output
+                         or self._inflight_emits(slot)))
+
+    # -- split-tick pipeline helpers -------------------------------------------
+    def _inflight_emits(self, slot: int) -> int:
+        """Deferred emissions queued for ``slot`` across pending ticks —
+        tokens the device has (logically) produced but tick_finish() has not
+        yet materialized into ``req.output``. The request-identity guard
+        drops stale entries for a slot that was re-assigned underneath a
+        pending tick (possible only after an early release)."""
+        if not self._pending:
+            return 0
+        req = self.slot_req[slot]
+        return sum(1 for p in self._pending
+                   for i, r, _ in p.emits if i == slot and r is req)
+
+    def _slot_done_inflight(self, slot: int) -> bool:
+        """True when a pending tick already predicted this slot's request
+        will be complete once finished (budget / max_len) — the slot stays
+        occupied but must not decode again before tick_finish releases it."""
+        return any(slot in p.done_slots for p in self._pending)
+
+    def _settle_pipeline(self) -> None:
+        """Finish every pending tick (materialize + emit). State-mutating
+        paths that need host-visible history — cancel, preemption, draft
+        planning, admission under pressure — call this before acting."""
+        while self._pending:
+            self.tick_finish()
 
     def _active_pairs(self) -> List[Tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
@@ -704,6 +806,9 @@ class ServeEngine:
         but only if the reclaimed pages actually make it admissible.
         Preempting without that check livelocks: the victim is re-admitted
         by the very next pop and zero progress is made every tick."""
+        # preemption replays prompt+output — settle pending emissions first
+        # so a victim's replay feed includes every token it already earned
+        self._settle_pipeline()
         head = self.scheduler.peek(
             lambda r: self._pages_lifetime(r) <= self.kv.capacity_pages
             and (self.adapters is None or r.adapter_id is None
@@ -743,6 +848,8 @@ class ServeEngine:
         req.max_new_tokens = len(req.output) + remaining_new
         self.slot_req[slot] = req
         self.slot_feed[slot] = feed
+        if self.spec_adaptive and req.sampling.spec_k > 0:
+            self.slot_spec_adapt[slot] = AdaptiveSpecK()
         self.pos[slot] = 0
         matched = 0
         if self.prefix is not None:
@@ -925,6 +1032,13 @@ class ServeEngine:
             short = need - self.kv.pages_free
             if short <= 0:
                 return active
+            if self._pending:
+                # under pressure with a tick in flight: finishing it may
+                # release completed slots (freeing pages) and must precede
+                # any preemption (the victim's replay needs its tokens)
+                self._settle_pipeline()
+                active = [i for i in active if self._is_decoding(i)]
+                continue
             if self.prefix is not None:
                 self.kv.free_pages(self.prefix.evict(short))
                 if need <= self.kv.pages_free:
@@ -969,6 +1083,7 @@ class ServeEngine:
         self.slot_feed[slot] = []
         self.slot_keys[slot] = []
         self.slot_cached[slot] = 0
+        self.slot_spec_adapt[slot] = None
         self.pos[slot] = 0
 
     # -- decode ---------------------------------------------------------------------
@@ -978,7 +1093,9 @@ class ServeEngine:
         to the pre-adapter path)."""
         if self.adapters is None:
             return None
-        return jnp.asarray(self.slot_adapter)
+        # copy: the async pipeline mutates slot_adapter (place/release)
+        # while a dispatched tick may still read an aliased host buffer
+        return jnp.asarray(self.slot_adapter.copy())
 
     def _sampling_vectors(self, active):
         """Per-slot sampling parameter vectors for the jitted samplers."""
@@ -996,7 +1113,10 @@ class ServeEngine:
             if req.seed is not None:
                 seeds[i] = req.seed
                 has_seed[i] = True
-            steps[i] = len(req.output)
+            # seeded draws depend on (seed, tokens generated): count tokens
+            # still in flight in pending ticks so a pipelined seeded slot
+            # samples the exact step index the sequential engine would
+            steps[i] = len(req.output) + self._inflight_emits(i)
         return temps, topks, topps, seeds, has_seed, steps
 
     def _fed_token(self, i: int) -> int:
@@ -1028,11 +1148,15 @@ class ServeEngine:
             self.slot_cached[i] += len(keys)
         return False
 
-    def _emit_token(self, i: int, req: Request, tok: int, now: float) -> bool:
+    def _emit_token(self, i: int, req: Request, tok: int, now: float,
+                    pos_now: Optional[int] = None) -> bool:
         """Output-token bookkeeping shared by the single-token and verify
         ticks; returns True when the request finished (or vanished — an
         on_token callback may cancel requests mid-tick, so re-check slot
-        ownership after it fires rather than double-releasing)."""
+        ownership after it fires rather than double-releasing).
+        ``pos_now`` overrides the live slot position for the max_len check —
+        a deferred (pipelined) emission must judge completion at the
+        position its own tick reached, not one a later begin advanced to."""
         if not req.output:
             req.t_first = now
         req.output.append(tok)
@@ -1042,9 +1166,10 @@ class ServeEngine:
         if self.slot_req[i] is not req:
             return True     # cancelled/released from inside the callback
         req.t_last = now
+        pos_i = int(self.pos[i]) if pos_now is None else pos_now
         done = (len(req.output) >= req.max_new_tokens
                 or (req.eos_id is not None and req.output[-1] == req.eos_id)
-                or self.pos[i] >= self.max_len)
+                or pos_i >= self.max_len)
         if done:
             req.t_done = now
             req.state = "done"
@@ -1082,6 +1207,11 @@ class ServeEngine:
             k = min(req.sampling.spec_k,
                     req.max_new_tokens - len(req.output) - 1,
                     self.max_len - int(self.pos[i]) - 1)
+            adapt = self.slot_spec_adapt[i]
+            if adapt is not None:
+                # adaptive width: the slot's live accept-rate EWMA names how
+                # much of the request's spec_k ceiling is worth risking
+                k = min(k, adapt.suggest(req.sampling.spec_k))
             # quantize to a pow2-minus-one width (1, 3, 7, 15): the verify
             # scan runs s_bucket sequential steps whatever the true draft
             # length, so a k=4 draft would pay for an 8-wide bucket — 3
@@ -1178,6 +1308,9 @@ class ServeEngine:
                     self.kv.commit_span(i, int(self.pos[i]), spans,
                                         len(emit))
                 self._pop_pending(i)
+                adapt = self.slot_spec_adapt[i]
+                if adapt is not None and drafts[i]:
+                    adapt.observe(len(drafts[i]), acc)
                 req.spec_drafted += len(drafts[i])
                 self.stats.spec_drafted += len(drafts[i])
                 gained = max(0, len(emit) - 1)
@@ -1196,46 +1329,104 @@ class ServeEngine:
         ``spec_decode=True`` and any drafts on offer, the tick runs the
         multi-token verify instead and commits every accepted token.
 
-        The whole tick rides one "tick" trace span; ``on_tick`` (if wired)
-        receives a per-tick summary — wall/busy time, the tick's host-side
-        dispatch gap, tokens emitted, occupancy and the verify width — the
-        gateway feeds it to the tick-gap histogram and the energy monitor."""
+        Internally one tick is ``tick_begin()`` (everything up to and
+        including the sample dispatch) followed by ``tick_finish()``
+        (materialize the sampled tokens + emit/eos/release bookkeeping).
+        The sync path runs them back to back; the async runtime interleaves
+        begin(N+1) before finish(N) so the device stays a tick ahead."""
+        self.tick_begin()
+        while self._pending:
+            self.tick_finish()
+
+    def tick_begin(self) -> PendingTick:
+        """Dispatch one tick's device work without reading its results:
+        admission, chunked prefill, decode + sample dispatch, KV commit,
+        position advance and prompt-consumption bookkeeping all happen now;
+        the sampled-token array stays on device inside the returned
+        ``PendingTick`` (also appended to the engine's pending deque).
+
+        Pipelining contract: a next ``tick_begin`` issued before the finish
+        feeds in-flight slots their unmaterialized token via a device-side
+        overlay (``jnp.where`` against the pending sample array), offsets
+        seeded-sampling step indices by the in-flight count, and skips slots
+        whose completion is already predictable (budget / max_len). Verify
+        (spec) ticks and state-mutating scheduler paths settle the pipeline
+        first — they need host-visible history."""
+        p = PendingTick()
         t0 = time.perf_counter()
-        busy0 = self._busy_ms()
-        tokens0 = self.stats.tokens_out
-        ticks0 = self.stats.ticks
+        p.busy0 = self._busy_ms()
+        p.tokens0 = self.stats.tokens_out
+        p.ticks0 = self.stats.ticks
         self._tick_gap_ms = None
         self._last_verify_width = 1
         with self.trace.span("tick", pid=self._tpid):
-            self._tick_impl()
-        wall_ms = (time.perf_counter() - t0) * 1e3
+            self._tick_begin_impl(p)
+        p.gap_ms = self._tick_gap_ms
+        p.verify_width = self._last_verify_width
+        p.begin_s = time.perf_counter() - t0
+        self._pending.append(p)
+        return p
+
+    def tick_finish(self) -> None:
+        """Materialize the oldest pending tick and run its deferred host
+        work: read the sampled tokens, append/emit/eos/release per slot, add
+        the tick's wall to the stats ledger and fire ``on_tick``. A slot
+        whose request changed since begin (released by an earlier finish
+        discovering eos, or cancelled) skips its stale emission."""
+        if not self._pending:
+            return
+        p = self._pending.popleft()
+        t0 = time.perf_counter()
+        with self.trace.span("tick_finish", pid=self._tpid):
+            if p.nxt_dev is not None:
+                nxt = np.asarray(p.nxt_dev)
+                now = time.time()
+                with self._phase("emit"):
+                    for i, req, pos_i in p.emits:
+                        if self.slot_req[i] is not req:
+                            continue    # released/cancelled since begin
+                        self._emit_token(i, req, int(nxt[i]), now,
+                                         pos_now=pos_i)
+        wall_ms = (p.begin_s + time.perf_counter() - t0) * 1e3
         self.stats.tick_wall_ms_sum += wall_ms
         if self.on_tick is not None:
             self.on_tick({
                 "wall_ms": wall_ms,
-                "busy_ms": self._busy_ms() - busy0,
-                "gap_ms": self._tick_gap_ms,
-                "tokens": self.stats.tokens_out - tokens0,
-                "ticked": self.stats.ticks > ticks0,
+                "busy_ms": self._busy_ms() - p.busy0,
+                "gap_ms": p.gap_ms,
+                "tokens": self.stats.tokens_out - p.tokens0,
+                "ticked": self.stats.ticks > p.ticks0,
                 "active": sum(1 for r in self.slot_req if r is not None),
                 "prefilling": sum(1 for t in self.slot_prefill_todo if t),
-                "verify_width": self._last_verify_width,
+                "verify_width": p.verify_width,
+                "dispatch_ahead_depth": len(self._pending),
             })
 
-    def _tick_impl(self) -> None:
+    def _tick_begin_impl(self, p: PendingTick) -> None:
         with self._phase("schedule"):
             self._admit()
         chunks = self._advance_prefill()
-        active = [i for i in range(self.max_slots) if self._is_decoding(i)]
+        active = [i for i in range(self.max_slots) if self._is_decoding(i)
+                  and not self._slot_done_inflight(i)]
         if active:
             with self._phase("schedule"):
                 active = self._ensure_capacity(active)
+                active = [i for i in active
+                          if not self._slot_done_inflight(i)]
         if not active:
             if chunks:
                 self.stats.ticks += 1   # prefill-only tick still progresses
             return
 
         if self.spec_decode:
+            # drafting proposes from host-visible history — settle any
+            # pipelined tick so the proposer sees every emitted token
+            self._settle_pipeline()
+            active = [i for i in active if self._is_decoding(i)]
+            if not active:
+                if chunks:
+                    self.stats.ticks += 1
+                return
             with self._phase("schedule"):
                 drafts = self._plan_drafts(active)
             if any(drafts[i] for i in active):
@@ -1244,37 +1435,67 @@ class ServeEngine:
 
         with self._phase("decode"):
             tokens = np.zeros((self.max_slots,), np.int32)
+            overlay: List[int] = []
             for i in active:
-                tokens[i] = self._fed_token(i)
+                if not self.pending_prompt[i] and self._inflight_emits(i):
+                    # fed token is still on device (previous tick's sample)
+                    overlay.append(i)
+                else:
+                    tokens[i] = self._fed_token(i)
             temps, topks, topps, seeds, has_seed, steps = \
                 self._sampling_vectors(active)
 
+            fed = jnp.asarray(tokens)
+            if overlay:
+                # per-slot device overlay: feed each in-flight slot the
+                # sample array of the *latest* pending tick that emitted for
+                # it (with depth 1 that is simply the newest pending)
+                by_src: Dict[int, Tuple[PendingTick, List[int]]] = {}
+                for i in overlay:
+                    for q in reversed(self._pending):
+                        if any(j == i and r is self.slot_req[i]
+                               for j, r, _ in q.emits):
+                            by_src.setdefault(id(q), (q, []))[1].append(i)
+                            break
+                for q, slots in by_src.values():
+                    mask = np.zeros((self.max_slots,), bool)
+                    mask[slots] = True
+                    fed = jnp.where(jnp.asarray(mask), q.nxt_dev, fed)
+            # snapshot live engine buffers: without the sync path's
+            # materialization barrier the dispatch is truly async, and
+            # jnp.asarray may alias host numpy memory on CPU — the pos
+            # advance below must not race the in-flight compute
             state = self.kv.decode_state(active, self.pos)
             logits, new_state = self._dispatch(
                 self._decode, self._effective_params(), state,
-                jnp.asarray(tokens), jnp.asarray(self.pos),
+                fed, jnp.asarray(self.pos.copy()),
                 self._adapter_idx())
         with self._phase("commit"):
             self.kv.commit(new_state, active, self.pos)
         with self._phase("sample"):
             self.key, sub = jax.random.split(self.key)
-            nxt = np.asarray(self._dispatch(
+            p.nxt_dev = self._dispatch(
                 self._sample,
                 logits, sub, jnp.asarray(temps),
                 jnp.asarray(topks), jnp.asarray(topps),
                 jnp.asarray(seeds), jnp.asarray(has_seed),
                 jnp.asarray(steps),
                 use_topp=bool(np.any(topps < 1.0)),
-                use_seeds=bool(np.any(has_seed))))
+                use_seeds=bool(np.any(has_seed)))
 
-        now = time.time()
         self.stats.ticks += 1
-        with self._phase("emit"):
-            for i in active:
-                req = self.slot_req[i]
-                if req is None:
-                    continue    # released by a callback earlier in the loop
-                self.pos[i] += 1
-                if self._pop_pending(i):
-                    continue  # still consuming the prompt
-                self._emit_token(i, req, int(nxt[i]), now)
+        p.active = active
+        for i in active:
+            req = self.slot_req[i]
+            if req is None:
+                continue
+            self.pos[i] += 1
+            if self._pop_pending(i):
+                continue  # still consuming the prompt — no emission
+            p.emits.append((i, req, int(self.pos[i])))
+            # predictable completion (budget / max_len): count every token
+            # already emitted, in flight in older pending ticks, and this
+            # tick's own pending emission
+            n_out = (len(req.output) + self._inflight_emits(i)) + 1
+            if n_out >= req.max_new_tokens or self.pos[i] >= self.max_len:
+                p.done_slots.add(i)

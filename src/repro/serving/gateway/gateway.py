@@ -79,29 +79,43 @@ class Gateway:
             spec = dataclasses.replace(
                 spec, deadline_ms=(deadline_s - time.time()) * 1e3)
         req = self.engine.submit(prompt, spec, sampling)
+        self._note_submit(req)
+        return req
+
+    def _note_submit(self, req: Request) -> None:
+        """Gateway-side submit bookkeeping (metrics + SLO track + stream-cb
+        registration), split from the engine-side enqueue so the async
+        runtime can run the enqueue on its dispatch thread and replay this
+        half on the backlog thread."""
         self.metrics.inc("requests_submitted")
         if req.state == "rejected":
             self.metrics.inc("requests_rejected")
         else:
             self.slo.observe_submit(req)
-            if spec.adapter_id is not None:
+            if req.adapter_id is not None:
                 # accepted ⇒ adapter_id is registered: per-tenant counter
                 # cardinality stays bounded by the registry, not by clients
                 self.metrics.inc("adapter_requests_total")
-                self.metrics.inc(f"adapter_requests__{spec.adapter_id}")
-            if spec.stream_cb is not None:
-                self._stream_cbs[req.uid] = spec.stream_cb
-        return req
+                self.metrics.inc(f"adapter_requests__{req.adapter_id}")
+            if req.spec.stream_cb is not None:
+                self._stream_cbs[req.uid] = req.spec.stream_cb
 
     def cancel(self, uid: int) -> bool:
         req = self._find_req(uid)
         ok = self.engine.cancel(uid)
-        if ok:
+        if ok and req is not None:
+            self._note_cancel(req)
+        elif ok:
             self.metrics.inc("requests_cancelled")
-            self._stream_cbs.pop(uid, None)
-            if req is not None:
-                self._slo_close(req, violated=False)
         return ok
+
+    def _note_cancel(self, req: Request, now: Optional[float] = None) -> None:
+        """Cancel bookkeeping (counter + SLO close + stream-cb drop) —
+        replayed on the backlog thread by the async runtime with the
+        dispatch-time timestamp."""
+        self.metrics.inc("requests_cancelled")
+        self._stream_cbs.pop(req.uid, None)
+        self._slo_close(req, violated=False, now=now)
 
     def _find_req(self, uid: int) -> Optional[Request]:
         """The live Request for ``uid`` (queue or slot), before cancel
@@ -143,15 +157,24 @@ class Gateway:
         return stats
 
     # -- engine event hooks ----------------------------------------------------
-    def _on_token(self, req: Request, tok: int, now: float) -> None:
+    def _on_token(self, req: Request, tok: int, now: float,
+                  idx: Optional[int] = None,
+                  t_prev: Optional[float] = None) -> None:
+        # ``idx``/``t_prev`` are emit-time snapshots (1-based output index,
+        # previous token's timestamp) passed by the async runtime's backlog
+        # replay: by replay time the engine may have appended further tokens
+        # and advanced ``req.t_last``, so the live reads the sync path uses
+        # would misclassify TTFT and compute negative inter-token gaps.
         self.slo.observe_token(req, now)
         self.metrics.inc("tokens_out")
-        if len(req.output) == 1:
+        n = len(req.output) if idx is None else idx
+        if n == 1:
             self.metrics.observe("ttft_ms", (now - req.t_submit) * 1e3)
             self.metrics.observe("queue_wait_ms",
                                  (req.t_admit - req.t_submit) * 1e3)
         else:
-            self.metrics.observe("tbt_ms", (now - req.t_last) * 1e3)
+            prev = req.t_last if t_prev is None else t_prev
+            self.metrics.observe("tbt_ms", (now - prev) * 1e3)
         cb = self._stream_cbs.get(req.uid)
         if cb is not None:
             cb(req, tok)
@@ -173,21 +196,25 @@ class Gateway:
         self.slo.observe_admit(req)
         self.metrics.inc("admissions")
 
-    def _on_preempt(self, req: Request) -> None:
-        self.slo.observe_preempt(req)
+    def _on_preempt(self, req: Request, now: Optional[float] = None) -> None:
+        # ``now`` is the dispatch-time timestamp when the event is replayed
+        # from the async runtime's backlog thread — without it, backlog
+        # processing delay would be charged to the preempted phase
+        self.slo.observe_preempt(req, now)
         self.metrics.inc("preemptions")
 
-    def _on_expire(self, req: Request) -> None:
+    def _on_expire(self, req: Request, now: Optional[float] = None) -> None:
         self.metrics.inc("requests_expired")
         # an expiry IS an SLO violation — the deadline passed while queued
-        self._slo_close(req, violated=True)
+        self._slo_close(req, violated=True, now=now)
         self._stream_cbs.pop(req.uid, None)
 
-    def _slo_close(self, req: Request, violated: bool) -> None:
+    def _slo_close(self, req: Request, violated: bool,
+                   now: Optional[float] = None) -> None:
         """Freeze the request's attribution track, feed the per-phase
         latency histograms and — when the request violated its SLO — blame
         the dominant phase via an attributed counter."""
-        comp = self.slo.close(req)
+        comp = self.slo.close(req, now)
         if comp is None:
             return
         for phase in SLO_PHASES:
@@ -207,11 +234,19 @@ class Gateway:
         if summary.get("gap_ms") is not None:
             self.metrics.observe("tick_gap_ms", summary["gap_ms"],
                                  buckets=_GAP_BUCKETS)
+        if summary.get("dispatch_ahead_depth") is not None:
+            self.metrics.set_gauge("dispatch_ahead_depth",
+                                   summary["dispatch_ahead_depth"])
+        # the async runtime snapshots SRAM utilization on the dispatch
+        # thread at tick time (engine state is dispatch-thread-owned there);
+        # the sync path computes it live
+        sram = summary.get("sram_utilization")
         self.energy.observe_tick(
             wall_s=summary["wall_ms"] * 1e-3,
             busy_s=summary["busy_ms"] * 1e-3,
             tokens=summary["tokens"],
-            sram_utilization=self._sram_utilization(),
+            sram_utilization=(self._sram_utilization()
+                              if sram is None else sram),
             verify_width=summary.get("verify_width", 1))
         if self.prom_out is not None:
             self._prom_tick += 1

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import bisect
 import random
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 DEFAULT_MS_BUCKETS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
@@ -98,35 +99,48 @@ class Metrics:
     Two export surfaces: ``to_dict()`` (the JSON blob benches and
     `launch/serve.py` dump) and ``to_prom_text()`` (standard Prometheus
     text exposition incl. cumulative histogram buckets, rendered by
-    `repro.serving.obs.prom`)."""
+    `repro.serving.obs.prom`).
+
+    Thread-safe: the async runtime's backlog thread, HTTP front handler
+    threads (admission counters, /metrics scrapes) and the caller's thread
+    all touch one registry, so every read-modify-write rides a lock —
+    counter ``+=`` and histogram reservoir updates are not atomic in
+    CPython."""
 
     def __init__(self):
         self.counters: Dict[str, float] = {}
         self.gauges: Dict[str, float] = {}
         self.histograms: Dict[str, Histogram] = {}
+        self._lock = threading.Lock()
 
     def inc(self, name: str, n: float = 1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + n
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + n
 
     def set_gauge(self, name: str, value: float) -> None:
-        self.gauges[name] = value
+        with self._lock:
+            self.gauges[name] = value
 
     def observe(self, name: str, value: float,
                 buckets: Optional[Sequence[float]] = None) -> None:
-        h = self.histograms.get(name)
-        if h is None:
-            h = self.histograms[name] = Histogram(buckets or DEFAULT_MS_BUCKETS)
-        h.observe(value)
+        with self._lock:
+            h = self.histograms.get(name)
+            if h is None:
+                h = self.histograms[name] = Histogram(
+                    buckets or DEFAULT_MS_BUCKETS)
+            h.observe(value)
 
     def counter(self, name: str) -> float:
         return self.counters.get(name, 0)
 
     def to_dict(self) -> Dict:
-        return {
-            "counters": dict(self.counters),
-            "gauges": dict(self.gauges),
-            "histograms": {k: h.to_dict() for k, h in self.histograms.items()},
-        }
+        with self._lock:
+            return {
+                "counters": dict(self.counters),
+                "gauges": dict(self.gauges),
+                "histograms": {k: h.to_dict()
+                               for k, h in self.histograms.items()},
+            }
 
     def to_prom_text(self) -> str:
         """The registry in Prometheus text exposition format (# TYPE

@@ -38,6 +38,7 @@ from __future__ import annotations
 import collections
 import itertools
 import json
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -212,14 +213,20 @@ NULL_TRACER = Tracer(enabled=False)
 class CompileWatch:
     """Wrap a jitted callable; count compilations and trace their shapes.
 
-    Before/after each call the underlying jit cache size is compared (an
-    int read — no per-call tree traversal); growth means this call
-    compiled, so the watch bumps ``compiles``, invokes ``on_compile(name,
-    shapes)`` and emits a ``jit_compile`` instant naming the argument
-    shape bucket — the shape-bucket churn that stalls a tick shows up in
-    the trace exactly where the stall happened. On jax builds without
-    ``_cache_size`` the watch falls back to tracking argument shape
-    signatures itself.
+    Detection is *shape-signature based and race-free*: each call computes
+    its argument shape/dtype signature and atomically tests-and-adds it to
+    a lock-protected seen-set — a signature's first caller is the compile,
+    every later caller (including a concurrent one on another thread) is a
+    cache hit. The earlier implementation compared the underlying jit
+    cache size before/after the call, which misattributed compiles under
+    threaded dispatch: two threads interleaving calls both observe the
+    cache grow by someone else's entry (or neither observes its own). The
+    async runtime dispatches from a worker thread while warmup/benches may
+    call from the main thread, so the watch must be correct under
+    concurrency. On a compile the watch bumps ``compiles``, invokes
+    ``on_compile(name, shapes)`` and emits a ``jit_compile`` instant
+    naming the shape bucket — shape-bucket churn that stalls a tick shows
+    up in the trace exactly where the stall happened.
     """
 
     def __init__(self, fn: Callable, name: str, tracer: Tracer = NULL_TRACER,
@@ -235,8 +242,8 @@ class CompileWatch:
         #: dispatch probe reads this so the profiler can keep compile+trace
         #: wall time out of the per-executable timing mean
         self.last_compiled = False
-        self._probe = getattr(fn, "_cache_size", None)
-        self._seen_sigs: Optional[set] = None if self._probe else set()
+        self._lock = threading.Lock()
+        self._seen_sigs: set = set()
 
     @staticmethod
     def _shapes(args) -> str:
@@ -256,19 +263,40 @@ class CompileWatch:
                 out.append(sig)
         return ",".join(out[:8]) or "scalar"
 
+    @staticmethod
+    def _sig(args, kwargs) -> str:
+        """Compile-cache key approximation: arg shapes + dtypes plus the
+        static kwargs (e.g. ``use_topp``/``use_seeds`` flip the compiled
+        graph at identical array shapes)."""
+        try:
+            import jax
+            leaves = jax.tree_util.tree_leaves(args)
+        except Exception:
+            leaves = list(args)
+        parts = []
+        for leaf in leaves:
+            shape = getattr(leaf, "shape", None)
+            if shape is None:
+                # python scalars trace as weak-typed constants: the *type*
+                # keys the compile cache, the value does not
+                parts.append(type(leaf).__name__)
+            else:
+                parts.append("x".join(map(str, shape))
+                             + ":" + str(getattr(leaf, "dtype", "?")))
+        if kwargs:
+            parts.append(repr(sorted(kwargs.items())))
+        return "|".join(parts)
+
     def __call__(self, *args, **kwargs):
-        if self._probe is not None:
-            before = self._probe()
-            out = self._fn(*args, **kwargs)
-            compiled = self._probe() > before
-        else:
-            sig = self._shapes(args)
+        sig = self._sig(args, kwargs)
+        with self._lock:
             compiled = sig not in self._seen_sigs
             self._seen_sigs.add(sig)
-            out = self._fn(*args, **kwargs)
+            if compiled:
+                self.compiles += 1
+        out = self._fn(*args, **kwargs)
         self.last_compiled = compiled
         if compiled:
-            self.compiles += 1
             shapes = self._shapes(args)
             if self.on_compile is not None:
                 self.on_compile(self.name, shapes)

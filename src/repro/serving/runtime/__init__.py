@@ -1,0 +1,24 @@
+"""Asynchronous disaggregated serving runtime.
+
+Disaggregates the synchronous tick loop into three roles (runtime.py):
+
+  * a **dispatch thread** that owns the engine + scheduler and keeps the
+    device >= 1 tick ahead via the engine's split-tick pipeline
+    (``tick_begin`` / ``tick_finish``),
+  * a **detokenize/stream backlog thread** that drains device results into
+    per-request token streams, ``on_token`` callbacks, metrics/SLO/energy
+    bookkeeping and SSE frames — off the dispatch critical path,
+  * a **supervisor** contract: any worker exception poisons the runtime,
+    cancels in-flight requests with a terminal error state and re-raises
+    in every caller-facing API — no silent hangs.
+
+http.py is the stdlib-only HTTP/SSE front: POST submit / GET SSE stream /
+cancel endpoints with admission control against pool+adapter budgets and
+per-tenant backpressure (bounded queues, 429 + Retry-After).
+"""
+from repro.serving.runtime.http import ServingHTTPFront
+from repro.serving.runtime.runtime import (AsyncServeRuntime, RuntimePoisoned,
+                                           Ticket)
+
+__all__ = ["AsyncServeRuntime", "RuntimePoisoned", "ServingHTTPFront",
+           "Ticket"]

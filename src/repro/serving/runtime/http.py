@@ -1,0 +1,275 @@
+"""Stdlib-only HTTP/SSE front for the async serving runtime.
+
+Endpoints (JSON in/out unless noted):
+
+  POST /v1/submit          {"prompt": [ints], "max_new_tokens": n, ...}
+                           -> 200 {"uid", "state"} | 429 {"error"} (+
+                           Retry-After) when admission control or the
+                           per-tenant in-flight limit rejects | 503 when
+                           the runtime is poisoned.
+  GET  /v1/stream/<uid>    text/event-stream: one ``data: {"token": t}``
+                           frame per token, then ``data: {"done": true,
+                           "state": "...", "tokens": [...]}``.
+  POST /v1/cancel/<uid>    -> {"cancelled": bool}
+  GET  /v1/result/<uid>    block until terminal -> {"state", "tokens"}
+  GET  /metrics            Prometheus exposition (gateway registry)
+  GET  /healthz            200 "ok" | 503 "poisoned"
+  POST /v1/shutdown        -> 200, then the server stops accepting (used
+                           by the CI smoke for graceful shutdown)
+
+Backpressure is two-layered, both answered with 429 + Retry-After so
+clients can apply honest backoff:
+
+  * **admission control** — ``AsyncServeRuntime.admission_check`` screens
+    against scheduler queue depth, the KV page-pool budget, and adapter
+    servability before a request ever reaches the dispatch inbox;
+  * **per-tenant bounds** — each tenant (``"tenant"`` field, default
+    "anon") gets at most ``tenant_limit`` in-flight requests, counted on
+    accept and released via ``Ticket.add_done_callback`` — one hot tenant
+    cannot starve the pool for everyone else.
+
+``ThreadingHTTPServer`` gives each connection its own thread, so a slow
+SSE consumer only parks its own socket: tokens buffer in the Ticket (the
+backlog thread never blocks on a client)."""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional
+
+from repro.serving.api import RequestSpec, SamplingParams
+from repro.serving.runtime.runtime import AsyncServeRuntime, RuntimePoisoned
+
+_SAMPLING_FIELDS = ("temperature", "top_k", "top_p", "seed", "spec_k")
+_SPEC_FIELDS = ("max_new_tokens", "eos_id", "priority", "deadline_ms",
+                "adapter_id")
+
+
+class ServingHTTPFront:
+    """Bind the runtime to a host:port; ``start()`` serves on a daemon
+    thread, ``close()`` stops it. Port 0 picks an ephemeral port
+    (``.port`` reports the bound one — tests and CI use this)."""
+
+    def __init__(self, runtime: AsyncServeRuntime, host: str = "127.0.0.1",
+                 port: int = 8080, *, tenant_limit: int = 8,
+                 max_queue: int = 256):
+        self.runtime = runtime
+        self.tenant_limit = tenant_limit
+        self.max_queue = max_queue
+        self._tenants: Dict[str, int] = {}
+        self._tenant_lock = threading.Lock()
+        self.shutdown_requested = threading.Event()
+        front = self
+
+        class Handler(_Handler):
+            pass
+
+        Handler.front = front
+        self._server = ThreadingHTTPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        name="serve-http", daemon=True)
+
+    @property
+    def port(self) -> int:
+        return self._server.server_address[1]
+
+    def start(self) -> "ServingHTTPFront":
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._thread.join(timeout=10)
+        self._server.server_close()
+
+    def serve_until_shutdown(self, poll_s: float = 0.2) -> None:
+        """Block until POST /v1/shutdown (or runtime poison) — the
+        ``launch/serve.py --http-port`` foreground loop."""
+        while not self.shutdown_requested.wait(poll_s):
+            if self.runtime.poisoned:
+                break
+
+    # -- per-tenant backpressure --------------------------------------------
+    def _tenant_acquire(self, tenant: str) -> bool:
+        with self._tenant_lock:
+            if self._tenants.get(tenant, 0) >= self.tenant_limit:
+                return False
+            self._tenants[tenant] = self._tenants.get(tenant, 0) + 1
+            return True
+
+    def _tenant_release(self, tenant: str) -> None:
+        with self._tenant_lock:
+            n = self._tenants.get(tenant, 0) - 1
+            if n <= 0:
+                self._tenants.pop(tenant, None)
+            else:
+                self._tenants[tenant] = n
+
+    # -- request handling (runs on connection threads) ----------------------
+    def handle_submit(self, body: Dict) -> tuple:
+        rt = self.runtime
+        prompt = body.get("prompt")
+        if not isinstance(prompt, list) or not all(
+                isinstance(t, int) for t in prompt):
+            return 400, {"error": "prompt must be a list of ints"}, {}
+        tenant = str(body.get("tenant", "anon"))
+        try:
+            sampling = SamplingParams(**{k: body[k] for k in _SAMPLING_FIELDS
+                                         if body.get(k) is not None})
+            spec = RequestSpec(**{k: body[k] for k in _SPEC_FIELDS
+                                  if body.get(k) is not None})
+        except (TypeError, ValueError) as exc:
+            return 400, {"error": f"bad request options: {exc}"}, {}
+        reason = rt.admission_check(len(prompt), spec.max_new_tokens,
+                                    adapter_id=spec.adapter_id,
+                                    max_queue=self.max_queue)
+        if reason is not None:
+            rt.gw.metrics.inc("admission_rejects")
+            return 429, {"error": reason}, {"Retry-After": "1"}
+        if not self._tenant_acquire(tenant):
+            rt.gw.metrics.inc("admission_rejects")
+            return 429, {"error": f"tenant {tenant!r} at in-flight limit "
+                                  f"({self.tenant_limit})"}, {"Retry-After": "1"}
+        try:
+            ticket = rt.submit(prompt, spec=spec, sampling=sampling)
+        except RuntimePoisoned as exc:
+            self._tenant_release(tenant)
+            return 503, {"error": str(exc)}, {}
+        except Exception as exc:
+            self._tenant_release(tenant)
+            return 400, {"error": str(exc)}, {}
+        ticket.add_done_callback(lambda _t: self._tenant_release(tenant))
+        if ticket.state == "rejected":
+            rt.gw.metrics.inc("admission_rejects")
+            return 429, {"error": "engine admission rejected the request",
+                         "uid": ticket.uid}, {"Retry-After": "1"}
+        return 200, {"uid": ticket.uid, "state": ticket.state}, {}
+
+    def find_ticket(self, uid: int):
+        with self.runtime._tickets_lock:
+            return self.runtime._tickets.get(uid)
+
+
+class _Handler(BaseHTTPRequestHandler):
+    front: ServingHTTPFront = None     # bound per-front subclass
+    protocol_version = "HTTP/1.1"
+
+    # silence default stderr access log — the gateway has real metrics
+    def log_message(self, fmt, *args):  # noqa: A003
+        pass
+
+    def _json(self, code: int, payload: Dict,
+              headers: Optional[Dict] = None) -> None:
+        data = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(data)
+
+    def _text(self, code: int, text: str, ctype: str = "text/plain") -> None:
+        data = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def _read_body(self) -> Dict:
+        n = int(self.headers.get("Content-Length", 0) or 0)
+        if n <= 0:
+            return {}
+        try:
+            return json.loads(self.rfile.read(n) or b"{}")
+        except json.JSONDecodeError:
+            return {}
+
+    def _uid_from(self, prefix: str) -> Optional[int]:
+        tail = self.path[len(prefix):].split("?", 1)[0]
+        try:
+            return int(tail)
+        except ValueError:
+            return None
+
+    # -- routes --------------------------------------------------------------
+    def do_GET(self):  # noqa: N802 — BaseHTTPRequestHandler contract
+        front = self.front
+        if self.path == "/healthz":
+            if front.runtime.poisoned:
+                self._text(503, "poisoned")
+            else:
+                self._text(200, "ok")
+        elif self.path == "/metrics":
+            self._text(200, front.runtime.gw.metrics.to_prom_text(),
+                       ctype="text/plain; version=0.0.4")
+        elif self.path.startswith("/v1/stream/"):
+            self._stream(self._uid_from("/v1/stream/"))
+        elif self.path.startswith("/v1/result/"):
+            uid = self._uid_from("/v1/result/")
+            ticket = front.find_ticket(uid) if uid is not None else None
+            if ticket is None:
+                self._json(404, {"error": f"unknown uid {uid}"})
+                return
+            try:
+                toks = ticket.result(timeout=300.0)
+                self._json(200, {"state": ticket.state, "tokens": toks})
+            except RuntimePoisoned as exc:
+                self._json(503, {"error": str(exc)})
+            except TimeoutError:
+                self._json(504, {"error": "request did not finish"})
+        else:
+            self._json(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):  # noqa: N802
+        front = self.front
+        if self.path == "/v1/submit":
+            code, payload, headers = front.handle_submit(self._read_body())
+            self._json(code, payload, headers)
+        elif self.path.startswith("/v1/cancel/"):
+            uid = self._uid_from("/v1/cancel/")
+            if uid is None:
+                self._json(400, {"error": "bad uid"})
+                return
+            try:
+                ok = front.runtime.cancel(uid)
+                self._json(200, {"cancelled": bool(ok)})
+            except RuntimePoisoned as exc:
+                self._json(503, {"error": str(exc)})
+        elif self.path == "/v1/shutdown":
+            self._json(200, {"shutdown": True})
+            front.shutdown_requested.set()
+        else:
+            self._json(404, {"error": f"no route {self.path}"})
+
+    def _stream(self, uid: Optional[int]) -> None:
+        front = self.front
+        ticket = front.find_ticket(uid) if uid is not None else None
+        if ticket is None:
+            self._json(404, {"error": f"unknown uid {uid}"})
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        # SSE is open-ended: no Content-Length; close delimits the stream
+        self.send_header("Connection", "close")
+        self.end_headers()
+        try:
+            for tok in ticket.stream(timeout=120.0):
+                self.wfile.write(
+                    f"data: {json.dumps({'token': tok})}\n\n".encode())
+                self.wfile.flush()
+            final = {"done": True, "state": ticket.state,
+                     "tokens": ticket.tokens()}
+        except RuntimePoisoned as exc:
+            final = {"done": True, "state": "error", "error": str(exc)}
+        except (TimeoutError, BrokenPipeError, ConnectionError):
+            return
+        try:
+            self.wfile.write(f"data: {json.dumps(final)}\n\n".encode())
+            self.wfile.flush()
+        except (BrokenPipeError, ConnectionError):
+            pass

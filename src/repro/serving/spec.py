@@ -35,6 +35,53 @@ def quantize_width(k: int) -> int:
     return (1 << t) - 1
 
 
+class AdaptiveSpecK:
+    """Per-slot adaptive draft width from the live accept rate.
+
+    Every rejected draft token is a wasted verify-scan step, so a slot whose
+    stream stopped being repetitive should stop paying for wide buckets —
+    and re-widen the moment acceptance recovers. The controller keeps an
+    EWMA of the per-tick accept fraction (``accepted / drafted``) and maps
+    it onto the request's ``spec_k`` ceiling:
+
+        suggest(k_max) = quantize_width(clamp(round(ewma * k_max)))
+
+    The floor of 1 keeps a probe draft in flight even after a run of full
+    rejections — without it the width would latch at 0 and never observe
+    acceptance again. Widths only gate how many drafts are *risked*; the
+    accept/commit contract already guarantees rejected drafts never reach
+    storage, so adapting the width cannot change emitted tokens.
+
+    Host-side pure state — unit-testable without a model (the adaptation
+    curve is pinned in tests/test_spec_decode.py).
+    """
+    __slots__ = ("alpha", "floor", "rate", "drafted", "accepted")
+
+    def __init__(self, alpha: float = 0.3, floor: int = 1,
+                 init_rate: float = 1.0):
+        self.alpha = alpha
+        self.floor = floor
+        self.rate = init_rate     # optimistic start: first tick drafts full
+        self.drafted = 0
+        self.accepted = 0
+
+    def observe(self, drafted: int, accepted: int) -> None:
+        """Fold one verify tick's outcome into the EWMA."""
+        if drafted <= 0:
+            return
+        self.drafted += drafted
+        self.accepted += accepted
+        self.rate += self.alpha * (accepted / drafted - self.rate)
+
+    def suggest(self, k_max: int) -> int:
+        """Draft width to risk next tick, quantized like every other width
+        (1, 3, 7, 15) and clamped to [floor, k_max]."""
+        if k_max <= 0:
+            return 0
+        k = int(round(self.rate * k_max))
+        return quantize_width(max(min(k, k_max), self.floor))
+
+
 def cycle_propose(history: Sequence[int], k: int, max_period: int = 3,
                   min_reps: int = 3) -> List[int]:
     """Draft ``k`` tokens by extrapolating a short cycle in the tail.

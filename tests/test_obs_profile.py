@@ -288,3 +288,68 @@ class TestEngineIntegration:
         rep = gw.slo_report()
         assert rep["violations_total"] >= 1
         assert rep["requests_closed"] == len(reqs)
+
+
+class TestThreadedDispatch:
+    """Observability correctness under the async runtime's thread model:
+    the compile watch must attribute compiles race-free across threads, and
+    the engine's host-gap probe must never count cross-thread wall time."""
+
+    def test_compile_watch_concurrent_single_attribution(self):
+        import threading
+        from repro.serving.obs import CompileWatch
+
+        calls = []
+        fn = jax.jit(lambda x: x * 2)
+        watch = CompileWatch(fn, "mul2",
+                             on_compile=lambda n, s: calls.append((n, s)))
+        xs = [jnp.ones((4,)), jnp.ones((8,)), jnp.ones((16,))]
+        barrier = threading.Barrier(8)
+
+        def worker():
+            barrier.wait()
+            for x in xs * 5:
+                watch(x)
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        # exactly one compile per distinct shape signature, no matter how
+        # the 8 threads interleaved (the old cache-size diff miscounted here)
+        assert watch.compiles == len(xs)
+        assert len(calls) == len(xs)
+        assert len({s for _n, s in calls}) == len(xs)
+
+    def test_dispatch_gap_is_per_thread(self, profiled_run):
+        """A dispatch issued from a different thread than the previous one
+        must re-arm the gap clock, not record the cross-thread interval."""
+        import threading
+        import time as _time
+        gw, _prof, _reqs = profiled_run
+        eng = gw.engine
+        eng._t_dev_end = _time.perf_counter() - 10.0   # 10 s ago, main thread
+        eng._dispatch_tid = threading.get_ident()
+        before_idle = eng.stats.tick_gap_ms_sum
+        before_overlap = eng.stats.tick_gap_overlap_ms_sum
+        out = {}
+
+        def other_thread():
+            out["r"] = eng._dispatch(lambda: 1)
+        t = threading.Thread(target=other_thread)
+        t.start()
+        t.join(timeout=30)
+        assert out["r"] == 1
+        # the 10 s cross-thread gap is NOT attributed to either ledger
+        assert eng.stats.tick_gap_ms_sum == before_idle
+        assert eng.stats.tick_gap_overlap_ms_sum == before_overlap
+        # …but a same-thread follow-up records a (small) gap again
+        def same_thread_twice():
+            eng._dispatch(lambda: 1)
+            eng._dispatch(lambda: 2)
+        t2 = threading.Thread(target=same_thread_twice)
+        t2.start()
+        t2.join(timeout=30)
+        gained = (eng.stats.tick_gaps + eng.stats.tick_gaps_overlap)
+        assert gained > 0

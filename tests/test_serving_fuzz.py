@@ -32,6 +32,7 @@ carries the seed, so a red run reproduces with
 ``FUZZ_SEED=<n> pytest tests/test_serving_fuzz.py``.
 """
 import os
+import threading
 import time
 
 import jax
@@ -41,8 +42,8 @@ import pytest
 from repro.configs.base import get_config
 from repro.launch.train import reduce_config
 from repro.models.transformer import Model
-from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
-                           ServeEngine)
+from repro.serving import (AsyncServeRuntime, DenseKV, PagedKV, RequestSpec,
+                           RuntimePoisoned, SamplingParams, ServeEngine)
 from repro.serving.adapters import (AdapterRegistry, AdapterServing,
                                     AdapterSpec, synthetic_adapter_stacks)
 from repro.serving.gateway import Gateway
@@ -339,3 +340,143 @@ class TestServingFuzz:
             _slo_invariants(gw, reqs)
         _terminal_invariants(reqs)
         _slo_invariants(gw, reqs)
+
+class TestAsyncServingFuzz:
+    """The same invariant battery, driven through the async runtime: client
+    threads submit / stream / cancel concurrently against the dispatch
+    thread, and the structural invariants are asserted at every quiescent
+    point (the engine is owned by the dispatch thread, so checks run after
+    ``drain`` — when the pipeline is settled — rather than per tick)."""
+
+    def _stack(self, model_params, registry):
+        model, params = model_params
+        nbytes = registry.get("tenant-0").nbytes
+        adapters = AdapterServing(model, registry, budget_bytes=nbytes * 2,
+                                  max_resident=2)
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=PagedKV(page=PAGE, n_pages=N_PAGES),
+                          prefix_cache=True, seed=SEED, spec_decode=True,
+                          scheduler=EDFCheckingScheduler(),
+                          adapters=adapters)
+        return eng, Gateway(eng)
+
+    @staticmethod
+    def _no_leaks(eng):
+        trie = len({nd.page_id for nd in eng.prefix.nodes.values()}) \
+            if eng.prefix is not None else 0
+        check(eng.pool.pages_free + trie == N_PAGES,
+              f"page leak: free={eng.pool.pages_free} trie={trie} "
+              f"!= {N_PAGES}")
+        if eng.adapters is not None:
+            pins = dict(eng.adapters.cache._pins)
+            check(all(v == 0 for v in pins.values()),
+                  f"adapter pins leaked after drain: {pins}")
+
+    def test_async_multiclient_stress(self, model_params, registry):
+        eng, gw = self._stack(model_params, registry)
+        prefixes = [list(np.random.default_rng(SEED).integers(
+            0, 50, size=2 * PAGE)) for _ in range(2)]
+        all_tickets = []
+        streamed = {}     # ticket -> tokens the client thread saw live
+        lock = threading.Lock()
+
+        def client(rt, cid, rnd):
+            crng = np.random.default_rng(SEED * 1000 + rnd * 10 + cid)
+            for _ in range(3):
+                try:
+                    tk = rt.submit(_random_prompt(crng, prefixes),
+                                   _random_spec(crng, 0),
+                                   _random_sampling(crng), timeout=60)
+                except RuntimePoisoned:
+                    return
+                with lock:
+                    all_tickets.append(tk)
+                roll = crng.random()
+                if roll < 0.45:
+                    got = list(tk.stream(timeout=120))
+                    with lock:
+                        streamed[id(tk)] = (tk, got)
+                elif roll < 0.65 and tk.req is not None:
+                    time.sleep(float(crng.random()) * 0.02)
+                    rt.cancel(tk.req.uid, timeout=60)
+                # else: fire and forget — backlog thread still finishes it
+
+        with AsyncServeRuntime(gw, depth=1) as rt:
+            for rnd in range(3):
+                threads = [threading.Thread(target=client,
+                                            args=(rt, cid, rnd), daemon=True)
+                           for cid in range(4)]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join(timeout=300)
+                check(not any(t.is_alive() for t in threads),
+                      "client thread hung")
+                rt.drain(timeout=300)
+                # quiescent point: pipeline settled, inbox/backlog empty
+                reqs = [t.req for t in all_tickets if t.req is not None]
+                _page_invariants(eng)
+                _adapter_invariants(eng)
+                _metrics_invariants(gw, reqs)
+                _slo_invariants(gw, reqs)
+        check(len(all_tickets) >= 20, "stream produced too few requests")
+        for tk in all_tickets:
+            check(tk.terminal, f"ticket for uid "
+                  f"{tk.req.uid if tk.req else '?'} not terminal after close")
+            check(tk.state in TERMINAL,
+                  f"ticket state {tk.state!r} unexpected without poison")
+        # a consumed stream saw exactly the tokens the request emitted
+        for tk, got in streamed.values():
+            check(got == list(tk.req.output),
+                  f"stream for uid {tk.req.uid} saw {got} but request "
+                  f"recorded {tk.req.output}")
+        _terminal_invariants([t.req for t in all_tickets
+                              if t.req is not None])
+        self._no_leaks(eng)
+
+    def test_async_crash_recovery_no_leaks(self, model_params, registry):
+        """Poison the dispatch thread mid-stream: every ticket must reach a
+        terminal error state, every page / pin / queue entry must be
+        released, and the fault must re-raise in the submit API."""
+        eng, gw = self._stack(model_params, registry)
+        rt = AsyncServeRuntime(gw, depth=1).start()
+        crng = np.random.default_rng(SEED + 7)
+        tickets = []
+        for i in range(6):
+            spec = RequestSpec(max_new_tokens=64,
+                               adapter_id=f"tenant-{i % 2}" if i % 2 else None)
+            tickets.append(rt.submit(
+                list(crng.integers(0, 50, size=5)), spec,
+                SamplingParams(), timeout=60))
+        deadline = time.monotonic() + 60
+        while (not any(t.tokens() for t in tickets)
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        fault = RuntimeError("fuzz-injected device fault")
+        orig = eng._sampling_vectors
+
+        def boom(*a, **kw):
+            raise fault
+        eng._sampling_vectors = boom
+        deadline = time.monotonic() + 60
+        while not rt.poisoned and time.monotonic() < deadline:
+            time.sleep(0.01)
+        eng._sampling_vectors = orig
+        check(rt.poisoned, "runtime never observed the injected fault")
+        rt._dispatch_thread.join(timeout=30)
+        rt._backlog_thread.join(timeout=30)
+        for tk in tickets:
+            check(tk.terminal, "ticket left non-terminal after poison")
+            check(tk.state in TERMINAL + ("error",),
+                  f"unexpected post-poison ticket state {tk.state!r}")
+        check(any(tk.state == "error" for tk in tickets),
+              "no ticket carries the terminal error state")
+        check(all(r is None for r in eng.slot_req), "slot leaked after poison")
+        check(len(eng.scheduler) == 0, "queue entry leaked after poison")
+        check(len(eng._pending) == 0, "pipeline tick leaked after poison")
+        self._no_leaks(eng)
+        with pytest.raises(RuntimePoisoned) as ei:
+            rt.submit([1, 2, 3])
+        check(ei.value.cause is fault, "poison lost the original exception")
+        rt.close(raise_on_poison=False)

@@ -23,8 +23,9 @@ from repro.models.transformer import Model
 from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
                            ServeEngine)
 from repro.serving.gateway import Gateway
-from repro.serving.spec import (accepted_prefix, cycle_propose, ngram_propose,
-                                plan_emit, propose, quantize_width)
+from repro.serving.spec import (AdaptiveSpecK, accepted_prefix,
+                                cycle_propose, ngram_propose, plan_emit,
+                                propose, quantize_width)
 
 jax.config.update("jax_enable_x64", False)
 
@@ -353,3 +354,57 @@ class TestSpecHelpers:
     def test_quantize_width(self):
         assert [quantize_width(k) for k in range(-1, 9)] == \
             [0, 0, 1, 1, 3, 3, 3, 3, 7, 7]
+
+
+class TestAdaptiveSpecK:
+    """Pinned adaptation curve of the per-slot draft-width controller —
+    pure host-side math, no model."""
+
+    def test_optimistic_start_then_narrow_on_rejection(self):
+        a = AdaptiveSpecK()                 # alpha=0.3, init_rate=1.0
+        assert a.suggest(7) == 7            # first tick risks the ceiling
+        # pinned EWMA trajectory under total rejection: rate *= 0.7 per tick
+        widths = []
+        for _ in range(6):
+            a.observe(drafted=7, accepted=0)
+            widths.append(a.suggest(7))
+        # rate: .7 .49 .343 .240 .168 .118 → k: 5 3 2 2 1 1 → quantized
+        assert widths == [3, 3, 1, 1, 1, 1]
+        # the floor keeps one probe draft alive even after a long dry run
+        for _ in range(50):
+            a.observe(drafted=1, accepted=0)
+        assert a.suggest(7) == 1
+
+    def test_rewidens_when_acceptance_recovers(self):
+        a = AdaptiveSpecK()
+        for _ in range(10):
+            a.observe(drafted=7, accepted=0)
+        assert a.suggest(7) == 1
+        widths = []
+        for _ in range(8):
+            a.observe(drafted=1, accepted=1)   # stream turned repetitive
+            widths.append(a.suggest(7))
+        # monotone recovery back to the ceiling, through the 1/3/7 buckets
+        assert widths == sorted(widths)
+        assert widths[-1] == 7
+
+    def test_suggest_clamps_to_request_ceiling(self):
+        a = AdaptiveSpecK()
+        assert a.suggest(3) == 3
+        assert a.suggest(0) == 0            # spec disabled for this request
+        a.observe(drafted=4, accepted=2)    # rate 0.85
+        assert a.suggest(15) == 7           # round(12.75)=13 → bucket 7
+        assert a.suggest(3) == 3
+
+    def test_zero_draft_tick_is_a_noop(self):
+        a = AdaptiveSpecK()
+        r0 = a.rate
+        a.observe(drafted=0, accepted=0)
+        assert a.rate == r0 and a.drafted == 0
+
+    def test_engine_clamps_adaptive_width_to_sampling_spec_k(self):
+        """The controller can only narrow, never exceed, the request's
+        spec_k — the engine takes min(k, suggest(spec_k))."""
+        a = AdaptiveSpecK(init_rate=5.0)     # pathological: EWMA above 1
+        assert a.suggest(3) <= 3
+        assert a.suggest(7) <= 7
