@@ -265,6 +265,81 @@ def _bursty_scenario(model, params, quick):
     return best_sync, best_async, round(ratio, 4)
 
 
+def _sharded_scenario(model, params, quick):
+    """Sharded-serving A/B: cold start (every prompt-length bucket compiles
+    on first hit, mid-serving) vs AOT bucket warmup (all compiles paid up
+    front) on the same engine config, plus a 2-replica routed fleet leg.
+    Recompile stalls are the ``jit_compiles`` counter — the warmed leg
+    asserts it to exactly 0, which is the number the warmup sells. The
+    routed leg runs both replicas on the host platform, so it measures
+    router/runtime overhead and placement accounting, not parallel
+    speedup."""
+    from repro.serving import (AsyncServeRuntime, PagedKV, ReplicaRouter,
+                               RequestSpec, ServeEngine)
+    from repro.serving.gateway import Gateway
+
+    n_req = 6 if quick else 12
+    max_new = 4 if quick else 8
+    rng = np.random.default_rng(21)
+    specs = [(list(rng.integers(0, 1000, size=int(rng.integers(4, 56)))),
+              RequestSpec(max_new_tokens=max_new))
+             for _ in range(n_req)]
+
+    def build():
+        return ServeEngine(model, params, max_slots=2, max_len=64,
+                           prefill="batched", kv=PagedKV(page=8))
+
+    def leg(warm):
+        eng = build()
+        t_warm, info = 0.0, None
+        if warm:
+            t0 = time.time()
+            info = eng.warmup_aot(max_prompt_len=64)
+            t_warm = time.time() - t0
+        gw = Gateway(eng)
+        t0 = time.time()
+        reqs = [gw.submit(p, s) for p, s in specs]
+        gw.run_until_drained()
+        st = eng.stats
+        out = {"completed": sum(q.state == "done" for q in reqs),
+               "tokens": int(st.tokens_out),
+               "jit_compiles": int(st.jit_compiles),
+               "serve_s": round(time.time() - t0, 3),
+               "warmup_s": round(t_warm, 3)}
+        if warm:
+            out["aot_executables"] = int(info["aot_executables"])
+            out["warmup_compiles"] = int(st.warmup_compiles)
+            out["aot_fallbacks"] = int(st.aot_fallbacks)
+        return out
+
+    cold = leg(False)
+    warmed = leg(True)
+    assert warmed["jit_compiles"] == 0, warmed
+    assert cold["jit_compiles"] > 0, cold        # positive control
+
+    engs = [build() for _ in range(2)]
+    for e in engs:
+        e.warmup_aot(max_prompt_len=64)
+    router = ReplicaRouter([AsyncServeRuntime(Gateway(e), depth=1)
+                            for e in engs])
+    with router:
+        t0 = time.time()
+        tickets = [router.submit(p, spec=s, timeout=120) for p, s in specs]
+        router.drain(timeout=300)
+        wall = time.time() - t0
+    fleet = router.gw.metrics.to_dict()["fleet"]["counters"]
+    routed = {"completed": sum(t.state == "done" for t in tickets),
+              "tokens": int(sum(e.stats.tokens_out for e in engs)),
+              "jit_compiles": int(sum(e.stats.jit_compiles for e in engs)),
+              "requests_routed": int(fleet.get("requests_routed", 0)),
+              "replicas": 2,
+              "serve_s": round(wall, 3)}
+    # per-replica split is timing-dependent (least-loaded) — print, don't gate
+    print("[bench_serving] routed split:",
+          {k: v for k, v in fleet.items() if k.startswith("routed")})
+    return cold, warmed, routed
+
+
 def _attribution_scenario(model, params, quick):
     """Profiled leg: its own engine + gateway so the blocked dispatches and
     one-off AOT cost captures the profiler needs never perturb the timed A/B
@@ -433,6 +508,24 @@ def run(quick: bool = False, kv_backend: str = "both",
     r.row("bursty/async/tbt_p95_ms", b_async["tbt_p95_ms"],
           "inter-token p95 through the backlog thread")
 
+    # -- sharded A/B: cold bucket compiles vs AOT warmup + routed fleet --------
+    sh_cold, sh_warm, sh_routed = _sharded_scenario(model, params, quick)
+    results["sharded/cold"] = sh_cold
+    results["sharded/warmed"] = sh_warm
+    results["sharded/routed2"] = sh_routed
+    r.row("sharded/cold/jit_compiles", sh_cold["jit_compiles"],
+          "graphs compiled mid-serving — each one a recompile stall")
+    r.row("sharded/warmed/jit_compiles", sh_warm["jit_compiles"],
+          "after AOT bucket warmup — asserted == 0")
+    r.row("sharded/warmed/aot_executables", sh_warm["aot_executables"],
+          "prefill buckets compiled ahead of time")
+    r.row("sharded/warmed/warmup_s", sh_warm["warmup_s"],
+          "one-off AOT warmup wall (paid before serving)")
+    r.row("sharded/routed2/completed", sh_routed["completed"],
+          "2-replica fleet behind the prefix-aware router")
+    r.row("sharded/routed2/jit_compiles", sh_routed["jit_compiles"],
+          "fleet-wide recompiles with per-replica warmup — asserted == 0")
+
     # perf-trajectory artifact: stable keys, TPS + TTFT p50/p95 per backend
     # + the adversary A/B (inter-token p95 must be lower chunked) + the
     # spec-decode A/B (TPS + accept rate; greedy outputs token-identical)
@@ -440,7 +533,7 @@ def run(quick: bool = False, kv_backend: str = "both",
         name: {"tps": w["tps"], "ttft_p50_ms": w["ttft_p50_ms"],
                "ttft_p95_ms": w["ttft_p95_ms"], "completed": w["completed"]}
         for name, w in results.items()
-        if not name.startswith(("adversary/", "spec/", "bursty/"))
+        if not name.startswith(("adversary/", "spec/", "bursty/", "sharded/"))
     }
     bench_out["adversary/unchunked"] = results["adversary/unchunked"]
     bench_out["adversary/chunked"] = dict(
@@ -452,6 +545,9 @@ def run(quick: bool = False, kv_backend: str = "both",
     bench_out["bursty/sync"] = b_sync
     bench_out["bursty/async"] = b_async
     bench_out["bursty/overhead_ratio"] = b_ratio
+    bench_out["sharded/cold"] = sh_cold
+    bench_out["sharded/warmed"] = sh_warm
+    bench_out["sharded/routed2"] = sh_routed
     # observability: per-phase tick breakdown + dispatch-gap + energy gauges
     # from the unique leg (the open-loop workload; Prometheus copies of the
     # same registry land under artifacts/serving_metrics_<backend>.prom)

@@ -40,7 +40,11 @@ NOISY_LEAVES = ("wall_s", "wall_us", "mean_ms", "total_s", "p50_ms", "p95_ms",
                 # pure wall products of a loaded 2-core host (the <= 0.5
                 # ratio gate lives in CI, not in the drift comparison)
                 "overhead_ratio", "overlap_gap_ms", "tbt_p95_ms",
-                "ttft_p95_ms")
+                "ttft_p95_ms",
+                # sharded A/B: serving and one-off warmup walls are noisy;
+                # the compile counters (jit_compiles, aot_executables) and
+                # work counters stay deterministic and still compare
+                "serve_s", "warmup_s")
 
 
 def _git_show(path: str) -> Dict | None:

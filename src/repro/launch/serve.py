@@ -43,8 +43,9 @@ from repro.ckpt import checkpoint as ckpt_mod
 from repro.configs.base import get_config
 from repro.launch.train import reduce_config
 from repro.models.transformer import Model
-from repro.serving import (DenseKV, PagedKV, RequestSpec, SamplingParams,
-                           ServeEngine)
+from repro.serving import (DenseKV, PagedKV, ReplicaRouter, RequestSpec,
+                           SamplingParams, ServeEngine, replica_meshes,
+                           shard_engine)
 from repro.serving.gateway import Gateway
 
 
@@ -126,6 +127,19 @@ def main(argv=None) -> int:
                          "ahead; outputs token-identical to the sync loop)")
     ap.add_argument("--async-depth", type=int, default=1,
                     help="device-ahead pipeline depth for --async")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve this many engine replicas behind the "
+                         "prefix-cache-aware router (each replica gets its "
+                         "own (data=1, model=--tp) submesh, KV pool and "
+                         "dispatch thread; implies the async runtime)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-parallel lanes per replica (devices must "
+                         "divide; 1 on a single-device host)")
+    ap.add_argument("--aot-warmup", action="store_true",
+                    help="AOT-compile the prefill length buckets "
+                         "(lower().compile() per pow2 bucket) and pre-trace "
+                         "decode/sample/verify before serving — steady-state "
+                         "jit_compiles stays 0 (asserted by the CI smoke)")
     ap.add_argument("--http-port", type=int, default=None,
                     help="serve an HTTP/SSE front on this port instead of "
                          "the synthetic request stream (implies --async; "
@@ -187,44 +201,85 @@ def main(argv=None) -> int:
     if args.profile_out:
         from repro.serving.obs import ProfileRegistry
         profiler = ProfileRegistry()
-    eng = build_engine(args.arch, args.preset, slots=args.slots,
-                       max_len=args.max_len, prefill=args.prefill,
-                       prefill_chunk=args.prefill_chunk,
-                       ckpt_dir=args.ckpt_dir, seed=args.seed, kv=args.kv,
-                       page=args.page, n_pages=args.n_pages,
-                       prefix_cache=args.prefix_cache, spec_k=args.spec_k,
-                       spec_adaptive=args.spec_adaptive,
-                       n_adapters=args.adapters,
-                       adapter_rank=args.adapter_rank,
-                       adapter_budget_kb=args.adapter_budget_kb,
-                       tracer=tracer, profiler=profiler)
-    gw = Gateway(eng)
+    n_rep = max(1, args.replicas)
+    sharded = n_rep > 1 or args.tp > 1
+    meshes = replica_meshes(n_rep, tp=args.tp) if sharded else [None]
+    engines, warmups = [], []
+    for mesh in meshes:
+        e = build_engine(args.arch, args.preset, slots=args.slots,
+                         max_len=args.max_len, prefill=args.prefill,
+                         prefill_chunk=args.prefill_chunk,
+                         ckpt_dir=args.ckpt_dir, seed=args.seed, kv=args.kv,
+                         page=args.page, n_pages=args.n_pages,
+                         prefix_cache=args.prefix_cache, spec_k=args.spec_k,
+                         spec_adaptive=args.spec_adaptive,
+                         n_adapters=args.adapters,
+                         adapter_rank=args.adapter_rank,
+                         adapter_budget_kb=args.adapter_budget_kb,
+                         tracer=tracer if not engines else None,
+                         profiler=profiler if not engines else None)
+        if mesh is not None:
+            shard_engine(e, mesh)
+        if args.aot_warmup:
+            info = e.warmup_aot(
+                max_prompt_len=args.shared_prefix + args.prompt_len)
+            warmups.append(info)
+            print(f"[serve] replica {len(engines)}: AOT warmup — "
+                  f"{info['aot_executables']} prefill executables, "
+                  f"{info['jit_warmed']} jit traces in {info['wall_s']:.2f}s",
+                  flush=True)
+        engines.append(e)
+    eng = engines[0]
+    gws = [Gateway(e) for e in engines]
+    gw = gws[0]
     if args.prom_out:
         gw.prom_out = args.prom_out
         gw.prom_every = args.prom_every
+
+    def warmup_blob():
+        return {
+            "aot_executables": sum(w["aot_executables"] for w in warmups),
+            "jit_warmed": sum(w["jit_warmed"] for w in warmups),
+            "compiles": sum(w["compiles"] for w in warmups),
+            "wall_s": round(sum(w["wall_s"] for w in warmups), 3),
+        }
 
     if args.http_port is not None:
         # front-door mode: no synthetic stream — serve HTTP/SSE until a
         # client POSTs /v1/shutdown (the CI smoke's graceful-stop path)
         from repro.serving.runtime import AsyncServeRuntime, ServingHTTPFront
-        rt = AsyncServeRuntime(gw, depth=args.async_depth).start()
-        front = ServingHTTPFront(rt, port=args.http_port).start()
+        rts = [AsyncServeRuntime(g, depth=args.async_depth) for g in gws]
+        if n_rep > 1:
+            runtime = ReplicaRouter(rts).start()
+            metrics_blob = runtime.gw.metrics.to_dict
+        else:
+            runtime = rts[0].start()
+            metrics_blob = gw.metrics_dict
+        front = ServingHTTPFront(runtime, port=args.http_port).start()
         print(f"[serve] http/sse front on 127.0.0.1:{front.port} "
-              f"(async depth {args.async_depth})", flush=True)
+              f"({n_rep} replica(s), async depth {args.async_depth})",
+              flush=True)
         try:
             front.serve_until_shutdown()
         finally:
             front.close()
-            rt.close(raise_on_poison=False)
-        out = {"completed": eng.stats.completed,
-               "tokens_out": eng.stats.tokens_out,
-               "poisoned": rt.poisoned,
+            for rt in rts:
+                rt.close(raise_on_poison=False)
+        out = {"replicas": n_rep,
+               "completed": sum(e.stats.completed for e in engines),
+               "tokens_out": sum(e.stats.tokens_out for e in engines),
+               "jit_compiles": sum(e.stats.jit_compiles for e in engines),
+               "poisoned": runtime.poisoned,
                "tick_host_overhead_frac": round(
                    eng.stats.host_overhead_frac, 4),
                "energy": gw.energy.gauges(),
-               "metrics": gw.metrics_dict()}
+               "metrics": metrics_blob()}
+        if args.aot_warmup:
+            out["warmup"] = warmup_blob()
+            out["warmup_compiles"] = sum(
+                e.stats.warmup_compiles for e in engines)
         print("[serve]", json.dumps(out))
-        return 1 if rt.poisoned else 0
+        return 1 if runtime.poisoned else 0
 
     rng = np.random.default_rng(args.seed)
     vocab = eng.cfg.vocab_size
@@ -245,7 +300,19 @@ def main(argv=None) -> int:
             SamplingParams(temperature=args.temperature, top_p=args.top_p,
                            spec_k=args.spec_k)))
 
-    if args.async_runtime:
+    router = None
+    if n_rep > 1:
+        from repro.serving.runtime import AsyncServeRuntime
+        t0 = time.time()
+        with ReplicaRouter([AsyncServeRuntime(g, depth=args.async_depth)
+                            for g in gws]) as router:
+            tickets = [router.submit(p, spec=s, sampling=sp)
+                       for p, s, sp in workload]
+            router.drain()
+            reqs = [t.req for t in tickets]
+        wall = time.time() - t0
+        stats = eng.stats
+    elif args.async_runtime:
         from repro.serving.runtime import AsyncServeRuntime
         t0 = time.time()
         with AsyncServeRuntime(gw, depth=args.async_depth) as rt:
@@ -280,6 +347,18 @@ def main(argv=None) -> int:
         "energy": gw.energy.gauges(),
         "metrics": gw.metrics_dict(),
     }
+    if args.aot_warmup:
+        out["warmup"] = warmup_blob()
+        out["warmup_compiles"] = sum(e.stats.warmup_compiles
+                                     for e in engines)
+        out["aot_fallbacks"] = sum(e.stats.aot_fallbacks for e in engines)
+    if router is not None:
+        out["replicas"] = n_rep
+        out["completed"] = sum(e.stats.completed for e in engines)
+        out["tokens_out"] = sum(e.stats.tokens_out for e in engines)
+        out["throughput_tps"] = round(out["tokens_out"] / wall, 1)
+        out["jit_compiles"] = sum(e.stats.jit_compiles for e in engines)
+        out["routing"] = router.gw.metrics.to_dict()["fleet"]["counters"]
     if args.spec_k:
         out["spec"] = {"drafted": stats.spec_drafted,
                        "accepted": stats.spec_accepted,

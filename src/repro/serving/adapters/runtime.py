@@ -81,8 +81,20 @@ class AdapterServing:
         return out
 
     # -- residency lifecycle ---------------------------------------------------
+    # Cache keys are *version-resolved* ("tenant@v2"): a hot-swap
+    # (re-register) creates a distinct cache entry, so requests pinned on the
+    # old version keep their weights while new placements load the new one —
+    # both versions can be resident at once if the budget allows, and the old
+    # entry becomes LRU-evictable the moment its last pin drops.
+    def _vkey(self, adapter_id: str) -> str:
+        """Cache key of the adapter's *latest* registered version."""
+        return f"{adapter_id}@v{self.registry.get(adapter_id).version}"
+
     def is_resident(self, adapter_id: str) -> bool:
-        return self.cache.is_resident(adapter_id)
+        """Affinity predicate: is the *latest* version already on device?"""
+        if adapter_id not in self.registry:
+            return False
+        return self.cache.is_resident(self._vkey(adapter_id))
 
     def servable(self, adapter_id: Optional[str]) -> bool:
         """Static half of admission: registered and small enough to *ever*
@@ -100,22 +112,41 @@ class AdapterServing:
         if adapter_id not in self.registry:
             return False
         entry = self.registry.get(adapter_id)
-        return self.cache.can_admit(adapter_id, entry.nbytes)
+        return self.cache.can_admit(self._vkey(adapter_id), entry.nbytes)
 
-    def acquire(self, adapter_id: str) -> int:
-        """Pin ``adapter_id`` for an in-flight request, loading (and evicting
-        LRU unpinned residents) if cold. Returns the device slot index."""
+    def acquire_versioned(self, adapter_id: str) -> "tuple[int, str]":
+        """Pin the adapter's latest version for an in-flight request, loading
+        (and evicting LRU unpinned residents) if cold. Returns the device
+        slot index plus the version-resolved cache key — callers release
+        exactly that key, so a mid-stream re-register never steals the
+        weights out from under a running request."""
         entry = self.registry.get(adapter_id)
-        slot = self.cache.lookup(adapter_id)
+        key = f"{adapter_id}@v{entry.version}"
+        slot = self.cache.lookup(key)
         if slot is None:
-            slot, _ = self.cache.admit(adapter_id, entry.nbytes)
+            slot, _ = self.cache.admit(key, entry.nbytes)
             self._upload(entry, slot)
             self.version += 1
-        self.cache.pin(adapter_id)
-        return slot
+        self.cache.pin(key)
+        return slot, key
+
+    def acquire(self, adapter_id: str) -> int:
+        return self.acquire_versioned(adapter_id)[0]
+
+    def release_key(self, key: str) -> None:
+        """Unpin a version-resolved key from `acquire_versioned`."""
+        self.cache.unpin(key)
+
+    def pinned(self, adapter_id: str) -> bool:
+        """Is *any* version of this adapter pinned by an in-flight request?
+        (Invariant checks shouldn't care which version a request rode.)"""
+        prefix = f"{adapter_id}@v"
+        return any(n > 0 for k, n in self.cache._pins.items()
+                   if k.startswith(prefix))
 
     def release(self, adapter_id: str) -> None:
-        self.cache.unpin(adapter_id)
+        """Legacy unpin by bare id (targets the latest version's entry)."""
+        self.cache.unpin(self._vkey(adapter_id))
 
     def _upload(self, entry: FrozenAdapter, slot: int) -> None:
         if entry.n_layers != self.n_layers:

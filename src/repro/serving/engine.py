@@ -133,6 +133,29 @@ def _prefill_jits(model):
     return fns
 
 
+class _AotCall:
+    """An ahead-of-time compiled executable behind the dispatch interface.
+
+    ``name``/``last_compiled`` mirror `CompileWatch`, so `_dispatch`'s
+    profiler probe attributes wall time to the same record
+    `ProfileRegistry.register_compiled` created at warmup and never flags
+    the call as a compile. ``drop`` names argument positions that were
+    static at lower time — an AOT executable is called *without* its baked
+    statics, while the jit path the caller may fall back to still wants
+    them, so both paths share one argument tuple."""
+    __slots__ = ("_compiled", "name", "last_compiled", "_drop")
+
+    def __init__(self, compiled, name: str, drop=()):
+        self._compiled = compiled
+        self.name = name
+        self.last_compiled = False
+        self._drop = frozenset(drop)
+
+    def __call__(self, *args, **kwargs):
+        live = [a for i, a in enumerate(args) if i not in self._drop]
+        return self._compiled(*live, **kwargs)
+
+
 @dataclasses.dataclass
 class Request:
     """A submitted request: the immutable `RequestSpec`/`SamplingParams`
@@ -240,6 +263,11 @@ class EngineStats:
     tick_gaps_overlap: int = 0
     tick_wall_ms_sum: float = 0.0  # total tick() wall time (gap denominator)
     jit_compiles: int = 0         # jit cache growth events (CompileWatch)
+    warmup_compiles: int = 0      # executables built ahead of traffic by
+                                  # warmup_aot (jit_compiles resets to 0 after
+                                  # warmup, so serve-time recompiles stand out)
+    aot_fallbacks: int = 0        # AOT prefill calls that fell back to the
+                                  # jit path on an input-placement mismatch
 
     @property
     def tps(self) -> float:
@@ -337,7 +365,8 @@ class ServeEngine:
                  spec_decode: bool = False, spec_ngram: int = 3,
                  spec_adaptive: bool = False,
                  scheduler=None, adapters=None,
-                 tracer: Optional[Tracer] = None, profiler=None):
+                 tracer: Optional[Tracer] = None, profiler=None,
+                 donate_decode_state: bool = False):
         assert model.mode in ("serve", "qlora")
         assert prefill_chunk is None or prefill_chunk >= 1, \
             "prefill_chunk must be >= 1 tokens (or None for monolithic prefill)"
@@ -402,6 +431,10 @@ class ServeEngine:
 
         self.pos = np.zeros((max_slots,), np.int32)       # next write position
         self.slot_adapter = np.zeros((max_slots,), np.int32)  # device slot (0=none)
+        # version-pinned adapter cache key per slot: a hot-swap (re-register)
+        # mid-stream must not steal an in-flight request's weights, so the
+        # slot releases exactly the version it acquired
+        self.slot_adapter_key: List[Optional[str]] = [None] * max_slots
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.pending_prompt: List[List[int]] = [[] for _ in range(max_slots)]
         # chunked-prefill state machine: a slot with a non-empty todo list is
@@ -444,6 +477,15 @@ class ServeEngine:
         self._tick_gap_ms: Optional[float] = None  # gap observed this tick
         self._last_verify_width = 1
         self._prefill_watch = None
+        # AOT prefill executables by (kind, token-bucket, has-adapter-idx):
+        # warmup_aot fills this with `.lower(...).compile()` products (the
+        # maxtext offline_inference warmup idiom) and _prefill_span prefers
+        # them over the jit path — a served bucket never trips a trace-time
+        # compile stall. Empty until warmup runs; always safe to ignore.
+        self._cached_pref: Dict[Tuple, _AotCall] = {}
+        # sharded serving (serving/sharded.py) stamps the replica's Mesh here
+        # after device_put-ing params/pool; None = single-device placement
+        self.mesh = None
 
         def _watch(fn, name):
             return CompileWatch(fn, name, self.trace,
@@ -454,7 +496,14 @@ class ServeEngine:
         # Every jitted entry point rides a CompileWatch: cache growth bumps
         # stats.jit_compiles and emits a jit_compile instant naming the
         # offending shape bucket (recompile stalls become visible in-trace).
-        self._decode = _watch(jax.jit(self._decode_fn), "decode_step")
+        # donate_decode_state buys the decode step its input KV buffers
+        # (state is replaced wholesale by commit(), so the engine never
+        # reads a donated buffer again) — halves decode's transient KV
+        # footprint, the enabler for serving max_len-sized pools per replica.
+        decode_jit = (jax.jit(self._decode_fn, donate_argnames=("kv_state",))
+                      if donate_decode_state else jax.jit(self._decode_fn))
+        self.donate_decode_state = donate_decode_state
+        self._decode = _watch(decode_jit, "decode_step")
         self._sample = _watch(jax.jit(self._sample_fn,
                                       static_argnames=("use_topp",
                                                        "use_seeds")),
@@ -694,6 +743,177 @@ class ServeEngine:
         self.stats.wall_s += time.time() - t0
         return self.stats
 
+    # -- AOT bucket warmup -----------------------------------------------------
+    def warmup_aot(self, *, max_prompt_len: Optional[int] = None,
+                   spec_widths: Tuple[int, ...] = (1, 3, 7, 15),
+                   resume_starts=(), profiler=None) -> Dict[str, Any]:
+        """Compile every executable the serving workload can hit *before*
+        traffic arrives (the maxtext ``offline_inference`` warmup idiom), so
+        no request ever stalls behind a trace+compile.
+
+        Two mechanisms, matched to how each entry point is dispatched:
+
+          * **fresh prefill** — genuine AOT products: ``fn.lower(...)
+            .compile()`` per pow2 token bucket (× adapter-idx variant),
+            parked in ``_cached_pref`` and *invoked* by ``_prefill_span``;
+            each executable is registered with the profiler so roofline
+            attribution keeps working without a live ``.lower`` probe.
+          * **decode / sample / verify / resume-prefill** — dummy-executed
+            through the engine's CompileWatch-wrapped jits with throwaway
+            states from the KV backend (`warmup_decode_states` /
+            `warmup_verify_states`; every block-table view bucket, every
+            draft-width bucket, all four sampler static combos), populating
+            the jit dispatch caches and the watches' seen-shape sets. The
+            dummies alias no live storage, so a donated decode may consume
+            them freely, and the engine's sampling ``self.key`` is never
+            advanced — a warmed engine stays token-identical to a cold one.
+
+        ``max_prompt_len`` bounds the prefill buckets (default: ``max_len``);
+        ``resume_starts`` adds explicit ``(n_tokens, start)`` resume shapes
+        beyond the chunk/page-boundary enumeration. On return,
+        ``stats.warmup_compiles`` records the executables built here and
+        ``stats.jit_compiles`` resets to **0**, so any nonzero value after
+        serving is a real recompile stall (the zero-recompile contract the
+        sharded test lane asserts).
+
+        Must run on an idle engine (no pending pipelined ticks)."""
+        assert not self._pending, "warmup_aot needs an idle engine"
+        t0 = time.perf_counter()
+        prof = profiler if profiler is not None else self.profiler
+        compiles0 = self.stats.jit_compiles
+        params = self._effective_params()
+        B = self.max_slots
+        n_max = min(max_prompt_len or self.max_len, self.max_len)
+        use_jit = self.cfg.attention_kind == "gqa" \
+            and self.cfg.family not in ("ssm", "hybrid")
+        aidx_variants: List[Optional[jax.Array]] = [None]
+        if self.adapters is not None:
+            aidx_variants.append(jnp.zeros((1,), jnp.int32))
+
+        # -- fresh prefill: real AOT executables per bucket ---------------------
+        buckets: List[int] = []
+        n_aot = 0
+        if use_jit and self.prefill_mode == "batched":
+            e = 4
+            while True:
+                b = min(1 << e, self.max_len)
+                buckets.append(b)
+                if (1 << e) >= n_max or b >= self.max_len:
+                    break
+                e += 1
+            buckets = sorted(set(buckets))
+            fresh_jit, _ = _prefill_jits(self.model)
+            for b in buckets:
+                toks = jnp.asarray(np.zeros((1, b), np.int32))
+                for aidx in aidx_variants:
+                    args = (params, toks, self.max_len, aidx)
+                    compiled = fresh_jit.lower(*args).compile()
+                    self._cached_pref[("fresh", b, aidx is not None)] = \
+                        _AotCall(compiled, "prefill_fresh", drop=(2,))
+                    n_aot += 1
+                    if prof is not None:
+                        prof.register_compiled("prefill_fresh", args, compiled)
+
+        # -- resume prefill: dummy-exec the (bucket, prefix-bucket) shape set ---
+        resume_pairs = set()
+
+        def note_resume(n: int, start: int) -> None:
+            if n <= 0 or start <= 0 or start >= self.max_len:
+                return
+            b = 1 << max(4, (n - 1).bit_length())
+            b = min(b, self.max_len - start)
+            pb = min(1 << max(4, (start - 1).bit_length()), self.max_len)
+            if b > 0:
+                resume_pairs.add((b, pb))
+
+        def add_start(start: int, n_cap: int) -> None:
+            e = 4
+            while True:
+                note_resume(min(1 << e, n_cap), start)
+                if (1 << e) >= n_cap:
+                    break
+                e += 1
+
+        if use_jit and self.prefill_mode == "batched":
+            if self.prefill_chunk:
+                for s in range(self.prefill_chunk, n_max, self.prefill_chunk):
+                    add_start(s, min(self.prefill_chunk, max(n_max - s, 1)))
+            if self.prefix is not None:
+                page = self.pool.cfg.page
+                for s in range(page, n_max, page):
+                    add_start(s, max(n_max - s - 1, 1))
+            for n, s in resume_starts:
+                note_resume(int(n), int(s))
+            if resume_pairs:
+                src = self.pool.k if self.kv.supports_paging \
+                    else self.cache["k"]
+                L, _, H, _, D = src.shape
+                resume_watch = self._prefill_fns()[1]
+                for b, pb in sorted(resume_pairs):
+                    z = jnp.zeros((L, 1, H, pb, D), src.dtype)
+                    pref = {"k": z, "v": z}
+                    toks = jnp.asarray(np.zeros((1, b), np.int32))
+                    for aidx in aidx_variants:
+                        resume_watch(params, toks, self.max_len,
+                                     jnp.int32(pb), pref, aidx)
+
+        # -- decode tick + samplers (all static combos) -------------------------
+        fed = jnp.asarray(np.zeros((B,), np.int32))
+        posv = jnp.asarray(np.zeros((B,), np.int32))
+        aidx_dec = self._adapter_idx()
+        # throwaway key: warmup must not advance self.key (token identity)
+        sub = jax.random.split(jax.random.PRNGKey(0))[1]
+        z_f = jnp.asarray(np.zeros((B,), np.float32))
+        one_f = jnp.asarray(np.ones((B,), np.float32))
+        z_i = jnp.asarray(np.zeros((B,), np.int32))
+        z_b = jnp.asarray(np.zeros((B,), bool))
+        last = None
+        logits = None
+        for state in self.kv.warmup_decode_states():
+            logits, _ = self._decode(params, state, fed, posv, aidx_dec)
+        if logits is not None:
+            for use_topp in (False, True):
+                for use_seeds in (False, True):
+                    last = self._sample(logits, sub, z_f, z_i, one_f, z_i,
+                                        z_b, z_i, use_topp=use_topp,
+                                        use_seeds=use_seeds)
+
+        # -- multi-token verify (spec decode) per draft-width bucket ------------
+        sbs: List[int] = []
+        if self.spec_decode:
+            sbs = sorted({1 << int(w).bit_length()
+                          for w in spec_widths if int(w) >= 1})
+            for s in sbs:
+                vtok = jnp.asarray(np.zeros((B, s), np.int32))
+                vlogits = None
+                for vstate in self.kv.warmup_verify_states(s):
+                    vlogits, _ = self._verify(params, vstate, vtok, posv,
+                                              aidx_dec)
+                if vlogits is None:
+                    continue
+                for use_topp in (False, True):
+                    for use_seeds in (False, True):
+                        last = self._verify_sample(
+                            vlogits, sub, z_f, z_i, one_f, z_i, z_b, z_i,
+                            use_topp=use_topp, use_seeds=use_seeds)
+
+        if last is not None:
+            jax.block_until_ready(last)
+        jit_warmed = self.stats.jit_compiles - compiles0
+        self.stats.warmup_compiles += jit_warmed + n_aot
+        # post-warmup, the compile counter reports *serve-time* recompiles
+        # only — the quantity the zero-recompile sweep asserts is exactly 0
+        self.stats.jit_compiles = 0
+        return {
+            "prefill_buckets": buckets,
+            "resume_pairs": sorted(resume_pairs),
+            "verify_buckets": sbs,
+            "aot_executables": n_aot,
+            "jit_warmed": jit_warmed,
+            "compiles": jit_warmed + n_aot,
+            "wall_s": round(time.perf_counter() - t0, 3),
+        }
+
     # -- engine internals ------------------------------------------------------------
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -842,8 +1062,13 @@ class ServeEngine:
         req.state = "running"
         req.t_admit = now
         if self.adapters is not None and req.adapter_id is not None:
-            # load (evicting LRU unpinned if needed) + pin for the slot's life
-            self.slot_adapter[slot] = self.adapters.acquire(req.adapter_id)
+            # load (evicting LRU unpinned if needed) + pin for the slot's
+            # life. The pin is *version-resolved* at placement: a hot-swap
+            # (re-register) while this request streams must not move its
+            # weights, so release targets the exact pinned version below.
+            dev_slot, key = self.adapters.acquire_versioned(req.adapter_id)
+            self.slot_adapter[slot] = dev_slot
+            self.slot_adapter_key[slot] = key
         feed, remaining_new = self._clamped_feed(req)
         req.max_new_tokens = len(req.output) + remaining_new
         self.slot_req[slot] = req
@@ -963,9 +1188,22 @@ class ServeEngine:
                     jnp.asarray(toks), self.max_len, jnp.int32(start), pref,
                     aidx)
             elif use_jit:
-                _, sub_cache = self._dispatch(
-                    self._prefill_fns()[0], self._effective_params(),
-                    jnp.asarray(toks), self.max_len, aidx)
+                args = (self._effective_params(), jnp.asarray(toks),
+                        self.max_len, aidx)
+                aot = self._cached_pref.get(("fresh", bucket, aidx is not None))
+                if aot is not None:
+                    try:
+                        _, sub_cache = self._dispatch(aot, *args)
+                    except ValueError:
+                        # an input's placement drifted from the shardings the
+                        # executable was lowered with (e.g. an adapter upload
+                        # re-committed a leaf): the jit path re-canonicalizes
+                        # placement, so fall back rather than fail the request
+                        self.stats.aot_fallbacks += 1
+                        aot = None
+                if aot is None:
+                    _, sub_cache = self._dispatch(self._prefill_fns()[0],
+                                                  *args)
             else:
                 kwargs = {} if aidx is None else {"adapter_idx": aidx}
                 _, sub_cache = self.model.prefill(
@@ -1067,9 +1305,10 @@ class ServeEngine:
 
     def _release_slot(self, slot: int) -> None:
         req = self.slot_req[slot]
-        if (self.adapters is not None and req is not None
-                and req.adapter_id is not None):
-            self.adapters.release(req.adapter_id)   # unpin → evictable
+        if self.slot_adapter_key[slot] is not None:
+            # unpin the exact version this slot acquired (hot-swap safe)
+            self.adapters.release_key(self.slot_adapter_key[slot])
+            self.slot_adapter_key[slot] = None
         self.slot_adapter[slot] = 0
         if self.prefix is not None:
             self.prefix.decref(self.slot_keys[slot])

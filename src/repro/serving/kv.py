@@ -129,6 +129,21 @@ class KVBackend:
         page-aligned."""
         raise NotImplementedError
 
+    # -- AOT warmup -------------------------------------------------------------
+    def warmup_decode_states(self):
+        """Throwaway decode-state pytrees covering every state shape the
+        tick loop can produce (one per block-table view bucket for paged,
+        one for dense). Used by ``ServeEngine.warmup_aot`` to populate the
+        decode jit's dispatch cache up front; the states alias **no live
+        storage** — outputs are discarded and a donated decode may consume
+        them without invalidating the real cache/pool."""
+        return ()
+
+    def warmup_verify_states(self, s_bucket: int):
+        """Same contract as :meth:`warmup_decode_states` for the multi-token
+        verify's state shapes at draft-width bucket ``s_bucket``."""
+        return ()
+
 
 class DenseKV(KVBackend):
     """Contiguous per-slot cache — the paper's fixed on-chip SRAM budget.
@@ -183,6 +198,16 @@ class DenseKV(KVBackend):
                 self.cache[key], span.astype(self.cache[key].dtype),
                 (0, slot, 0, start, 0))
         self.cache = new
+
+    # -- AOT warmup -------------------------------------------------------------
+    def warmup_decode_states(self):
+        # dense state is the cache itself: one shape, one entry. zeros_like
+        # preserves dtype *and* placement/sharding, so the warmup dispatch
+        # lands in the same executable-cache entry as live ticks.
+        yield jax.tree.map(jnp.zeros_like, self.cache)
+
+    def warmup_verify_states(self, s_bucket):
+        yield jax.tree.map(jnp.zeros_like, self.cache)
 
 
 class PagedKV(KVBackend):
@@ -334,6 +359,45 @@ class PagedKV(KVBackend):
     def commit_span(self, slot, start, spans, n) -> None:
         self.pool.write_span(slot, start, spans["k"][:, slot, :, :n],
                              spans["v"][:, slot, :, :n])
+
+    # -- AOT warmup -------------------------------------------------------------
+    def _view_buckets(self) -> List[int]:
+        """Every (B, P) block-table width `_table_view` can emit: powers of
+        two capped at the max_len footprint."""
+        cap = self.pool.pages_for(self.max_len)
+        views, b = [], 1
+        while True:
+            views.append(min(b, cap))
+            if b >= cap:
+                break
+            b <<= 1
+        return sorted(set(views))
+
+    def warmup_decode_states(self):
+        pool = self.pool
+        for view in self._view_buckets():
+            yield PagedKVState(
+                k_pool=jnp.zeros_like(pool.k),
+                v_pool=jnp.zeros_like(pool.v),
+                tables=jnp.full((self.max_slots, view), pool.scratch_page,
+                                jnp.int32),
+                write_page=jnp.full((self.max_slots,), pool.scratch_page,
+                                    jnp.int32),
+                write_off=jnp.zeros((self.max_slots,), jnp.int32),
+                lengths=jnp.zeros((self.max_slots,), jnp.int32))
+
+    def warmup_verify_states(self, s_bucket):
+        pool = self.pool
+        for view in self._view_buckets():
+            yield PagedKVState(
+                k_pool=jnp.zeros_like(pool.k),
+                v_pool=jnp.zeros_like(pool.v),
+                tables=jnp.full((self.max_slots, view), pool.scratch_page,
+                                jnp.int32),
+                write_page=jnp.full((self.max_slots, s_bucket),
+                                    pool.scratch_page, jnp.int32),
+                write_off=jnp.zeros((self.max_slots, s_bucket), jnp.int32),
+                lengths=jnp.zeros((self.max_slots,), jnp.int32))
 
 
 def as_backend(kv: Union[str, KVBackend, None], *, page: int = 64,

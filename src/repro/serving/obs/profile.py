@@ -133,14 +133,35 @@ class ProfileRegistry:
             rec = self.records[key] = FnProfile(name=name, signature=sig)
         return rec
 
+    def register_compiled(self, name: str, args, compiled) -> FnProfile:
+        """Adopt an executable that was AOT-compiled *outside* the dispatch
+        probe (``ServeEngine.warmup_aot``'s ``lower(...).compile()`` bucket
+        products). The record is keyed exactly as ``observe_call`` would key
+        the live dispatches of that executable, so warmup-built prefill
+        buckets keep full roofline attribution — cost stats harvest from the
+        compiled object directly (it has no ``.lower`` to re-probe)."""
+        rec = self._rec(name, shape_sig(args))
+        if self.capture and not rec.analyzed:
+            rec.analyzed = True
+            self._harvest(rec, compiled)
+        return rec
+
     def _capture(self, rec: FnProfile, fn, args, kwargs) -> None:
         """AOT-lower the call and harvest cost/memory/structural stats.
         Runs once per record; any failure is recorded and never retried."""
         rec.analyzed = True
-        from repro.launch import hlo_analysis
         try:
             inner = getattr(fn, "_fn", fn)      # unwrap CompileWatch
             compiled = inner.lower(*args, **kwargs).compile()
+        except Exception as e:                  # pragma: no cover - backend-dep
+            rec.capture_error = repr(e)
+            return
+        self._harvest(rec, compiled)
+
+    def _harvest(self, rec: FnProfile, compiled) -> None:
+        """Fill a record's cost/memory columns from a compiled executable."""
+        from repro.launch import hlo_analysis
+        try:
             info = hlo_analysis.analyze_compiled(compiled)
         except Exception as e:                  # pragma: no cover - backend-dep
             rec.capture_error = repr(e)

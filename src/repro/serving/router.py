@@ -1,0 +1,284 @@
+"""Replica router: one front door over N async serving replicas.
+
+The tentpole of the scale-out layer: each replica is a sharded
+`ServeEngine` (see `repro.serving.sharded`) wrapped in its own `Gateway` +
+`AsyncServeRuntime` — its own dispatch/backlog thread pair, its own KV
+page pool, its own prefix cache. The router grows the Gateway role to the
+fleet: it duck-types the exact surface `ServingHTTPFront` binds to
+(``submit`` / ``cancel`` / ``admission_check`` / ``poisoned`` /
+``_tickets`` / ``gw.metrics``), so the HTTP/SSE front serves a fleet with
+zero changes.
+
+Placement is prefix-cache-aware: a request routes to the replica whose
+`PrefixCache` scores the longest token-prefix hit (those pages are
+reattached instead of re-prefilled — the paper's shared-context ROM-bank
+reuse, now a *placement* signal); with no hit anywhere it falls back to
+least-loaded (queue depth + active slots). Poisoned replicas are skipped,
+so a single crashed engine degrades capacity instead of the service — the
+fleet is only down when *every* replica is (``poisoned``), which is what
+``serve_until_shutdown`` polls.
+
+Uid namespacing: each replica's engine allocates uids from a disjoint
+``UID_STRIDE`` block, so fleet-wide uids never collide and the router can
+find a ticket's owner without a reverse map scan. ``replace_replica``
+swaps a crashed replica for a fresh runtime under a *new* block — surviving
+tickets keep their uids, replayed requests get unambiguous new ones (the
+crash-recovery fuzz lane drives this).
+"""
+from __future__ import annotations
+
+import threading
+import types
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.gateway.metrics import Metrics
+from repro.serving.runtime.runtime import (AsyncServeRuntime, RuntimePoisoned,
+                                           Ticket)
+
+#: uid block size per replica lifetime — far above any bench/test request
+#: count, so uids stay unique across replicas *and* across replacements.
+UID_STRIDE = 1_000_000
+
+
+def _suffix(name: str, i: int) -> str:
+    """Tag a replica-local metric name with its replica index, keeping the
+    ``base__label`` convention's label part last so the prom renderer still
+    folds it into a label."""
+    if "__" in name:
+        base, label = name.split("__", 1)
+        if base and label:
+            return f"{base}_r{i}__{label}"
+    return f"{name}_r{i}"
+
+
+class _FleetMetrics:
+    """Router-level registry + merged exposition over every replica.
+
+    ``inc``/``set_gauge``/``observe`` land in the router's own `Metrics`
+    (routing decisions, fleet admission rejects); ``to_prom_text`` renders
+    that registry merged with every replica's, replica names suffixed
+    ``_r{i}`` — one scrape shows the whole fleet."""
+
+    def __init__(self, router: "ReplicaRouter"):
+        self._router = router
+        self._own = Metrics()
+
+    def inc(self, name: str, n: float = 1) -> None:
+        self._own.inc(name, n)
+
+    def set_gauge(self, name: str, value: float) -> None:
+        self._own.set_gauge(name, value)
+
+    def observe(self, name: str, value: float, buckets=None) -> None:
+        self._own.observe(name, value, buckets)
+
+    def counter(self, name: str) -> float:
+        return self._own.counter(name)
+
+    def _merged(self):
+        self._router._refresh_gauges()
+        counters = dict(self._own.counters)
+        gauges = dict(self._own.gauges)
+        hists = dict(self._own.histograms)
+        for i, rt in enumerate(self._router.runtimes):
+            m = rt.gw.metrics
+            with m._lock:
+                for name, v in m.counters.items():
+                    counters[_suffix(name, i)] = v
+                for name, v in m.gauges.items():
+                    gauges[_suffix(name, i)] = v
+                for name, h in m.histograms.items():
+                    hists[_suffix(name, i)] = h
+        return types.SimpleNamespace(counters=counters, gauges=gauges,
+                                     histograms=hists)
+
+    def to_prom_text(self) -> str:
+        from repro.serving.obs.prom import render_text
+        return render_text(self._merged())
+
+    def to_dict(self) -> Dict:
+        return {
+            "fleet": self._own.to_dict(),
+            "replicas": [rt.gw.metrics.to_dict()
+                         for rt in self._router.runtimes],
+        }
+
+
+class _FleetView:
+    """The router's ``gw`` attribute — just enough Gateway for the HTTP
+    front (``rt.gw.metrics``)."""
+
+    def __init__(self, router: "ReplicaRouter"):
+        self.metrics = _FleetMetrics(router)
+
+
+class ReplicaRouter:
+    """Route requests over N `AsyncServeRuntime` replicas.
+
+    Presents the runtime surface `ServingHTTPFront` needs, so
+    ``ServingHTTPFront(ReplicaRouter([...]))`` is a sharded fleet behind
+    one port. Thread-safe: routing reads replica load cross-thread
+    (point-in-time, like `admission_check` — each engine's own admission
+    stays the hard gate)."""
+
+    def __init__(self, runtimes: List[AsyncServeRuntime]):
+        assert runtimes, "router needs at least one replica"
+        self.runtimes: List[AsyncServeRuntime] = list(runtimes)
+        self._next_block = 0
+        for rt in self.runtimes:
+            self._assign_uid_block(rt)
+        self._tickets: Dict[int, Ticket] = {}
+        self._tickets_lock = threading.Lock()
+        self._owner: Dict[int, int] = {}
+        self.gw = _FleetView(self)
+
+    def _assign_uid_block(self, rt: AsyncServeRuntime) -> None:
+        assert rt.eng._uid == 0 or rt.eng._uid % UID_STRIDE == 0, \
+            "replica engine already issued uids outside router blocks"
+        rt.eng._uid = self._next_block * UID_STRIDE
+        self._next_block += 1
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "ReplicaRouter":
+        for rt in self.runtimes:
+            rt.start()
+        return self
+
+    def __enter__(self) -> "ReplicaRouter":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close(raise_on_poison=exc_type is None)
+        return False
+
+    def close(self, timeout: float = 30.0,
+              raise_on_poison: bool = True) -> None:
+        for rt in self.runtimes:
+            rt.close(timeout=timeout, raise_on_poison=False)
+        if raise_on_poison and self.poisoned:
+            raise RuntimePoisoned(self.exception)
+
+    def quiesce(self, timeout: float = 60.0) -> None:
+        for rt in self.runtimes:
+            if not rt.poisoned:
+                rt.quiesce(timeout=timeout)
+
+    def drain(self, timeout: float = 300.0) -> None:
+        for rt in self.runtimes:
+            if not rt.poisoned:
+                rt.drain(timeout=timeout)
+
+    # -- health --------------------------------------------------------------
+    @property
+    def poisoned(self) -> bool:
+        """Fleet-down: every replica crashed. A partial outage is
+        ``degraded`` — the router keeps serving on the survivors."""
+        return all(rt.poisoned for rt in self.runtimes)
+
+    @property
+    def degraded(self) -> bool:
+        return any(rt.poisoned for rt in self.runtimes)
+
+    @property
+    def exception(self) -> Optional[BaseException]:
+        for rt in self.runtimes:
+            if rt.exception is not None:
+                return rt.exception
+        return None
+
+    def _healthy(self) -> List[Tuple[int, AsyncServeRuntime]]:
+        alive = [(i, rt) for i, rt in enumerate(self.runtimes)
+                 if not rt.poisoned]
+        if not alive:
+            raise RuntimePoisoned(self.exception
+                                  or RuntimeError("no healthy replicas"))
+        return alive
+
+    def _refresh_gauges(self) -> None:
+        m = self.gw.metrics
+        m.set_gauge("replicas", len(self.runtimes))
+        m.set_gauge("replicas_healthy",
+                    sum(1 for rt in self.runtimes if not rt.poisoned))
+
+    # -- placement -----------------------------------------------------------
+    def route(self, prompt: List[int],
+              adapter_id: Optional[str] = None) -> Tuple[int, str]:
+        """Pick a replica for ``prompt``: longest prefix-cache hit wins
+        (reattached pages beat a cold prefill), ties/misses go least-loaded
+        (adapter residency breaks load ties). Returns (index, reason)."""
+        toks = list(prompt)
+        best, best_key, best_reason = None, None, "least_loaded"
+        for i, rt in self._healthy():
+            eng = rt.eng
+            hit_toks = 0
+            if eng.prefix is not None:
+                hit_toks = eng.prefix.lookup(toks) * eng.pool.cfg.page
+            load = len(eng.scheduler) + sum(
+                1 for r in eng.slot_req if r is not None)
+            resident = (adapter_id is not None and eng.adapters is not None
+                        and eng.adapters.is_resident(adapter_id))
+            key = (-hit_toks, load, 0 if resident else 1, i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+                best_reason = "prefix_hit" if hit_toks else (
+                    "adapter_affinity" if resident else "least_loaded")
+        return best, best_reason
+
+    # -- client API (the ServingHTTPFront runtime surface) -------------------
+    def submit(self, prompt: List[int], spec=None, sampling=None,
+               timeout: float = 30.0) -> Ticket:
+        idx, reason = self.route(
+            prompt, getattr(spec, "adapter_id", None))
+        ticket = self.runtimes[idx].submit(prompt, spec=spec,
+                                           sampling=sampling, timeout=timeout)
+        with self._tickets_lock:
+            self._tickets[ticket.uid] = ticket
+            self._owner[ticket.uid] = idx
+        m = self.gw.metrics
+        m.inc("requests_routed")
+        m.inc(f"routed_{reason}")
+        m.inc(f"routed__r{idx}")
+        return ticket
+
+    def cancel(self, uid: int, timeout: float = 30.0) -> bool:
+        with self._tickets_lock:
+            idx = self._owner.get(uid)
+        if idx is None:
+            return False
+        rt = self.runtimes[idx]
+        if rt.poisoned:
+            return False      # poison cleanup already errored the ticket
+        return rt.cancel(uid, timeout=timeout)
+
+    def admission_check(self, prompt_len: int, max_new_tokens: int,
+                        adapter_id: Optional[str] = None,
+                        max_queue: int = 256) -> Optional[str]:
+        """Admit if *any* healthy replica would: per-replica queues mean one
+        full replica shouldn't bounce a request another can take."""
+        reason = "runtime poisoned"
+        for _, rt in ((i, r) for i, r in enumerate(self.runtimes)
+                      if not r.poisoned):
+            reason = rt.admission_check(prompt_len, max_new_tokens,
+                                        adapter_id=adapter_id,
+                                        max_queue=max_queue)
+            if reason is None:
+                return None
+        return reason
+
+    # -- recovery ------------------------------------------------------------
+    def replace_replica(self, idx: int,
+                        runtime: AsyncServeRuntime) -> AsyncServeRuntime:
+        """Swap in a rebuilt replica (crash recovery): the new runtime gets
+        a fresh uid block — uids of dead in-flight requests stay unique so
+        their (already errored) tickets remain queryable, and replayed
+        requests bind new uids. Returns the replaced runtime (caller closes
+        it)."""
+        old = self.runtimes[idx]
+        self._assign_uid_block(runtime)
+        self.runtimes[idx] = runtime
+        self.gw.metrics.inc("replicas_replaced")
+        return old
+
+    def in_flight(self) -> List[Ticket]:
+        with self._tickets_lock:
+            return [t for t in self._tickets.values() if not t.terminal]

@@ -404,7 +404,7 @@ class TestMultiTenantServing:
                 if r is not None and r.adapter_id is not None:
                     # in-flight ⇒ resident and pinned, idx mapped
                     assert ad.is_resident(r.adapter_id)
-                    assert ad.cache.pinned(r.adapter_id)
+                    assert ad.pinned(r.adapter_id)
                     assert eng.slot_adapter[slot] > 0
         assert all(r.state == "done" for r in reqs)
         assert ad.cache.evictions >= 1              # 4 tenants through 2 slots
@@ -458,7 +458,7 @@ class TestMultiTenantServing:
         eng.run_until_drained()
         assert lo.n_preempts >= 1
         assert lo.output[:6] == solo                # same greedy trajectory
-        assert not ad.cache.pinned("tenant-1")
+        assert not ad.pinned("tenant-1")
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,7 @@ from repro.serving.adapters import (AdapterRegistry, AdapterServing,
                                     AdapterSpec, synthetic_adapter_stacks)
 from repro.serving.gateway import Gateway
 from repro.serving.gateway.scheduler import Scheduler
+from repro.serving.router import UID_STRIDE, ReplicaRouter
 
 jax.config.update("jax_enable_x64", False)
 
@@ -134,10 +135,15 @@ def _page_invariants(eng):
 def _adapter_invariants(eng):
     for slot, req in eng._active_pairs():
         if req.adapter_id is not None:
-            check(eng.adapters.is_resident(req.adapter_id),
-                  f"in-flight adapter {req.adapter_id} not resident")
-            check(eng.adapters.cache.pinned(req.adapter_id),
-                  f"in-flight adapter {req.adapter_id} not pinned")
+            key = eng.slot_adapter_key[slot]
+            check(key is not None,
+                  f"in-flight adapter {req.adapter_id} has no pinned key")
+            check(key.startswith(f"{req.adapter_id}@v"),
+                  f"slot {slot} pinned {key} but serves {req.adapter_id}")
+            check(eng.adapters.cache.is_resident(key),
+                  f"in-flight adapter version {key} not resident")
+            check(eng.adapters.cache.pinned(key),
+                  f"in-flight adapter version {key} not pinned")
 
 
 def _metrics_invariants(gw, reqs):
@@ -480,3 +486,237 @@ class TestAsyncServingFuzz:
             rt.submit([1, 2, 3])
         check(ei.value.cause is fault, "poison lost the original exception")
         rt.close(raise_on_poison=False)
+
+
+class TestRouterRecoveryFuzz:
+    """Crash-recovery through the replica router: drop one replica's engine
+    mid-tick, verify the fleet degrades (not dies), rebuild the replica,
+    replay the dead in-flight requests through the router, and re-assert
+    the page / pin / EDF invariant battery on every surviving and rebuilt
+    engine — zero leaked pages or pins anywhere."""
+
+    def _replica(self, model_params, registry, seed):
+        model, params = model_params
+        nbytes = registry.get("tenant-0").nbytes
+        adapters = AdapterServing(model, registry, budget_bytes=nbytes * 2,
+                                  max_resident=2)
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=PagedKV(page=PAGE, n_pages=N_PAGES),
+                          prefix_cache=True, seed=seed, spec_decode=True,
+                          scheduler=EDFCheckingScheduler(),
+                          adapters=adapters)
+        return eng, AsyncServeRuntime(Gateway(eng), depth=1)
+
+    def test_router_crash_recovery_replay(self, model_params, registry):
+        engs, rts = zip(*[self._replica(model_params, registry, SEED + i)
+                          for i in range(2)])
+        engs, rts = list(engs), list(rts)
+        router = ReplicaRouter(list(rts)).start()
+        old = None
+        try:
+            crng = np.random.default_rng(SEED + 13)
+            payloads, tickets = [], []
+            for i in range(10):
+                prompt = list(crng.integers(
+                    0, 50, size=int(crng.integers(3, 12))))
+                spec = RequestSpec(
+                    max_new_tokens=24,
+                    adapter_id=f"tenant-{i % 2}" if i % 3 == 0 else None)
+                sampling = (SamplingParams() if i % 2 == 0 else
+                            SamplingParams(temperature=0.8, top_k=8,
+                                           seed=int(crng.integers(0, 1000))))
+                payloads.append((prompt, spec, sampling))
+                tickets.append(router.submit(prompt, spec=spec,
+                                             sampling=sampling, timeout=60))
+            deadline = time.monotonic() + 60
+            while (not any(t.tokens() for t in tickets)
+                   and time.monotonic() < deadline):
+                time.sleep(0.01)
+            # drop the engine of a replica that owns live work, mid-tick
+            with router._tickets_lock:
+                owners = dict(router._owner)
+            victim = next((owners[t.uid] for t in tickets if not t.terminal),
+                          0)
+            fault = RuntimeError("fuzz-injected replica fault")
+
+            def boom(*a, **kw):
+                raise fault
+            engs[victim]._sampling_vectors = boom
+            # a direct poke guarantees the dispatch thread ticks the fault
+            # even if the victim's queue drained in the meantime (in-flight
+            # work may trip it first — then the poke itself sees the poison)
+            try:
+                poked = rts[victim].submit([1, 2, 3],
+                                           RequestSpec(max_new_tokens=2),
+                                           SamplingParams(), timeout=60)
+            except RuntimePoisoned:
+                poked = None
+            deadline = time.monotonic() + 60
+            while not rts[victim].poisoned and time.monotonic() < deadline:
+                time.sleep(0.01)
+            check(rts[victim].poisoned,
+                  "victim runtime never observed the injected fault")
+            check(router.degraded and not router.poisoned,
+                  "one dead replica must degrade the fleet, not kill it")
+            rts[victim]._dispatch_thread.join(timeout=30)
+            rts[victim]._backlog_thread.join(timeout=30)
+            check(poked is None or poked.terminal,
+                  "ticket on dead replica left non-terminal")
+            # poison cleanup on the crashed engine: nothing leaked
+            check(all(r is None for r in engs[victim].slot_req),
+                  "slot leaked on the crashed replica")
+            check(len(engs[victim].scheduler) == 0,
+                  "queue entry leaked on the crashed replica")
+            TestAsyncServingFuzz._no_leaks(engs[victim])
+            # the survivor keeps serving through the router meanwhile
+            alive = router.submit([7, 8, 9], spec=RequestSpec(max_new_tokens=2),
+                                  sampling=SamplingParams(), timeout=60)
+            with router._tickets_lock:
+                check(router._owner[alive.uid] != victim,
+                      "router placed a request on a poisoned replica")
+
+            # rebuild the replica and swap it in under a fresh uid block
+            eng_new, rt_new = self._replica(model_params, registry, SEED + 7)
+            rt_new.start()
+            old = router.replace_replica(victim, rt_new)
+            check(old is rts[victim], "replace_replica returned wrong runtime")
+            engs[victim] = eng_new
+            check(not router.degraded, "fleet still degraded after rebuild")
+
+            # replay every request the crash errored, through the router
+            dead = [i for i, t in enumerate(tickets) if t.state == "error"]
+            check(dead, "victim owned no in-flight request — injection raced")
+            replayed = [router.submit(payloads[i][0], spec=payloads[i][1],
+                                      sampling=payloads[i][2], timeout=60)
+                        for i in dead]
+            router.drain(timeout=300)
+            prior = {t.uid for t in tickets} | {alive.uid}
+            if poked is not None:
+                prior.add(poked.uid)
+            for t in replayed:
+                check(t.state == "done",
+                      f"replayed request ended {t.state!r}, not done")
+                check(t.uid not in prior,
+                      "replayed request reused a dead request's uid")
+            check(alive.state == "done", "survivor request did not finish")
+            for t in tickets:
+                check(t.terminal, "original ticket left non-terminal")
+            # full invariant battery on every live engine, post-recovery
+            for e in engs:
+                _page_invariants(e)
+                _adapter_invariants(e)
+                TestAsyncServingFuzz._no_leaks(e)
+        finally:
+            router.close(raise_on_poison=False)
+            if old is not None:
+                old.close(raise_on_poison=False)
+
+
+class TestAdapterHotSwapFuzz:
+    """Adapter hot-swap mid-stream: version re-registers land while
+    requests are in flight. In-flight placements must finish on their
+    pinned version (one cache key per placement epoch), new submits must
+    ride the new version, and both versions may be resident at once."""
+
+    def test_hotswap_midstream(self, model_params):
+        model, params = model_params
+        reg = AdapterRegistry(ADAPTER_SPEC)          # local: versions mutate
+        arng = np.random.default_rng(SEED + 29)
+
+        def stacks():
+            return synthetic_adapter_stacks(arng, model.cfg, ADAPTER_SPEC,
+                                            model.cfg.num_layers, scale=0.05)
+        for i in range(2):
+            reg.register(f"tenant-{i}", stacks())
+        nbytes = reg.get("tenant-0").nbytes
+        adapters = AdapterServing(model, reg, budget_bytes=nbytes * 3,
+                                  max_resident=3)
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=PagedKV(page=PAGE, n_pages=N_PAGES),
+                          prefix_cache=True, seed=SEED, spec_decode=True,
+                          scheduler=EDFCheckingScheduler(),
+                          adapters=adapters)
+        gw = Gateway(eng)
+        rng = np.random.default_rng(SEED + 5)
+        reqs = []
+        epoch_keys = {}          # (uid, n_preempts) -> pinned keys observed
+        stale_pins = 0           # ticks where a slot rode an older version
+
+        def observe():
+            nonlocal stale_pins
+            for slot, req in eng._active_pairs():
+                if req.adapter_id is not None:
+                    key = eng.slot_adapter_key[slot]
+                    epoch_keys.setdefault(
+                        (req.uid, req.n_preempts), set()).add(key)
+                    latest = reg.get(req.adapter_id).version
+                    if key != f"{req.adapter_id}@v{latest}":
+                        stale_pins += 1
+
+        def step():
+            gw.step()
+            _page_invariants(eng)
+            _adapter_invariants(eng)
+            _metrics_invariants(gw, reqs)
+            observe()
+
+        # deterministic opener: a long tenant-0 stream crosses a swap
+        long_req = gw.submit(list(rng.integers(0, 50, size=6)),
+                             RequestSpec(max_new_tokens=24,
+                                         adapter_id="tenant-0"),
+                             SamplingParams())
+        reqs.append(long_req)
+        while not long_req.output:
+            step()
+        reg.register("tenant-0", stacks())           # hot-swap to v2
+        follower = gw.submit(list(rng.integers(0, 50, size=6)),
+                             RequestSpec(max_new_tokens=6,
+                                         adapter_id="tenant-0"),
+                             SamplingParams())
+        reqs.append(follower)
+        while follower.state == "queued":
+            step()
+        check(long_req.state == "running",
+              "opener finished before the swap could straddle it")
+        slot_old = eng.slot_req.index(long_req)
+        slot_new = eng.slot_req.index(follower)
+        check(eng.slot_adapter_key[slot_old] == "tenant-0@v1",
+              "in-flight request lost its pinned version on hot-swap")
+        check(eng.slot_adapter_key[slot_new] == "tenant-0@v2",
+              "post-swap submit did not ride the new version")
+        check(eng.adapters.cache.is_resident("tenant-0@v1")
+              and eng.adapters.cache.is_resident("tenant-0@v2"),
+              "old and new versions not co-resident mid-swap")
+
+        # fuzz phase: random adapter'd traffic with random re-registers
+        for t in range(max(60, TICKS // 2)):
+            if rng.random() < 0.3 and len(reqs) < 48:
+                tenant = f"tenant-{int(rng.integers(0, 2))}"
+                reqs.append(gw.submit(
+                    _random_prompt(rng, [list(range(2 * PAGE))]),
+                    RequestSpec(max_new_tokens=int(rng.integers(1, 7)),
+                                priority=int(rng.integers(0, 3)),
+                                adapter_id=tenant),
+                    _random_sampling(rng)))
+            if rng.random() < 0.06:
+                reg.register(f"tenant-{int(rng.integers(0, 2))}", stacks())
+            step()
+        for _ in range(3000):
+            if not (len(eng.scheduler)
+                    or any(r is not None for r in eng.slot_req)):
+                break
+            step()
+        _terminal_invariants(reqs)
+        check(reg.get("tenant-0").version >= 2, "no swap ever happened")
+        for epoch, keys in epoch_keys.items():
+            check(len(keys) == 1,
+                  f"request epoch {epoch} switched adapter versions "
+                  f"mid-placement: {sorted(keys)}")
+        check(stale_pins > 0,
+              "no request was ever observed riding a pre-swap version — "
+              "the swap/straddle path went unexercised")
+        pins = dict(eng.adapters.cache._pins)
+        check(all(v == 0 for v in pins.values()),
+              f"adapter pins leaked after drain: {pins}")

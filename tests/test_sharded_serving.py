@@ -1,0 +1,420 @@
+"""Sharded multi-replica serving + AOT bucket warmup acceptance tests.
+
+The contract under test (ISSUE: sharded serving with AOT warmup):
+
+  * **zero steady-state recompiles** — after ``ServeEngine.warmup_aot``,
+    a request sweep covering every prompt-length bucket, sampling-static
+    combo and speculative verify width drives the CompileWatch recompile
+    counter to exactly 0; a deliberately unbucketed prompt length is the
+    positive control proving the counter still counts;
+  * **warmup is semantically free** — a warmed engine's outputs are
+    bit-identical to a cold engine's for greedy and seeded sampling
+    (warmup must never consume live KV state or advance the sampling key);
+  * **router placement** — requests route to the replica with the longest
+    prefix-cache hit, falling back to least-loaded (adapter residency
+    breaks ties); poisoned replicas are skipped; uid blocks are disjoint;
+  * **adapter hot-swap pinning** — a version re-register mid-stream never
+    perturbs an in-flight request (it finishes on its pinned version,
+    token-identical to a no-swap run) while new submits ride the new one;
+  * **sharded == single-device** — under a forced 4-device host platform,
+    a 2-replica mesh-sharded router produces token-identical output to one
+    unsharded engine across {DenseKV, PagedKV} x {adapter, none} x
+    {spec on/off}.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.train import reduce_config
+from repro.models.transformer import Model
+from repro.serving import (AsyncServeRuntime, DenseKV, PagedKV, ReplicaRouter,
+                           RequestSpec, RuntimePoisoned, SamplingParams,
+                           ServeEngine)
+from repro.serving.adapters import (AdapterRegistry, AdapterServing,
+                                    AdapterSpec, synthetic_adapter_stacks)
+from repro.serving.gateway import Gateway
+from repro.serving.gateway.prefix_cache import PrefixCache
+from repro.serving.router import UID_STRIDE
+
+jax.config.update("jax_enable_x64", False)
+
+SPEC = AdapterSpec(rank=4, alpha=8.0, targets=("q", "v"))
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _registry(model, seed=7, n=2):
+    reg = AdapterRegistry(SPEC)
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        reg.register(f"tenant-{i}",
+                     synthetic_adapter_stacks(rng, model.cfg, SPEC,
+                                              model.cfg.num_layers,
+                                              scale=0.05))
+    return reg
+
+
+def _engine(model_params, *, kv="paged", adapters=None, spec=False,
+            prefix_cache=False, slots=2):
+    model, params = model_params
+    backend = PagedKV(page=8) if kv == "paged" else DenseKV()
+    return ServeEngine(model, params, max_slots=slots, max_len=64,
+                       prefill="batched", kv=backend, spec_decode=spec,
+                       prefix_cache=prefix_cache, adapters=adapters)
+
+
+def _sweep_workload(*, adapters=False, spec=False):
+    """Every fresh-prefill bucket of max_len=64 ({16, 32, 64}), greedy and
+    seeded rows (all four sampling-static combos), adapters on alternating
+    rows, spec widths 2/4 when enabled."""
+    rng = np.random.default_rng(11)
+    work = []
+    for i, plen in enumerate((3, 9, 14, 20, 30, 44, 57)):
+        prompt = list(rng.integers(0, 100, size=plen))
+        adapter_id = f"tenant-{i % 2}" if adapters and i % 2 == 0 else None
+        spec_k = (2 if i % 3 == 0 else 4) if spec else 0
+        sampling = (SamplingParams(spec_k=spec_k) if i % 2 == 0 else
+                    SamplingParams(temperature=0.8, top_k=16,
+                                   top_p=0.9 if i % 4 == 1 else 1.0,
+                                   seed=100 + i, spec_k=spec_k))
+        work.append((prompt,
+                     RequestSpec(max_new_tokens=5, adapter_id=adapter_id),
+                     sampling))
+    return work
+
+
+def _run(eng, work):
+    reqs = [eng.submit(p, s, sp) for p, s, sp in work]
+    eng.run_until_drained()
+    assert all(r.state == "done" for r in reqs)
+    return [r.output for r in reqs]
+
+
+class TestAotWarmup:
+    def test_zero_recompiles_after_sweep(self, model_params):
+        """The headline warmup contract: AOT bucket warmup + jit pre-trace
+        drive steady-state recompiles to exactly zero across the full
+        bucket/static/verify-width surface."""
+        model, _ = model_params
+        reg = _registry(model)
+        adapters = AdapterServing(model, reg,
+                                  budget_bytes=reg.get("tenant-0").nbytes * 2,
+                                  max_resident=2)
+        eng = _engine(model_params, kv="paged", adapters=adapters, spec=True)
+        info = eng.warmup_aot(max_prompt_len=64)
+        assert info["aot_executables"] >= 3      # >= one per pow2 bucket
+        assert info["compiles"] > 0
+        assert eng.stats.warmup_compiles == info["compiles"]
+        assert eng.stats.jit_compiles == 0       # warmup cost reclassified
+
+        _run(eng, _sweep_workload(adapters=True, spec=True))
+        assert eng.stats.jit_compiles == 0, \
+            "request sweep recompiled after AOT warmup"
+        assert eng.stats.aot_fallbacks == 0
+
+    def test_dense_backend_also_zero(self, model_params):
+        eng = _engine(model_params, kv="dense", spec=True)
+        eng.warmup_aot(max_prompt_len=64)
+        _run(eng, _sweep_workload(spec=True))
+        assert eng.stats.jit_compiles == 0
+        assert eng.stats.aot_fallbacks == 0
+
+    def test_unbucketed_length_is_positive_control(self, model_params):
+        """A prompt landing in a bucket warmup never compiled must bump the
+        recompile counter — proving the zeros above are measurements, not a
+        dead counter."""
+        eng = _engine(model_params, kv="paged")
+        eng.warmup_aot(max_prompt_len=16)        # only the 16-token bucket
+        r = eng.submit(list(range(10)), RequestSpec(max_new_tokens=3))
+        eng.run_until_drained()
+        assert r.state == "done" and eng.stats.jit_compiles == 0
+        r = eng.submit(list(range(24)), RequestSpec(max_new_tokens=3))
+        eng.run_until_drained()                  # 24 -> 32 bucket: unwarmed
+        assert r.state == "done" and eng.stats.jit_compiles >= 1
+
+    def test_warm_vs_cold_token_identity(self, model_params):
+        """Warmup must not perturb outputs: throwaway decode states and a
+        throwaway PRNG key mean the warmed engine's stream is bit-identical
+        to the cold engine's."""
+        work = _sweep_workload(spec=False)
+        ref = _run(_engine(model_params, kv="paged"), work)
+        warm = _engine(model_params, kv="paged")
+        warm.warmup_aot(max_prompt_len=64)
+        assert _run(warm, work) == ref
+        assert warm.stats.jit_compiles == 0
+
+
+def _stub_replica(*, page=8, load=0, committed=None, poisoned=False,
+                  resident=()):
+    """Duck-typed (runtime, engine) pair for placement-policy tests — the
+    router only reads prefix/pool/scheduler/slot_req/adapters/_uid."""
+    prefix = None
+    if committed is not None:
+        prefix = PrefixCache(page)
+        prefix.commit(list(committed), list(range(len(committed) // page)), 0)
+    eng = types.SimpleNamespace(
+        _uid=0,
+        prefix=prefix,
+        pool=types.SimpleNamespace(cfg=types.SimpleNamespace(page=page)),
+        scheduler=[object()] * load,
+        slot_req=[None, None],
+        adapters=types.SimpleNamespace(
+            is_resident=lambda aid: aid in resident) if resident else None)
+    return types.SimpleNamespace(eng=eng, poisoned=poisoned, exception=None)
+
+
+class TestRouterPlacement:
+    def test_longest_prefix_hit_wins(self):
+        prompt = list(range(40))
+        router = ReplicaRouter([
+            _stub_replica(committed=prompt[:8], load=0),    # 1 page hit
+            _stub_replica(committed=prompt[:24], load=5),   # 2 page hit
+        ])
+        assert router.route(prompt) == (1, "prefix_hit")
+
+    def test_least_loaded_fallback(self):
+        router = ReplicaRouter([_stub_replica(load=3), _stub_replica(load=1)])
+        idx, reason = router.route(list(range(6)))
+        assert (idx, reason) == (1, "least_loaded")
+
+    def test_adapter_affinity_breaks_load_ties(self):
+        router = ReplicaRouter([
+            _stub_replica(load=2),
+            _stub_replica(load=2, resident=("tenant-0",)),
+        ])
+        assert router.route([1, 2, 3], "tenant-0") == (1, "adapter_affinity")
+
+    def test_poisoned_replicas_skipped(self):
+        prompt = list(range(40))
+        router = ReplicaRouter([
+            _stub_replica(load=9),
+            _stub_replica(committed=prompt[:24], poisoned=True),
+        ])
+        assert router.route(prompt)[0] == 0
+        assert router.degraded and not router.poisoned
+
+    def test_all_poisoned_raises(self):
+        router = ReplicaRouter([_stub_replica(poisoned=True),
+                                _stub_replica(poisoned=True)])
+        assert router.poisoned
+        with pytest.raises(RuntimePoisoned):
+            router.route([1, 2])
+
+    def test_uid_blocks_disjoint(self):
+        router = ReplicaRouter([_stub_replica(), _stub_replica()])
+        assert [rt.eng._uid for rt in router.runtimes] == [0, UID_STRIDE]
+        replaced = router.replace_replica(0, _stub_replica())
+        assert router.runtimes[0].eng._uid == 2 * UID_STRIDE
+        assert replaced.eng._uid == 0
+
+
+class TestRoutedFleet:
+    def test_two_replicas_token_identical_to_one_engine(self, model_params):
+        """Routed fleet output == one unsharded engine: greedy/seeded token
+        streams are engine- and placement-independent, so splitting the
+        workload over replicas must not change a single token."""
+        work = _sweep_workload(spec=False)
+        ref = _run(_engine(model_params, kv="paged"), work)
+
+        engs = [_engine(model_params, kv="paged", prefix_cache=True)
+                for _ in range(2)]
+        router = ReplicaRouter([AsyncServeRuntime(Gateway(e), depth=1)
+                                for e in engs])
+        with router:
+            tickets = [router.submit(p, spec=s, sampling=sp, timeout=120)
+                       for p, s, sp in work]
+            router.drain(timeout=300)
+            out = [t.result() for t in tickets]
+        assert out == ref
+        m = router.gw.metrics
+        assert m.counter("requests_routed") == len(work)
+        # both replicas actually served traffic
+        assert m.counter("routed__r0") > 0 and m.counter("routed__r1") > 0
+        # uids are namespaced per replica block
+        owners = {t.uid // UID_STRIDE for t in tickets}
+        assert owners == {0, 1}
+        # the fleet prom exposition carries per-replica suffixed series
+        prom = m.to_prom_text()
+        assert "requests_routed" in prom
+        assert "tokens_out_r0" in prom and "tokens_out_r1" in prom
+        assert "replicas_healthy 2" in prom
+
+
+class TestAdapterHotSwapRegression:
+    """Deterministic mid-stream version-bump regression (the fuzz lane in
+    test_serving_fuzz.py drives the same contract randomly)."""
+
+    def _fresh(self, model_params):
+        model, _ = model_params
+        reg = _registry(model, seed=7, n=1)
+        ad = AdapterServing(model, reg,
+                            budget_bytes=reg.get("tenant-0").nbytes * 3,
+                            max_resident=3)
+        return reg, _engine(model_params, kv="paged", adapters=ad, slots=2)
+
+    def test_inflight_pins_old_version_new_submits_see_new(self,
+                                                           model_params):
+        model, _ = model_params
+        prompt = list(range(40, 52))
+        spec = RequestSpec(max_new_tokens=8, adapter_id="tenant-0")
+
+        # reference: same request, no swap anywhere near it
+        _, ref_eng = self._fresh(model_params)
+        ra = ref_eng.submit(prompt, spec)
+        ref_eng.run_until_drained()
+        assert ra.state == "done"
+
+        reg, eng = self._fresh(model_params)
+        a = eng.submit(prompt, spec)
+        while not a.output:                      # in flight, >= 1 token out
+            eng.tick()
+        slot_a = eng.slot_req.index(a)
+        assert eng.slot_adapter_key[slot_a] == "tenant-0@v1"
+
+        # hot-swap: re-register the tenant with different weights
+        rng = np.random.default_rng(99)
+        reg.register("tenant-0",
+                     synthetic_adapter_stacks(rng, model.cfg, SPEC,
+                                              model.cfg.num_layers,
+                                              scale=0.05))
+        b = eng.submit(prompt, spec)
+        while b.state == "queued":
+            eng.tick()
+        slot_b = eng.slot_req.index(b)
+        # new placement rides v2 while the old request stays pinned on v1 —
+        # both versions resident at once
+        assert eng.slot_adapter_key[slot_b] == "tenant-0@v2"
+        assert eng.slot_adapter_key[slot_a] == "tenant-0@v1"
+        assert eng.adapters.cache.is_resident("tenant-0@v1")
+        assert eng.adapters.cache.is_resident("tenant-0@v2")
+        eng.run_until_drained()
+        assert a.state == "done" and b.state == "done"
+        # the in-flight request finished on its pinned version: token-
+        # identical to the no-swap reference
+        assert a.output == ra.output
+        assert not eng.adapters.pinned("tenant-0")
+
+
+@pytest.mark.slow
+class TestShardedIdentityMultiDevice:
+    """Forced 4-device host platform: 2 mesh-sharded replicas behind the
+    router vs one unsharded engine, token-identical across the whole
+    {DenseKV, PagedKV} x {adapter, none} x {spec on/off} matrix."""
+
+    def test_sharded_matrix_token_identity(self):
+        script = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import jax
+            import numpy as np
+            jax.config.update("jax_enable_x64", False)
+            assert len(jax.devices()) == 4, jax.devices()
+
+            from repro.configs.base import get_config
+            from repro.launch.train import reduce_config
+            from repro.models.transformer import Model
+            from repro.serving import (AsyncServeRuntime, DenseKV, PagedKV,
+                                       ReplicaRouter, RequestSpec,
+                                       SamplingParams, ServeEngine,
+                                       replica_meshes, shard_engine)
+            from repro.serving.adapters import (AdapterRegistry,
+                                                AdapterServing, AdapterSpec,
+                                                synthetic_adapter_stacks)
+            from repro.serving.gateway import Gateway
+
+            cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+            model = Model(cfg, mode="serve")
+            params = model.init(jax.random.PRNGKey(0))
+            spec_ad = AdapterSpec(rank=4, alpha=8.0, targets=("q", "v"))
+            reg = AdapterRegistry(spec_ad)
+            rng = np.random.default_rng(7)
+            for i in range(2):
+                reg.register(f"tenant-{i}",
+                             synthetic_adapter_stacks(rng, cfg, spec_ad,
+                                                      cfg.num_layers,
+                                                      scale=0.05))
+
+            def engine(kv, with_ad, spec_k):
+                backend = PagedKV(page=8) if kv == "paged" else DenseKV()
+                ad = None
+                if with_ad:
+                    nb = reg.get("tenant-0").nbytes
+                    ad = AdapterServing(model, reg, budget_bytes=nb * 2,
+                                        max_resident=2)
+                return ServeEngine(model, params, max_slots=2, max_len=64,
+                                   prefill="batched", kv=backend,
+                                   spec_decode=spec_k > 0, adapters=ad)
+
+            def workload(with_ad, spec_k, n=3):
+                wrng = np.random.default_rng(11)
+                work = []
+                for i in range(n):
+                    prompt = list(wrng.integers(
+                        0, 100, size=int(wrng.integers(3, 10))))
+                    aid = (f"tenant-{i % 2}" if with_ad and i % 2 == 0
+                           else None)
+                    sampling = (SamplingParams(spec_k=spec_k) if i % 2 == 0
+                                else SamplingParams(temperature=0.8, top_k=16,
+                                                    seed=100 + i,
+                                                    spec_k=spec_k))
+                    work.append((prompt,
+                                 RequestSpec(max_new_tokens=5,
+                                             adapter_id=aid), sampling))
+                return work
+
+            meshes = replica_meshes(2, tp=1)
+            devs = jax.devices()
+            for kv in ("dense", "paged"):
+                for with_ad in (False, True):
+                    for spec_k in (0, 4):
+                        work = workload(with_ad, spec_k)
+                        oracle = engine(kv, with_ad, spec_k)
+                        reqs = [oracle.submit(p, s, sp) for p, s, sp in work]
+                        oracle.run_until_drained()
+                        ref = [r.output for r in reqs]
+                        assert all(r.state == "done" for r in reqs)
+
+                        engs = [shard_engine(engine(kv, with_ad, spec_k), m)
+                                for m in meshes]
+                        # replicas really live on distinct devices
+                        for r, e in enumerate(engs):
+                            leaf = jax.tree.leaves(e.params)[0]
+                            assert leaf.devices() == {devs[r]}, \\
+                                (r, leaf.devices())
+                        router = ReplicaRouter(
+                            [AsyncServeRuntime(Gateway(e), depth=1)
+                             for e in engs])
+                        with router:
+                            tickets = [router.submit(p, spec=s, sampling=sp,
+                                                     timeout=120)
+                                       for p, s, sp in work]
+                            router.drain(timeout=600)
+                            out = [t.result() for t in tickets]
+                        assert out == ref, (kv, with_ad, spec_k, out, ref)
+                        print(f"identical kv={kv} adapters={with_ad} "
+                              f"spec={spec_k}", flush=True)
+            print("MATRIX-OK")
+        """)
+        # inherit the parent env (JAX_PLATFORMS et al.) — a hand-stripped
+        # env made jax hang probing platforms under the forced-device flag
+        res = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True,
+            timeout=1800,
+            env={**os.environ, "PYTHONPATH": "src"},
+            cwd=str(pathlib.Path(__file__).resolve().parents[1]))
+        assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-3000:])
+        assert "MATRIX-OK" in res.stdout
