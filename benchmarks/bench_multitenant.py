@@ -9,6 +9,10 @@ Three workloads over the same reduced BitNet-2B base and arrival process:
     that holds only half of them, so the cache churns (loads + LRU
     evictions) while the batched SGMV decode mixes tenants per tick.
 
+A fourth ``tiered`` scenario churns many tenants' prefix KV over a page
+pool that fits ~8 of them, A/B-ing revisit TTFT with the device→host→disk
+TieredStore (spill + bit-identical re-admit) against re-prefilling.
+
 Reports throughput, TTFT p50/p99 and the adapter-cache hit rate; row names
 are stable so the bench trajectory tracks multi-tenant perf across PRs.
 Emits both the standard Report JSON and ``BENCH_multitenant.json`` at the
@@ -141,6 +145,73 @@ def run(quick: bool = False) -> Report:
           "tick_gap as fraction of tick wall (async-runtime headroom)")
     r.row("obs/attr/slo_violations", attr["slo"]["violations_total"],
           json.dumps(attr["slo"]["violations"]))
+
+    # -- churn scenario: many tenants' prefix KV over a pool that fits ~8 --
+    # Every tenant owns a long system prompt (3 full pages); the pool holds
+    # ~8 tenants' prefixes, so a sweep over all of them thrashes the trie.
+    # Adjacent A/B legs: without tiering an evicted prefix re-prefills from
+    # scratch; with the TieredStore it spills to host and re-admits
+    # bit-identical pages — phase-2 (revisit) TTFT is the headline.
+    from repro.serving import TieredStore
+    n_churn = 16 if quick else 120
+    churn_new = 4 if quick else 6
+    churn_page = 16
+    prefix_len = 3 * churn_page
+    pool_pages = 8 * 3 + 8            # ~8 resident tenants + decode slop
+    churn_prompts = [
+        list(rng.integers(0, 1000, size=prefix_len + int(rng.integers(3, 8))))
+        for _ in range(n_churn)]
+    churn_arr = poisson_arrivals(rng, n_churn, rate_hz=200.0)
+
+    def churn_leg(tiered):
+        eng = ServeEngine(model, params, max_slots=4, max_len=128,
+                          prefill="batched",
+                          kv=PagedKV(page=churn_page, n_pages=pool_pages),
+                          prefix_cache=True, tiered=tiered,
+                          prefetch=tiered is not None)
+        gw = Gateway(eng)
+        warm = [(churn_prompts[i], RequestSpec(max_new_tokens=churn_new))
+                for i in range(n_churn)]
+        drive_gateway(gw, warm, churn_arr)          # phase 1: commit + spill
+        reqs, wall = drive_gateway(gw, warm, churn_arr)   # phase 2: revisit
+        done = [q for q in reqs if q.state == "done"]
+        ttfts = [q.ttft_s * 1e3 for q in done]
+        return eng, gw, ttfts, wall
+
+    eng_rp, _, ttft_rp, wall_rp = churn_leg(None)
+    store = TieredStore(host_budget_bytes=64 << 20)
+    eng_ra, gw_ra, ttft_ra, wall_ra = churn_leg(store)
+    st_stats = store.stats()
+    tiered_row = {
+        "tenants": n_churn,
+        "pool_pages": pool_pages,
+        "readmit_ttft_p50_ms": round(float(np.median(ttft_ra)), 1),
+        "readmit_ttft_p99_ms": round(float(np.quantile(ttft_ra, 0.99)), 1),
+        "reprefill_ttft_p50_ms": round(float(np.median(ttft_rp)), 1),
+        "reprefill_ttft_p99_ms": round(float(np.quantile(ttft_rp, 0.99)), 1),
+        "readmit_wall_s": round(wall_ra, 3),
+        "reprefill_wall_s": round(wall_rp, 3),
+        "prefix_readmits": eng_ra.stats.prefix_readmits,
+        "prefix_readmit_tokens": eng_ra.stats.prefix_readmit_tokens,
+        "kv_spilled_pages": eng_ra.stats.kv_spilled_pages,
+        "prefetch_hits": eng_ra.stats.prefetch_hits,
+        "tier_bytes": st_stats["tier_bytes"],
+        "tier_hits": st_stats["tier_hits"],
+        "readmit_speedup": round(
+            float(np.median(ttft_rp)) / max(float(np.median(ttft_ra)), 1e-9),
+            3),
+    }
+    results["tiered"] = tiered_row
+    r.row("tiered/tenants", n_churn, f"pool fits ~8 ({pool_pages} pages)")
+    r.row("tiered/readmit_ttft_p50_ms", tiered_row["readmit_ttft_p50_ms"],
+          "revisit TTFT with host-tier re-admission")
+    r.row("tiered/reprefill_ttft_p50_ms", tiered_row["reprefill_ttft_p50_ms"],
+          "revisit TTFT re-prefilling from scratch (no tiering)")
+    r.row("tiered/readmit_speedup", tiered_row["readmit_speedup"],
+          "reprefill p50 / readmit p50 (higher is better)")
+    r.row("tiered/prefix_readmits", tiered_row["prefix_readmits"],
+          f"{tiered_row['kv_spilled_pages']} pages spilled, "
+          f"{tiered_row['prefetch_hits']} prefetch hits")
 
     mt = results["multi"]
     base = results["baseline"]

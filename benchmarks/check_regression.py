@@ -44,7 +44,16 @@ NOISY_LEAVES = ("wall_s", "wall_us", "mean_ms", "total_s", "p50_ms", "p95_ms",
                 # sharded A/B: serving and one-off warmup walls are noisy;
                 # the compile counters (jit_compiles, aot_executables) and
                 # work counters stay deterministic and still compare
-                "serve_s", "warmup_s")
+                "serve_s", "warmup_s",
+                # tiered churn A/B: TTFTs and walls are host-load products;
+                # the structural counters (prefix_readmits, kv_spilled_pages)
+                # stay deterministic and still compare
+                "readmit_ttft_p50_ms", "readmit_ttft_p99_ms",
+                "reprefill_ttft_p50_ms", "reprefill_ttft_p99_ms",
+                "readmit_wall_s", "reprefill_wall_s", "readmit_speedup",
+                # ...as are the prefetch race and the per-tier residency
+                # split at sample time (tier_bytes.*/tier_hits.*)
+                "prefetch_hits", "host", "device", "disk")
 
 
 def _git_show(path: str) -> Dict | None:

@@ -58,6 +58,9 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
                  spec_adaptive: bool = False,
                  n_adapters: int = 0, adapter_rank: int = 8,
                  adapter_budget_kb: Optional[float] = None,
+                 host_cache_mb: float = 0.0,
+                 disk_cache_dir: Optional[str] = None,
+                 disk_cache_mb: float = 256.0, prefetch: bool = False,
                  tracer=None, profiler=None) -> ServeEngine:
     cfg = reduce_config(get_config(arch), preset)
     model = Model(cfg, mode="serve")
@@ -90,11 +93,23 @@ def build_engine(arch: str, preset: str, *, slots: int, max_len: int,
               f"({per_adapter}B each, SRAM budget {budget}B)")
     backend = (PagedKV(page=page, n_pages=n_pages) if kv == "paged"
                else DenseKV())
+    tiered = None
+    if host_cache_mb > 0 or disk_cache_dir:
+        from repro.serving import TieredStore
+        tiered = TieredStore(
+            host_budget_bytes=int(host_cache_mb * (1 << 20)),
+            disk_budget_bytes=int(disk_cache_mb * (1 << 20)),
+            disk_dir=disk_cache_dir)
+        print(f"[serve] tiered memory: host {host_cache_mb}MB"
+              + (f", disk {disk_cache_mb}MB at {disk_cache_dir}"
+                 if disk_cache_dir else "")
+              + (", prefetch on" if prefetch else ""))
     return ServeEngine(model, params, max_slots=slots, max_len=max_len,
                        prefill=prefill, prefill_chunk=prefill_chunk,
                        seed=seed, kv=backend, spec_decode=spec_k > 0,
                        spec_adaptive=spec_adaptive,
                        prefix_cache=prefix_cache, adapters=adapters,
+                       tiered=tiered, prefetch=prefetch,
                        tracer=tracer, profiler=profiler)
 
 
@@ -169,6 +184,22 @@ def main(argv=None) -> int:
                     help="adapter SRAM budget (default: half the tenants fit)")
     ap.add_argument("--adapter-rate", type=float, default=1.0,
                     help="fraction of requests that carry an adapter_id")
+    ap.add_argument("--host-cache-mb", type=float, default=0.0,
+                    help="host-RAM tier budget for the tiered memory "
+                         "hierarchy: evicted adapter packs and prefix-cache "
+                         "KV pages demote here instead of being dropped, "
+                         "and re-admit bit-identical (0 = tiering off "
+                         "unless --disk-cache-dir is set)")
+    ap.add_argument("--disk-cache-dir", default=None,
+                    help="directory for the disk tier (mmapped CRC-checked "
+                         "files); entries cascade host → disk under "
+                         "host-budget pressure")
+    ap.add_argument("--disk-cache-mb", type=float, default=256.0,
+                    help="disk tier budget (only with --disk-cache-dir)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="scheduler prefetch hook: walk the pending queue "
+                         "each tick and warm upcoming adapters / spilled "
+                         "prefixes up the hierarchy before their turn")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None,
@@ -216,6 +247,10 @@ def main(argv=None) -> int:
                          n_adapters=args.adapters,
                          adapter_rank=args.adapter_rank,
                          adapter_budget_kb=args.adapter_budget_kb,
+                         host_cache_mb=args.host_cache_mb,
+                         disk_cache_dir=args.disk_cache_dir,
+                         disk_cache_mb=args.disk_cache_mb,
+                         prefetch=args.prefetch,
                          tracer=tracer if not engines else None,
                          profiler=profiler if not engines else None)
         if mesh is not None:
@@ -366,6 +401,12 @@ def main(argv=None) -> int:
                        "verify_ticks": stats.spec_ticks}
     if eng.adapters is not None:
         out["adapters"] = eng.adapters.stats()
+    if eng.tiered is not None:
+        out["tiered"] = dict(eng.tiered.stats(),
+                             prefix_readmits=stats.prefix_readmits,
+                             prefix_readmit_tokens=stats.prefix_readmit_tokens,
+                             prefetch_hits=stats.prefetch_hits,
+                             kv_spilled_pages=stats.kv_spilled_pages)
     if args.trace_out:
         eng.trace.dump(args.trace_out)
         print(f"[serve] trace → {args.trace_out} "

@@ -4,13 +4,15 @@ context-sharded fp8 KV cache, the unified request API
 (`repro.serving.kv`: DenseKV / PagedKV behind the KVBackend protocol), plus
 the gateway layer (scheduler, prefix cache, streaming frontend, metrics) in
 `repro.serving.gateway`, the multi-tenant QLoRA adapter subsystem in
-`repro.serving.adapters`, the asynchronous dispatch/backlog runtime with
+`repro.serving.adapters`, the device→host→disk tiered memory hierarchy in
+`repro.serving.memory`, the asynchronous dispatch/backlog runtime with
 its HTTP/SSE front in `repro.serving.runtime`, and the scale-out layer:
 mesh-sharded replica construction (`repro.serving.sharded`) behind the
 prefix-cache-aware fleet router (`repro.serving.router`)."""
 from repro.serving.api import RequestSpec, SamplingParams
 from repro.serving.engine import EngineStats, Request, ServeEngine
 from repro.serving.kv import DenseKV, KVBackend, PagedKV
+from repro.serving.memory import TieredStore
 from repro.serving.paged_kv import PagePool, PagedConfig
 from repro.serving.router import ReplicaRouter
 from repro.serving.runtime import (AsyncServeRuntime, RuntimePoisoned,
@@ -21,5 +23,5 @@ from repro.serving.sharded import (fleet_mesh, replica_meshes, shard_engine,
 __all__ = ["AsyncServeRuntime", "DenseKV", "EngineStats", "KVBackend",
            "PagePool", "PagedConfig", "PagedKV", "ReplicaRouter", "Request",
            "RequestSpec", "RuntimePoisoned", "SamplingParams", "ServeEngine",
-           "ServingHTTPFront", "Ticket", "fleet_mesh", "replica_meshes",
-           "shard_engine", "shard_params"]
+           "ServingHTTPFront", "Ticket", "TieredStore", "fleet_mesh",
+           "replica_meshes", "shard_engine", "shard_params"]

@@ -3,6 +3,9 @@ adapters), SRAM-budget cache (byte-accounted LRU with pinning), and the
 device runtime that stacks resident adapters for the batched SGMV decode
 path (see runtime.py for the dataflow)."""
 from repro.serving.adapters.cache import AdapterCache
+from repro.serving.adapters.from_checkpoint import (lora_stacks_from_params,
+                                                    register_from_checkpoint,
+                                                    register_from_params)
 from repro.serving.adapters.registry import (AdapterRegistry, AdapterSpec,
                                              FrozenAdapter,
                                              synthetic_adapter_stacks,
@@ -10,4 +13,6 @@ from repro.serving.adapters.registry import (AdapterRegistry, AdapterSpec,
 from repro.serving.adapters.runtime import AdapterServing
 
 __all__ = ["AdapterCache", "AdapterRegistry", "AdapterServing", "AdapterSpec",
-           "FrozenAdapter", "synthetic_adapter_stacks", "target_dims"]
+           "FrozenAdapter", "lora_stacks_from_params",
+           "register_from_checkpoint", "register_from_params",
+           "synthetic_adapter_stacks", "target_dims"]

@@ -23,10 +23,16 @@ from typing import Dict, List, Optional, Tuple
 
 
 class AdapterCache:
-    def __init__(self, budget_bytes: int, max_entries: int):
+    def __init__(self, budget_bytes: int, max_entries: int, tiered=None):
         assert max_entries >= 1
         self.budget_bytes = int(budget_bytes)
         self.max_entries = int(max_entries)
+        # Optional TieredStore: evicted packs demote to the host tier
+        # instead of being dropped, and admissions are accounted in the
+        # store's device tier. `demote_payload` (set by AdapterServing)
+        # maps an id to its host-side pack payload at eviction time.
+        self.tiered = tiered
+        self.demote_payload = None
         self._slot: Dict[str, int] = {}        # id → device slot (1-based)
         self._nbytes: Dict[str, int] = {}
         self._pins: Dict[str, int] = {}
@@ -110,6 +116,8 @@ class AdapterCache:
         self._nbytes[adapter_id] = nbytes
         self._last_use[adapter_id] = next(self._clock)
         self.loads += 1
+        if self.tiered is not None:
+            self.tiered.note_device("adapter:" + adapter_id, nbytes)
         return slot, evicted
 
     def _evict(self, adapter_id: str) -> str:
@@ -117,6 +125,13 @@ class AdapterCache:
         self._nbytes.pop(adapter_id)
         self._last_use.pop(adapter_id, None)
         self.evictions += 1
+        if self.tiered is not None:
+            payload = (self.demote_payload(adapter_id)
+                       if self.demote_payload is not None else None)
+            if payload is not None:
+                self.tiered.demote("adapter:" + adapter_id, payload)
+            else:
+                self.tiered.drop_device("adapter:" + adapter_id)
         return adapter_id
 
     # -- pinning (in-flight requests) ----------------------------------------

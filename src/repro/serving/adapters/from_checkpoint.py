@@ -1,0 +1,69 @@
+"""train → freeze → register: deploy a QLoRA training run as a tenant.
+
+Closes the loop between the training stack and the multi-tenant serving
+stack. A ``mode="qlora"`` model trains float master LoRA leaves inside the
+scan-stacked param tree (``params["layers"][group][target]["lora"]`` with
+``a: (L, K, r)`` / ``b: (L, r, N)`` — exactly the stack shape
+`AdapterRegistry.register` freezes). These helpers extract those stacks
+from a live tree or a saved checkpoint and push them through
+``freeze_adapter`` into the registry, where the serving runtime's SRAM
+cache and the tiered store take over.
+
+The registry's `AdapterSpec` must agree with the training run's
+``cfg.lora`` (same rank and targets) — `register` validates rank and
+packing divisibility, and `lora_stacks_from_params` fails loudly when a
+target has no trained leaves.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt_mod
+from repro.serving.adapters.registry import (AdapterRegistry, AdapterSpec,
+                                             FrozenAdapter, TARGET_GROUP)
+
+
+def lora_stacks_from_params(params: Dict[str, Any], spec: AdapterSpec
+                            ) -> Dict[str, Dict[str, np.ndarray]]:
+    """Float master LoRA stacks ``{target: {"a": (L, K, r), "b": (L, r, N)}}``
+    pulled from a qlora-mode param tree, host-side."""
+    stacks: Dict[str, Dict[str, np.ndarray]] = {}
+    for target in spec.targets:
+        group = TARGET_GROUP[target]
+        node = params["layers"].get(group, {}).get(target, {})
+        lora = node.get("lora") if isinstance(node, dict) else None
+        if not lora:
+            raise KeyError(
+                f"params carry no trained LoRA leaves for target {target!r} "
+                "(expected params['layers'][group][target]['lora']) — was "
+                "the checkpoint trained with mode='qlora' and cfg.lora."
+                f"targets including {target!r}?")
+        stacks[target] = {"a": np.asarray(lora["a"]),
+                          "b": np.asarray(lora["b"])}
+    return stacks
+
+
+def register_from_params(registry: AdapterRegistry, params: Dict[str, Any],
+                         adapter_id: str) -> FrozenAdapter:
+    """Freeze a qlora param tree's LoRA leaves into ``registry`` as the
+    next version of ``adapter_id`` (TOM's deployment step: float masters →
+    packed 2-bit ternary SRAM pack)."""
+    return registry.register(
+        adapter_id, lora_stacks_from_params(params, registry.spec))
+
+
+def register_from_checkpoint(registry: AdapterRegistry, ckpt_dir: str,
+                             adapter_id: str, params_like: Dict[str, Any],
+                             step: Optional[int] = None) -> FrozenAdapter:
+    """Load a qlora training checkpoint (latest step by default) and
+    register its adapter. ``params_like`` is a same-structure qlora param
+    tree (e.g. a fresh ``model.init``) — the checkpoint layer restores
+    leaves by tree position, CRC-checked."""
+    if step is None:
+        step = ckpt_mod.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    state, _ = ckpt_mod.restore(ckpt_dir, step, {"params": params_like})
+    return register_from_params(registry, state["params"], adapter_id)

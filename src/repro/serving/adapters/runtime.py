@@ -50,6 +50,7 @@ class AdapterServing:
         self.registry = registry
         self.spec = registry.spec
         self.cache = AdapterCache(budget_bytes, max_resident)
+        self.tiered = None
         self.version = 0
         self.n_layers = cfg.num_layers
         r = self.spec.rank
@@ -63,6 +64,71 @@ class AdapterServing:
                 "b": jnp.zeros((self.n_layers, n_slots, r // 4, n), jnp.uint8),
                 "s": jnp.zeros((self.n_layers, n_slots), jnp.float32),
             }
+
+    # -- tiered memory ---------------------------------------------------------
+    def attach_tiered(self, tiered) -> None:
+        """Back the SRAM cache with a TieredStore: evicted packs demote to
+        the host tier as upload-ready payloads, and a later acquire of the
+        same version promotes from host instead of re-freezing from the
+        registry (the registry stays the durable source of truth — the host
+        tier is the warm path)."""
+        self.tiered = tiered
+        self.cache.tiered = tiered
+        self.cache.demote_payload = self._demote_payload
+
+    def _demote_payload(self, key: str):
+        """Upload-ready host payload for a version-resolved cache key
+        (``tenant@vN``): packed codes plus the folded per-layer scale."""
+        adapter_id, _, v = key.rpartition("@v")
+        try:
+            entry = self.registry.get(adapter_id, int(v))
+        except (KeyError, ValueError):
+            return None
+        payload = {}
+        for target, pk in entry.packs.items():
+            combined = (pk["a_scale"] * pk["b_scale"]
+                        * np.float32(self.spec.scaling))
+            payload[f"{target}.a"] = pk["a_codes"]
+            payload[f"{target}.b"] = pk["b_codes"]
+            payload[f"{target}.s"] = np.asarray(combined, np.float32)
+        return payload
+
+    def _upload_payload(self, payload, slot: int) -> None:
+        """Write a host-tier payload (from `_demote_payload`) into device
+        slot ``slot`` — same bytes the registry path uploads."""
+        for target in self.pack:
+            dev = self.pack[target]
+            dev["a"] = dev["a"].at[:, slot].set(
+                jnp.asarray(payload[f"{target}.a"]))
+            dev["b"] = dev["b"].at[:, slot].set(
+                jnp.asarray(payload[f"{target}.b"]))
+            dev["s"] = dev["s"].at[:, slot].set(
+                jnp.asarray(payload[f"{target}.s"]))
+
+    def prefetch(self, adapter_id: str) -> bool:
+        """Opportunistically warm the latest version into a *free* slot
+        (scheduler prefetch hook). Never evicts and never pins: only loads
+        when both a slot and the bytes are spare, so it cannot displace
+        in-flight or hotter-by-LRU residents."""
+        if adapter_id not in self.registry:
+            return False
+        entry = self.registry.get(adapter_id)
+        key = f"{adapter_id}@v{entry.version}"
+        if self.cache.is_resident(key):
+            return False
+        if not self.cache._free_slots:
+            return False
+        if self.cache.bytes_used + entry.nbytes > self.cache.budget_bytes:
+            return False
+        payload = (self.tiered.take("adapter:" + key)
+                   if self.tiered is not None else None)
+        slot, _ = self.cache.admit(key, entry.nbytes)
+        if payload is not None:
+            self._upload_payload(payload, slot)
+        else:
+            self._upload(entry, slot)
+        self.version += 1
+        return True
 
     # -- param-tree injection --------------------------------------------------
     def install(self, params: Dict[str, Any]) -> Dict[str, Any]:
@@ -124,8 +190,16 @@ class AdapterServing:
         key = f"{adapter_id}@v{entry.version}"
         slot = self.cache.lookup(key)
         if slot is None:
+            # Host-tier hit: a previously evicted pack was demoted instead
+            # of dropped — promote the ready-made payload rather than
+            # re-deriving the upload from the registry entry.
+            payload = (self.tiered.take("adapter:" + key)
+                       if self.tiered is not None else None)
             slot, _ = self.cache.admit(key, entry.nbytes)
-            self._upload(entry, slot)
+            if payload is not None:
+                self._upload_payload(payload, slot)
+            else:
+                self._upload(entry, slot)
             self.version += 1
         self.cache.pin(key)
         return slot, key

@@ -268,6 +268,12 @@ class EngineStats:
                                   # warmup, so serve-time recompiles stand out)
     aot_fallbacks: int = 0        # AOT prefill calls that fell back to the
                                   # jit path on an input-placement mismatch
+    # tiered memory hierarchy (ServeEngine(tiered=...)): spilled-then-
+    # re-admitted prefix KV and scheduler-prefetch effectiveness
+    prefix_readmits: int = 0      # spilled prefix spans pulled back on-device
+    prefix_readmit_tokens: int = 0
+    prefetch_hits: int = 0        # prefetched adapters/prefixes a placement used
+    kv_spilled_pages: int = 0     # prefix KV pages demoted to host instead of dropped
 
     @property
     def tps(self) -> float:
@@ -364,7 +370,8 @@ class ServeEngine:
                  n_pages: Optional[int] = None, prefix_cache: bool = False,
                  spec_decode: bool = False, spec_ngram: int = 3,
                  spec_adaptive: bool = False,
-                 scheduler=None, adapters=None,
+                 scheduler=None, adapters=None, tiered=None,
+                 prefetch: bool = False,
                  tracer: Optional[Tracer] = None, profiler=None,
                  donate_decode_state: bool = False):
         assert model.mode in ("serve", "qlora")
@@ -428,6 +435,25 @@ class ServeEngine:
                 "prefix_cache requires a paged KV backend (kv=PagedKV(...))"
             from repro.serving.gateway.prefix_cache import PrefixCache
             self.prefix = PrefixCache(self.pool.cfg.page)
+
+        # tiered memory hierarchy (serving/memory/TieredStore): device-tier
+        # accounting for resident adapters + committed prefix pages, host/disk
+        # spill for evicted ones (a popular prefix re-admits from host instead
+        # of re-prefilling), and — with prefetch=True — a scheduler hook that
+        # warms upcoming adapter/prefix needs up the hierarchy before their
+        # tick. None keeps every legacy eviction path byte-identical.
+        self.tiered = tiered
+        self.prefetch = prefetch
+        self._prefetched: set = set()        # warmed keys awaiting first use
+        # feed lengths with a host-spilled dense prefix (DenseKV has no page
+        # table to key re-admission off, so placements probe these lengths)
+        self._dense_spill_lens: set = set()
+        self._dense_spill_ok = (
+            tiered is not None and not self.kv.supports_paging
+            and self.cfg.attention_kind == "gqa"
+            and self.cfg.family not in ("ssm", "hybrid"))
+        if tiered is not None and adapters is not None:
+            adapters.attach_tiered(tiered)
 
         self.pos = np.zeros((max_slots,), np.int32)       # next write position
         self.slot_adapter = np.zeros((max_slots,), np.int32)  # device slot (0=none)
@@ -1001,6 +1027,147 @@ class ServeEngine:
             return False
         return self.kv.pages_free >= self._pages_needed(req)
 
+    # -- tiered memory hierarchy ----------------------------------------------
+    def _kv_key(self, key) -> str:
+        """TieredStore key of a prefix-KV span (tuple of prompt tokens)."""
+        return "kv:" + ",".join(map(str, key))
+
+    def _dense_key(self, adapter_key, feed) -> str:
+        """Dense-spill store key. Unlike the paged trie (which shares
+        committed pages across tenants by token identity — the baseline
+        semantic), the dense path is new reuse, so it must not hand one
+        adapter's KV to another: the slot's version-pinned adapter key
+        namespaces the entry."""
+        tag = f"{adapter_key}|" if adapter_key else ""
+        return "kv:" + tag + ",".join(map(str, feed))
+
+    @property
+    def _page_nbytes(self) -> int:
+        """Device footprint of one k+v pool page (fp8 cache encoding)."""
+        c = self.pool.cfg
+        return (2 * c.n_layers * c.n_kv_heads * c.page * c.head_dim
+                * np.dtype(self.pool.k.dtype).itemsize)
+
+    def _evict_prefix(self, n: int) -> None:
+        """Evict up to ``n`` resident prefix pages. With a tiered store each
+        page's KV is exported and demoted to the host tier (keyed by its
+        token prefix) before the page returns to the pool — a later request
+        for the same prefix re-admits the bytes instead of re-prefilling."""
+        if self.tiered is None:
+            self.kv.free_pages(self.prefix.evict(n))
+            return
+        freed = []
+        for key, pid in self.prefix.evict_detailed(n):
+            self.tiered.demote(self._kv_key(key), self.kv.export_page(pid),
+                               remat_cost=float(len(key)))
+            self.stats.kv_spilled_pages += 1
+            freed.append(pid)
+        self.kv.free_pages(freed)
+
+    def _readmit_prefix(self, feed: List[int], keep_free: int = 0,
+                        record: bool = False) -> int:
+        """Extend ``feed``'s cached prefix span by re-importing spilled
+        pages from the tiered store back into freshly allocated pool pages
+        and re-inserting their trie nodes (shortest-first, so parents exist
+        before children). Returns pages re-admitted. ``keep_free`` leaves
+        pool headroom (the prefetch hook must not starve admissions);
+        ``record`` marks the keys as prefetched so the placement that uses
+        them counts a prefetch hit."""
+        if self.tiered is None or self.prefix is None:
+            return 0
+        page = self.pool.cfg.page
+        limit = max(0, (len(feed) - 1) // page)
+        n = self.prefix.lookup(feed)
+        readmitted = 0
+        while n < limit and self.pool.pages_free > keep_free:
+            key = tuple(feed[: (n + 1) * page])
+            kv_key = self._kv_key(key)
+            if self.tiered.tier_of(kv_key) in (None, "device"):
+                break
+            payload = self.tiered.take(kv_key)
+            if payload is None:
+                break              # corrupt disk copy degraded to a miss
+            pid = self.pool.alloc_page()
+            self.kv.import_page(pid, payload)
+            self.prefix.readmit(key, pid)
+            self.tiered.note_device(kv_key, self._page_nbytes,
+                                    remat_cost=float(len(key)))
+            self.stats.prefix_readmits += 1
+            self.stats.prefix_readmit_tokens += page
+            if record:
+                self._prefetched.add(kv_key)
+            n += 1
+            readmitted += 1
+        return readmitted
+
+    def _readmit_dense(self, slot: int, feed: List[int]) -> int:
+        """DenseKV re-admission: probe spilled feed lengths (longest first)
+        for a host copy of ``feed``'s prefix KV and import it into the
+        slot's rows. Returns matched token count (≥1 token always left for
+        decode). The host entry is read, not consumed — other placements
+        can reuse it until the store's budget evicts it."""
+        akey = self.slot_adapter_key[slot]
+        for n in sorted(self._dense_spill_lens, reverse=True):
+            if n > len(feed):
+                continue
+            key = self._dense_key(akey, feed[:n])
+            payload = self.tiered.get(key)
+            if payload is None:
+                continue
+            upto = min(n, len(feed) - 1)
+            if upto <= 0:
+                continue
+            if upto < n:
+                payload = {k: v[:, :, :upto] for k, v in payload.items()}
+            self.kv.import_prefix(slot, payload)
+            self.stats.prefix_readmits += 1
+            self.stats.prefix_readmit_tokens += upto
+            if key in self._prefetched:
+                self._prefetched.discard(key)
+                self.stats.prefetch_hits += 1
+            return upto
+        return 0
+
+    def _prefetch_queue(self) -> None:
+        """Scheduler prefetch hook: walk the head of the pending queue and
+        warm each request's adapter and prefix KV *up* the hierarchy before
+        its admission tick — disk→host staging always, host→device only
+        into spare capacity (free adapter slots / pool headroom), so
+        prefetch never evicts hotter state."""
+        if not self.prefetch or self.tiered is None:
+            return
+        upcoming = getattr(self.scheduler, "upcoming", None)
+        if upcoming is None:
+            return          # custom scheduler without a queue peek
+        for req in upcoming(2 * self.max_slots):
+            if (self.adapters is not None and req.adapter_id is not None
+                    and req.adapter_id in self.adapters.registry):
+                key = "adapter:" + self.adapters._vkey(req.adapter_id)
+                if self.adapters.prefetch(req.adapter_id):
+                    self._prefetched.add(key)
+            feed, _ = self._clamped_feed(req)
+            if self.prefix is not None:
+                page = self.pool.cfg.page
+                for i in range(1, max(0, (len(feed) - 1) // page) + 1):
+                    kk = self._kv_key(tuple(feed[: i * page]))
+                    if self.tiered.tier_of(kk) == "disk":
+                        self.tiered.promote_host(kk)
+                self._readmit_prefix(
+                    feed, keep_free=self.kv.pages_for(self.max_len),
+                    record=True)
+            elif self._dense_spill_ok:
+                akey = None
+                if (self.adapters is not None and req.adapter_id is not None
+                        and req.adapter_id in self.adapters.registry):
+                    akey = self.adapters._vkey(req.adapter_id)
+                for n in sorted(self._dense_spill_lens, reverse=True):
+                    if n > len(feed):
+                        continue
+                    kk = self._dense_key(akey, feed[:n])
+                    if self.tiered.promote_host(kk):
+                        self._prefetched.add(kk)
+                    break
+
     def _admit(self) -> None:
         now = time.time()
         for req in self.scheduler.drop_expired(now):
@@ -1038,7 +1205,7 @@ class ServeEngine:
         needed = self._pages_needed(head)
         short = needed - self.kv.pages_free
         if short > 0 and self.prefix is not None:
-            self.kv.free_pages(self.prefix.evict(short))
+            self._evict_prefix(short)
         if not self._can_admit(head):
             # plan the victim set first: count only pages release() actually
             # frees (owned pages — cache-shared ones stay resident)
@@ -1069,6 +1236,9 @@ class ServeEngine:
             dev_slot, key = self.adapters.acquire_versioned(req.adapter_id)
             self.slot_adapter[slot] = dev_slot
             self.slot_adapter_key[slot] = key
+            if "adapter:" + key in self._prefetched:
+                self._prefetched.discard("adapter:" + key)
+                self.stats.prefetch_hits += 1
         feed, remaining_new = self._clamped_feed(req)
         req.max_new_tokens = len(req.output) + remaining_new
         self.slot_req[slot] = req
@@ -1078,14 +1248,28 @@ class ServeEngine:
         self.pos[slot] = 0
         matched = 0
         if self.prefix is not None:
+            # pull any spilled pages of this feed's prefix back on-device
+            # first, so the trie match below sees the re-admitted span too
+            self._readmit_prefix(feed)
             ids, keys = self.prefix.match(feed)
             self.slot_keys[slot] = keys
             self.slot_cached[slot] = len(ids)
+            for k in keys:
+                kk = self._kv_key(k)
+                if kk in self._prefetched:
+                    self._prefetched.discard(kk)
+                    self.stats.prefetch_hits += 1
             if ids:
                 self.pool.append_shared(slot, ids)
                 matched = len(ids) * self.pool.cfg.page
                 self.pos[slot] = matched
                 self.pool.lengths[slot] = matched
+                req.prefix_hit_tokens = matched
+                self.stats.prefix_hit_tokens += matched
+        elif self._dense_spill_ok and self._dense_spill_lens:
+            matched = self._readmit_dense(slot, feed)
+            if matched:
+                self.pos[slot] = matched
                 req.prefix_hit_tokens = matched
                 self.stats.prefix_hit_tokens += matched
         # eager reservation: claim the prompt's pages (plus the first output
@@ -1278,7 +1462,7 @@ class ServeEngine:
                 active = [i for i in active if self._is_decoding(i)]
                 continue
             if self.prefix is not None:
-                self.kv.free_pages(self.prefix.evict(short))
+                self._evict_prefix(short)
                 if need <= self.kv.pages_free:
                     return active
             # victims may also be mid-chunked-prefill slots (not in the
@@ -1305,6 +1489,20 @@ class ServeEngine:
 
     def _release_slot(self, slot: int) -> None:
         req = self.slot_req[slot]
+        # dense spill: the contiguous backend has no page trie, so a slot
+        # whose prompt KV is fully committed parks a host copy in the tiered
+        # store at release — the next request with the same prompt prefix
+        # imports it instead of re-prefilling (the store's budget, not this
+        # engine, decides how long it survives)
+        if (self._dense_spill_ok and len(self.slot_feed[slot]) > 1
+                and int(self.pos[slot]) >= len(self.slot_feed[slot])):
+            feed = self.slot_feed[slot]
+            key = self._dense_key(self.slot_adapter_key[slot], feed)
+            if self.tiered.tier_of(key) != "host":
+                self.tiered.put(key, self.kv.export_prefix(slot, len(feed)),
+                                remat_cost=float(len(feed)))
+                self.stats.kv_spilled_pages += 1
+            self._dense_spill_lens.add(len(feed))
         if self.slot_adapter_key[slot] is not None:
             # unpin the exact version this slot acquired (hot-swap safe)
             self.adapters.release_key(self.slot_adapter_key[slot])
@@ -1385,6 +1583,11 @@ class ServeEngine:
                                       self.slot_cached[i])
             self.slot_keys[i].extend(keys)
             self.slot_cached[i] += len(keys)
+            if self.tiered is not None:
+                for k in keys:
+                    self.tiered.note_device(self._kv_key(k),
+                                            self._page_nbytes,
+                                            remat_cost=float(len(k)))
         return False
 
     def _emit_token(self, i: int, req: Request, tok: int, now: float,
@@ -1643,6 +1846,7 @@ class ServeEngine:
 
     def _tick_begin_impl(self, p: PendingTick) -> None:
         with self._phase("schedule"):
+            self._prefetch_queue()
             self._admit()
         chunks = self._advance_prefill()
         active = [i for i in range(self.max_slots) if self._is_decoding(i)

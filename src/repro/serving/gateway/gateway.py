@@ -316,6 +316,27 @@ class Gateway:
             # adapter SRAM-cache residency / hit-rate / eviction telemetry
             for name, value in eng.adapters.stats().items():
                 self.metrics.set_gauge(f"adapter_cache_{name}", value)
+        tiered = getattr(eng, "tiered", None)
+        if tiered is not None:
+            # tiered memory hierarchy: per-tier residency, where reads were
+            # served from, and the promote/demote churn between tiers
+            st = tiered.stats()
+            for tier in ("device", "host", "disk"):
+                self.metrics.set_gauge(f"tier_bytes__{tier}",
+                                       st["tier_bytes"][tier])
+                self.metrics.set_gauge(f"tier_hits__{tier}",
+                                       st["tier_hits"][tier])
+            self.metrics.set_gauge("tier_promotes", st["promotes"])
+            self.metrics.set_gauge("tier_demotes", st["demotes"])
+            # spill/re-admit + scheduler-prefetch effectiveness (engine-side
+            # counters so they exist even when the store itself is idle)
+            self.metrics.set_gauge("prefix_readmits",
+                                   eng.stats.prefix_readmits)
+            self.metrics.set_gauge("prefix_readmit_tokens",
+                                   eng.stats.prefix_readmit_tokens)
+            self.metrics.set_gauge("prefetch_hits", eng.stats.prefetch_hits)
+            self.metrics.set_gauge("kv_spilled_pages",
+                                   eng.stats.kv_spilled_pages)
         # tick-loop health: host bubble between device dispatches and jit
         # cache growth (recompile stalls), both from the engine's obs layer
         self.metrics.set_gauge("tick_gap_ms_mean",

@@ -111,10 +111,12 @@ class PrefixCache:
                 node.active -= 1
 
     # -- eviction -------------------------------------------------------------
-    def evict(self, n_pages: int) -> List[int]:
-        """Free up to ``n_pages`` resident pages, LRU leaf-first. Returns the
-        freed page ids (caller returns them to the PagePool)."""
-        freed: List[int] = []
+    def evict_detailed(self, n_pages: int) -> List[Tuple[Key, int]]:
+        """Free up to ``n_pages`` resident pages, LRU leaf-first. Returns
+        ``(key, page_id)`` pairs so a tiered caller can spill each page's KV
+        to the host tier (keyed by its token prefix) before the pool reuses
+        the page."""
+        freed: List[Tuple[Key, int]] = []
         while len(freed) < n_pages:
             leaves = [(k, nd) for k, nd in self.nodes.items()
                       if nd.active == 0 and nd.children == 0]
@@ -126,8 +128,29 @@ class PrefixCache:
             parent = self.nodes.get(parent_key)
             if parent is not None:
                 parent.children -= 1
-            freed.append(node.page_id)
+            freed.append((key, node.page_id))
         return freed
+
+    def evict(self, n_pages: int) -> List[int]:
+        """Free up to ``n_pages`` resident pages, LRU leaf-first. Returns the
+        freed page ids (caller returns them to the PagePool)."""
+        return [pid for _, pid in self.evict_detailed(n_pages)]
+
+    # -- tiered re-admission ---------------------------------------------------
+    def readmit(self, key: Key, page_id: int) -> None:
+        """Re-insert an evicted-then-spilled prefix page whose KV has just
+        been re-imported into pool page ``page_id``. The node starts with no
+        users (a following ``match`` increfs it like any resident node); the
+        parent link is rewired when the parent is cached. The caller walks
+        prefixes shortest-first, so parents re-admit before children."""
+        assert key not in self.nodes, key
+        assert len(key) % self.page == 0 and key, key
+        self.nodes[key] = _Node(page_id=page_id, active=0,
+                                last_use=next(self._clock))
+        if len(key) > self.page:
+            parent = self.nodes.get(key[: len(key) - self.page])
+            if parent is not None:
+                parent.children += 1
 
     # -- stats ----------------------------------------------------------------
     @property

@@ -98,6 +98,12 @@ class Scheduler:
                 return req
         return None
 
+    def upcoming(self, n: int) -> List[Request]:
+        """Read-only peek at the next ``n`` queued requests in scheduling
+        order — the engine's tiered-memory prefetch hook walks these to
+        warm adapters and spilled prefix KV before their admission tick."""
+        return list(self._entries[:n])
+
     def pop_next(self, can_admit: Callable[[Request], bool] = lambda r: True,
                  prefer: Optional[Callable[[Request], bool]] = None
                  ) -> Optional[Request]:

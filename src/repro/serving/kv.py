@@ -129,6 +129,31 @@ class KVBackend:
         page-aligned."""
         raise NotImplementedError
 
+    # -- tiered spill / re-admit ----------------------------------------------
+    # Host-side round trips for the tiered memory hierarchy. Exports hand
+    # back the *raw cache encoding* (fp8 for GQA caches) as host numpy
+    # arrays and imports write those same bytes back, so a spilled-then-
+    # re-admitted prefix is bit-identical to freshly prefilled KV.
+    def export_page(self, page_id: int):
+        """Host copy of one committed pool page's k/v
+        (``{"k","v"}: (L, Hkv, page, D)``, cache dtype). Paged only."""
+        raise NotImplementedError(f"{self.name} KV does not export pages")
+
+    def import_page(self, page_id: int, payload) -> None:
+        """Write an `export_page` payload back into pool page ``page_id``
+        (a freshly allocated page — committed pages are immutable)."""
+        raise NotImplementedError(f"{self.name} KV does not import pages")
+
+    def export_prefix(self, slot: int, upto_tokens: int):
+        """Host copy of a slot's first ``upto_tokens`` committed positions
+        (``{"k","v"}: (L, Hkv, T, D)``, cache dtype). Dense only."""
+        raise NotImplementedError(f"{self.name} KV does not export prefixes")
+
+    def import_prefix(self, slot: int, payload) -> None:
+        """Write an `export_prefix` payload into a slot's positions
+        ``0 .. T`` (the slot is freshly placed; nothing committed yet)."""
+        raise NotImplementedError(f"{self.name} KV does not import prefixes")
+
     # -- AOT warmup -------------------------------------------------------------
     def warmup_decode_states(self):
         """Throwaway decode-state pytrees covering every state shape the
@@ -181,6 +206,22 @@ class DenseKV(KVBackend):
     def prefix_kv(self, slot, upto_tokens):
         return {"k": self.cache["k"][:, slot:slot + 1, :, :upto_tokens],
                 "v": self.cache["v"][:, slot:slot + 1, :, :upto_tokens]}
+
+    # -- tiered spill / re-admit ----------------------------------------------
+    # GQA layout only ((L, B, Hkv, S, D)) — the same restriction as the
+    # mid-sequence prefill path that consumes re-admitted prefixes.
+    def export_prefix(self, slot, upto_tokens):
+        return {"k": np.asarray(self.cache["k"][:, slot, :, :upto_tokens]),
+                "v": np.asarray(self.cache["v"][:, slot, :, :upto_tokens])}
+
+    def import_prefix(self, slot, payload) -> None:
+        new = dict(self.cache)
+        for key in ("k", "v"):
+            span = jnp.asarray(payload[key])[:, None]   # restore batch axis
+            new[key] = jax.lax.dynamic_update_slice(
+                self.cache[key], span.astype(self.cache[key].dtype),
+                (0, slot, 0, 0, 0))
+        self.cache = new
 
     # -- speculative decode ----------------------------------------------------
     def verify_state(self, active, pos, n_tokens, s_bucket):
@@ -323,6 +364,18 @@ class PagedKV(KVBackend):
         # the final page may be partially filled (chunk boundaries are
         # token-granular) — hand back exactly the committed span
         return {"k": gk[:, :, :, :upto_tokens], "v": gv[:, :, :, :upto_tokens]}
+
+    # -- tiered spill / re-admit ----------------------------------------------
+    def export_page(self, page_id):
+        return {"k": np.asarray(self.pool.k[:, page_id]),
+                "v": np.asarray(self.pool.v[:, page_id])}
+
+    def import_page(self, page_id, payload) -> None:
+        pool = self.pool
+        pool.k = pool.k.at[:, page_id].set(
+            jnp.asarray(payload["k"], pool.k.dtype))
+        pool.v = pool.v.at[:, page_id].set(
+            jnp.asarray(payload["v"], pool.v.dtype))
 
     # -- speculative decode ----------------------------------------------------
     def verify_state(self, active, pos, n_tokens, s_bucket) -> PagedKVState:

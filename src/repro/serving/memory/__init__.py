@@ -1,0 +1,7 @@
+"""Unified tiered memory hierarchy (device → host RAM → disk) behind the
+serving caches: the adapter SRAM cache demotes evicted packs to host, the
+prefix cache spills evicted KV pages and re-admits them bit-identically,
+and the scheduler's prefetch hook warms upcoming needs up the hierarchy."""
+from repro.serving.memory.tiered import TieredStore
+
+__all__ = ["TieredStore"]

@@ -1,0 +1,381 @@
+"""Tiered memory store: one device → host → disk hierarchy for cached state.
+
+TOM's memory co-design splits state by mutability and heat — the immutable
+bulk in dense ROM, the scarce tunable state in SRAM. The serving stack grew
+three ad-hoc device caches in that spirit (the adapter SRAM cache, the
+refcounted prefix-page trie, the KV page pool) and each treated eviction as
+*loss*: an evicted adapter re-uploads from the registry, an evicted prefix
+page re-runs prefill. This module generalizes the split into one explicit
+hierarchy, per ROMA's ROM↔SRAM model and H2O-style importance eviction:
+
+  * **device** — accounting-only. The bytes live in the structures that
+    already own them (adapter slot stacks, the fp8 page pool); the store
+    tracks which keys are device-resident and how big they are, so the
+    "every entry lives in exactly one tier" invariant is checkable.
+  * **host** — payloads as host numpy buffers (contiguous copies, the
+    stand-in for pinned/page-locked allocations on a real accelerator
+    host). A demoted device entry parks here instead of being dropped.
+  * **disk** — one mmapped file per entry (header + CRC32-checksummed raw
+    bytes, written atomically), so cold state survives host-budget pressure
+    and a truncated/corrupt file degrades to a *miss*, never bad KV.
+
+Eviction inside host/disk is driven by a cost model — the entry with the
+lowest ``re-materialization cost × recency / bytes`` goes first, i.e. big,
+stale, cheap-to-rebuild entries — and demotion cascades down the hierarchy
+(host → disk → dropped) rather than discarding outright. Per-tier byte
+budgets bound each level; hit/miss/promote/demote counters feed the
+gateway's ``tier_*`` gauges.
+
+Keys are plain strings; clients namespace them (``adapter:<tenant>@v<N>``,
+``kv:<token,token,...>``) so one store can back every subsystem.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+import zlib
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+Payload = Dict[str, np.ndarray]
+
+_MAGIC = b"TMEM1\n"
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype by name, reaching into ml_dtypes for the exotic low-precision
+    types numpy can't look up natively (fp8 KV payloads, bf16)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _payload_nbytes(payload: Payload) -> int:
+    return sum(int(a.nbytes) for a in payload.values())
+
+
+@dataclasses.dataclass
+class _Entry:
+    key: str
+    nbytes: int
+    tier: str                    # "device" | "host" | "disk"
+    remat_cost: float            # relative cost to rebuild from nothing
+    last_use: int
+    payload: Optional[Payload] = None    # host tier only
+    path: Optional[Path] = None          # disk tier only
+
+
+class TieredStore:
+    """Byte-budgeted device/host/disk hierarchy behind the serving caches."""
+
+    TIERS = ("device", "host", "disk")
+
+    def __init__(self, *, host_budget_bytes: int = 64 << 20,
+                 disk_budget_bytes: int = 0,
+                 disk_dir: Optional[str] = None):
+        self.host_budget_bytes = int(host_budget_bytes)
+        self.disk_dir = Path(disk_dir) if disk_dir else None
+        self.disk_budget_bytes = int(disk_budget_bytes) if disk_dir else 0
+        if self.disk_dir is not None:
+            self.disk_dir.mkdir(parents=True, exist_ok=True)
+        self._entries: Dict[str, _Entry] = {}
+        self._clock = itertools.count(1)
+        self.hits = {t: 0 for t in self.TIERS}
+        self.misses = 0
+        self.promotes = 0            # disk→host or host/disk→device (take)
+        self.demotes = 0             # device→host or host→disk
+        self.evictions = 0           # dropped out of the hierarchy entirely
+        self.disk_corrupt = 0        # truncated/CRC-failed disk reads → miss
+
+    # -- introspection ---------------------------------------------------------
+    def tier_of(self, key: str) -> Optional[str]:
+        e = self._entries.get(key)
+        return e.tier if e is not None else None
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def keys(self, tier: Optional[str] = None) -> List[str]:
+        return [k for k, e in self._entries.items()
+                if tier is None or e.tier == tier]
+
+    def tier_bytes(self, tier: str) -> int:
+        return sum(e.nbytes for e in self._entries.values() if e.tier == tier)
+
+    # -- device tier (accounting only) ----------------------------------------
+    def note_device(self, key: str, nbytes: int,
+                    remat_cost: float = 1.0) -> None:
+        """Record that ``key`` is device-resident (the bytes live in the
+        client's own device structure). Any host/disk copy is consumed —
+        an entry lives in exactly one tier."""
+        old = self._entries.pop(key, None)
+        if old is not None and old.tier == "disk":
+            self._unlink(old)
+        self._entries[key] = _Entry(key, int(nbytes), "device",
+                                    float(remat_cost), next(self._clock))
+
+    def drop_device(self, key: str) -> None:
+        """The device copy is gone and nothing was spilled (no payload)."""
+        e = self._entries.get(key)
+        if e is not None and e.tier == "device":
+            del self._entries[key]
+            self.evictions += 1
+
+    def demote(self, key: str, payload: Payload, *,
+               remat_cost: Optional[float] = None) -> None:
+        """Device → host: the device copy is being dropped and ``payload``
+        is its host-side rematerialization (raw bytes — bit-exact). Also
+        valid for keys never noted on device (direct host insert)."""
+        old = self._entries.pop(key, None)
+        cost = remat_cost if remat_cost is not None else \
+            (old.remat_cost if old is not None else 1.0)
+        if old is not None and old.tier == "disk":
+            self._unlink(old)
+        if old is not None and old.tier == "device":
+            self.demotes += 1
+        self._insert_host(_Entry(key, _payload_nbytes(payload), "host",
+                                 float(cost), next(self._clock),
+                                 payload={k: np.ascontiguousarray(v)
+                                          for k, v in payload.items()}))
+
+    def put(self, key: str, payload: Payload, *,
+            remat_cost: float = 1.0) -> None:
+        """Direct host-tier insert (spill paths with no device accounting)."""
+        self.demote(key, payload, remat_cost=remat_cost)
+
+    # -- read side -------------------------------------------------------------
+    def get(self, key: str) -> Optional[Payload]:
+        """Payload of a host/disk entry (None on miss or corrupt disk file).
+        Touches recency; the entry stays in its tier."""
+        e = self._entries.get(key)
+        if e is None or e.tier == "device":
+            if e is not None:
+                self.hits["device"] += 1
+                e.last_use = next(self._clock)
+            else:
+                self.misses += 1
+            return None
+        e.last_use = next(self._clock)
+        if e.tier == "host":
+            self.hits["host"] += 1
+            return e.payload
+        payload = self._read_disk(e)
+        if payload is None:
+            return None
+        self.hits["disk"] += 1
+        return payload
+
+    def take(self, key: str) -> Optional[Payload]:
+        """Consume a host/disk entry for promotion to device: returns the
+        payload and removes the entry (the caller re-inserts the device copy
+        via ``note_device``). None on miss / corrupt disk copy."""
+        payload = self.get(key)
+        if payload is None:
+            return None
+        e = self._entries.pop(key)
+        if e.tier == "disk":
+            self._unlink(e)
+        self.promotes += 1
+        return payload
+
+    def promote_host(self, key: str) -> bool:
+        """Disk → host (prefetch: stage a cold entry one tier up so a later
+        ``take`` is a memory read, not a disk read)."""
+        e = self._entries.get(key)
+        if e is None or e.tier != "disk":
+            return False
+        payload = self._read_disk(e)
+        if payload is None:
+            return False
+        del self._entries[key]
+        self._unlink(e)
+        self.promotes += 1
+        self._insert_host(_Entry(key, _payload_nbytes(payload), "host",
+                                 e.remat_cost, next(self._clock),
+                                 payload=payload))
+        return True
+
+    def remove(self, key: str) -> None:
+        e = self._entries.pop(key, None)
+        if e is not None and e.tier == "disk":
+            self._unlink(e)
+
+    # -- cost-model eviction ---------------------------------------------------
+    def _score(self, e: _Entry, now: int) -> float:
+        """Keep-value density: re-materialization cost × recency / bytes.
+        The *lowest* score evicts first — big, stale, cheap-to-rebuild."""
+        recency = 1.0 / (1.0 + (now - e.last_use))
+        return e.remat_cost * recency / max(e.nbytes, 1)
+
+    def _victim(self, tier: str) -> Optional[_Entry]:
+        pool = [e for e in self._entries.values() if e.tier == tier]
+        if not pool:
+            return None
+        now = next(self._clock)
+        return min(pool, key=lambda e: (self._score(e, now), e.key))
+
+    def _insert_host(self, entry: _Entry) -> None:
+        if entry.nbytes > self.host_budget_bytes:
+            self._spill_disk(entry)
+            return
+        while (self.tier_bytes("host") + entry.nbytes
+               > self.host_budget_bytes):
+            victim = self._victim("host")
+            if victim is None:
+                self._spill_disk(entry)
+                return
+            del self._entries[victim.key]
+            self.demotes += 1
+            self._spill_disk(victim)
+        self._entries[entry.key] = entry
+
+    def _spill_disk(self, entry: _Entry) -> None:
+        if self.disk_dir is None or entry.nbytes > self.disk_budget_bytes:
+            self.evictions += 1
+            return
+        while self.tier_bytes("disk") + entry.nbytes > self.disk_budget_bytes:
+            victim = self._victim("disk")
+            if victim is None:
+                self.evictions += 1
+                return
+            del self._entries[victim.key]
+            self._unlink(victim)
+            self.evictions += 1
+        path = self._write_disk(entry.key, entry.payload)
+        self._entries[entry.key] = _Entry(
+            entry.key, entry.nbytes, "disk", entry.remat_cost,
+            entry.last_use, path=path)
+
+    # -- disk format -----------------------------------------------------------
+    # <MAGIC><header-json>\n<raw payload bytes>
+    # header: {"key", "arrays": [{"name","dtype","shape","nbytes"}], "crc"}
+    # The payload is read back through an mmap and CRC-verified: a torn or
+    # truncated file (crash mid-write, disk full) is a *miss*, never data.
+    def _disk_path(self, key: str) -> Path:
+        digest = hashlib.sha1(key.encode()).hexdigest()
+        return self.disk_dir / f"{digest}.tmem"
+
+    def _write_disk(self, key: str, payload: Payload) -> Path:
+        arrays, blobs = [], []
+        for name, arr in payload.items():
+            arr = np.ascontiguousarray(arr)
+            blob = arr.view(np.uint8).reshape(-1).tobytes()
+            arrays.append({"name": name, "dtype": arr.dtype.name,
+                           "shape": list(arr.shape), "nbytes": len(blob)})
+            blobs.append(blob)
+        data = b"".join(blobs)
+        header = json.dumps({"key": key, "arrays": arrays,
+                             "crc": zlib.crc32(data) & 0xFFFFFFFF})
+        path = self._disk_path(key)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            f.write(_MAGIC + header.encode() + b"\n" + data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        return path
+
+    def _read_disk(self, e: _Entry) -> Optional[Payload]:
+        try:
+            with open(e.path, "rb") as f:
+                magic = f.read(len(_MAGIC))
+                if magic != _MAGIC:
+                    raise ValueError("bad magic")
+                header = json.loads(f.readline().decode())
+                offset = f.tell()
+            total = sum(a["nbytes"] for a in header["arrays"])
+            raw = np.memmap(e.path, dtype=np.uint8, mode="r",
+                            offset=offset, shape=(total,))
+            if zlib.crc32(raw.tobytes()) & 0xFFFFFFFF != header["crc"]:
+                raise ValueError("payload CRC mismatch")
+            payload: Payload = {}
+            off = 0
+            for a in header["arrays"]:
+                chunk = np.array(raw[off:off + a["nbytes"]])  # copy off mmap
+                payload[a["name"]] = chunk.view(
+                    _resolve_dtype(a["dtype"])).reshape(a["shape"])
+                off += a["nbytes"]
+            return payload
+        except Exception:
+            # truncated / torn / unreadable file: degrade to a clean miss
+            self.disk_corrupt += 1
+            self.misses += 1
+            self._entries.pop(e.key, None)
+            self._unlink(e)
+            return None
+
+    def _unlink(self, e: _Entry) -> None:
+        if e.path is not None:
+            try:
+                e.path.unlink()
+            except OSError:
+                pass
+
+    # -- lifecycle / invariants ------------------------------------------------
+    def drain(self) -> None:
+        """Drop every host/disk entry (disk files deleted). Device entries
+        stay — their bytes are owned by the client structures."""
+        for key in [k for k, e in self._entries.items() if e.tier != "device"]:
+            self.remove(key)
+
+    def verify(self) -> List[str]:
+        """Structural invariants for the fuzz harness: one tier per entry
+        (by construction — cross-checked against payload/path placement),
+        per-tier byte accounting matching the stored payloads and within
+        budget, and no orphaned or missing disk files."""
+        errs = []
+        for k, e in self._entries.items():
+            if e.tier not in self.TIERS:
+                errs.append(f"{k}: unknown tier {e.tier!r}")
+            if e.tier == "host":
+                if e.payload is None:
+                    errs.append(f"{k}: host entry without payload")
+                elif _payload_nbytes(e.payload) != e.nbytes:
+                    errs.append(f"{k}: host nbytes {e.nbytes} != payload "
+                                f"{_payload_nbytes(e.payload)}")
+            else:
+                if e.payload is not None:
+                    errs.append(f"{k}: {e.tier} entry holds a host payload")
+            if e.tier == "disk":
+                if e.path is None or not e.path.exists():
+                    errs.append(f"{k}: disk entry without a backing file")
+            elif e.path is not None:
+                errs.append(f"{k}: {e.tier} entry holds a disk path")
+        if self.tier_bytes("host") > self.host_budget_bytes:
+            errs.append(f"host tier over budget: {self.tier_bytes('host')} > "
+                        f"{self.host_budget_bytes}")
+        if self.disk_dir is not None:
+            if self.tier_bytes("disk") > self.disk_budget_bytes:
+                errs.append(f"disk tier over budget: "
+                            f"{self.tier_bytes('disk')} > "
+                            f"{self.disk_budget_bytes}")
+            on_disk = {p for p in self.disk_dir.glob("*.tmem")}
+            tracked = {e.path for e in self._entries.values()
+                       if e.tier == "disk"}
+            orphans = on_disk - tracked
+            if orphans:
+                errs.append(f"orphaned disk files: "
+                            f"{sorted(p.name for p in orphans)}")
+        return errs
+
+    # -- stats -----------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        return {
+            "tier_bytes": {t: self.tier_bytes(t) for t in self.TIERS},
+            "tier_entries": {t: len(self.keys(t)) for t in self.TIERS},
+            "tier_hits": dict(self.hits),
+            "misses": self.misses,
+            "promotes": self.promotes,
+            "demotes": self.demotes,
+            "evictions": self.evictions,
+            "disk_corrupt": self.disk_corrupt,
+            "host_budget_bytes": self.host_budget_bytes,
+            "disk_budget_bytes": self.disk_budget_bytes,
+        }

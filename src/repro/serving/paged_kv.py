@@ -96,6 +96,13 @@ class PagePool:
         """Return cache-owned pages (e.g. evicted prefix pages) to the pool."""
         self.free.extend(page_ids)
 
+    def alloc_page(self) -> int:
+        """Allocate one page owned by the caller (prefix re-admission: the
+        page goes straight to the prefix cache, never through a slot table)."""
+        if not self.free:
+            raise MemoryError("page pool exhausted")
+        return self.free.pop()
+
     def append_shared(self, slot: int, page_ids: List[int]) -> None:
         """Attach already-allocated pages (prefix-cache hits) to a slot's
         table. The pages stay owned by the cache; ``release(keep=...)`` must

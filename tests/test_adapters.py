@@ -528,8 +528,13 @@ class TestMultiTenantBenchSmoke:
         from benchmarks.common import ARTIFACTS
         run(quick=True)
         out = json.loads((ARTIFACTS / "BENCH_multitenant.json").read_text())
-        assert set(out) == {"baseline", "single", "multi", "observability"}
+        assert set(out) == {"baseline", "single", "multi", "observability",
+                            "tiered"}
         assert out["multi"]["completed"] == 8
+        tiered = out["tiered"]
+        assert tiered["prefix_readmits"] > 0
+        assert tiered["kv_spilled_pages"] > 0
+        assert tiered["readmit_speedup"] > 0.0
         obs = out["observability"]
         assert obs["phase_breakdown_ms"], obs
         assert obs["energy_per_token_j"] >= 0.0

@@ -24,7 +24,12 @@ on *every tick*:
   * **SLO attribution is a ledger**: every tracked request — live,
     preempted, cancelled mid-prefill, expired or done — has non-negative
     phase components (queue_wait/prefill/decode/decode_stall/preempted)
-    that sum to its wall time, every tick.
+    that sum to its wall time, every tick;
+  * **tiered memory is consistent** (when a TieredStore rides along):
+    every entry lives in exactly one tier, per-tier byte accounting
+    matches the entries and respects budgets, device-tier KV mirrors the
+    prefix trie, pinned/in-flight adapters are never demoted, and after
+    ``drain()`` the host and disk tiers are empty with no files left.
 
 The stream is generated from ``FUZZ_SEED`` (env, default 0): the fast lane
 pins it, a non-blocking CI job rotates it per run. Every assertion message
@@ -43,7 +48,8 @@ from repro.configs.base import get_config
 from repro.launch.train import reduce_config
 from repro.models.transformer import Model
 from repro.serving import (AsyncServeRuntime, DenseKV, PagedKV, RequestSpec,
-                           RuntimePoisoned, SamplingParams, ServeEngine)
+                           RuntimePoisoned, SamplingParams, ServeEngine,
+                           TieredStore)
 from repro.serving.adapters import (AdapterRegistry, AdapterServing,
                                     AdapterSpec, synthetic_adapter_stacks)
 from repro.serving.gateway import Gateway
@@ -144,6 +150,41 @@ def _adapter_invariants(eng):
                   f"in-flight adapter version {key} not resident")
             check(eng.adapters.cache.pinned(key),
                   f"in-flight adapter version {key} not pinned")
+
+
+def _tier_invariants(eng):
+    """Tiered-memory structural invariants, asserted every tick: the store's
+    own self-check (one tier per entry, byte accounting, budgets, no orphan
+    disk files) plus cross-structure consistency — device-tier KV entries
+    mirror the prefix trie exactly, and pinned / in-flight adapters are
+    never demoted off the device."""
+    store = eng.tiered
+    problems = store.verify()
+    check(not problems, f"tiered store inconsistent: {problems}")
+    dev = set(store.keys("device"))
+    trie = {eng._kv_key(k) for k in eng.prefix.nodes} \
+        if eng.prefix is not None else set()
+    dev_kv = {k for k in dev if k.startswith("kv:")}
+    check(dev_kv == trie,
+          f"device-tier KV entries out of sync with trie: "
+          f"only-store={sorted(dev_kv - trie)[:3]} "
+          f"only-trie={sorted(trie - dev_kv)[:3]}")
+    if eng.adapters is not None:
+        cache = eng.adapters.cache
+        resident = {f"adapter:{k}" for k in cache.resident_ids()}
+        dev_ad = {k for k in dev if k.startswith("adapter:")}
+        check(dev_ad == resident,
+              f"device-tier adapter entries out of sync with cache: "
+              f"store={sorted(dev_ad)} cache={sorted(resident)}")
+        for key, pins in cache._pins.items():
+            if pins > 0:
+                check(store.tier_of(f"adapter:{key}") == "device",
+                      f"pinned adapter {key} demoted off device "
+                      f"(tier={store.tier_of(f'adapter:{key}')})")
+    # entries in exactly one tier is structural (one dict, one tier field);
+    # assert the sum anyway so a bookkeeping refactor can't silently split
+    n = sum(len(store.keys(t)) for t in ("device", "host", "disk"))
+    check(n == len(store.keys()), "entry counted in more than one tier")
 
 
 def _metrics_invariants(gw, reqs):
@@ -275,6 +316,8 @@ def _drive(eng, gw, rng, ticks, reqs, prefixes, paged):
             _page_invariants(eng)
         if eng.adapters is not None:
             _adapter_invariants(eng)
+        if eng.tiered is not None:
+            _tier_invariants(eng)
         _metrics_invariants(gw, reqs)
         _slo_invariants(gw, reqs)
     return mid_prefill_cancels
@@ -323,6 +366,61 @@ class TestServingFuzz:
               "pages missing after full drain")
         check(eng.stats.prefill_chunks > 0,
               "stream never exercised chunked prefill — lengthen prompts")
+
+    def test_tiered_full_stack(self, model_params, registry, tmp_path):
+        """The paged harness with the device→host→disk TieredStore riding
+        along under a deliberately tiny host budget and a real disk tier,
+        so demote cascades, disk spills, re-admits and prefetch all fire
+        mid-stream. ``_tier_invariants`` runs every tick (via ``_drive``);
+        after drain the host/disk tiers must empty leak-free."""
+        model, params = model_params
+        nbytes = registry.get("tenant-0").nbytes
+        adapters = AdapterServing(model, registry, budget_bytes=nbytes * 2,
+                                  max_resident=2)
+        # host fits roughly one adapter's worth of spill: excess cascades
+        # to the disk tier, so both demote hops run under the invariants
+        store = TieredStore(host_budget_bytes=max(nbytes, 1 << 14),
+                            disk_budget_bytes=8 << 20,
+                            disk_dir=str(tmp_path / "tier"))
+        eng = ServeEngine(model, params, max_slots=3, max_len=64,
+                          prefill="batched", prefill_chunk=3,
+                          kv=PagedKV(page=PAGE, n_pages=N_PAGES),
+                          prefix_cache=True, seed=SEED + 7,
+                          scheduler=EDFCheckingScheduler(),
+                          adapters=adapters, tiered=store, prefetch=True)
+        gw = Gateway(eng)
+        rng = np.random.default_rng(SEED + 7)
+        prefixes = [list(rng.integers(0, 50, size=2 * PAGE))
+                    for _ in range(2)]
+        reqs = []
+        _drive(eng, gw, rng, max(80, TICKS // 2), reqs, prefixes, paged=True)
+        for _ in range(3000):
+            if not (len(eng.scheduler)
+                    or any(r is not None for r in eng.slot_req)):
+                break
+            gw.step()
+            _page_invariants(eng)
+            _adapter_invariants(eng)
+            _tier_invariants(eng)
+            _metrics_invariants(gw, reqs)
+            _slo_invariants(gw, reqs)
+        _terminal_invariants(reqs)
+        # some seeds never hit pool pressure mid-stream; force one demote
+        # sweep post-drain so the spill path is covered on every seed
+        if eng.stats.kv_spilled_pages == 0 and eng.prefix.nodes:
+            eng._evict_prefix(len(eng.prefix.nodes))
+            _page_invariants(eng)
+            _tier_invariants(eng)
+        check(eng.stats.kv_spilled_pages > 0,
+              "stream never spilled a prefix page — no committed prefixes "
+              "to demote; lengthen the shared prefixes")
+        # post-drain leak check: host and disk must empty, files unlinked
+        store.drain()
+        check(store.verify() == [], f"post-drain verify: {store.verify()}")
+        check(store.tier_bytes("host") == 0, "host bytes leaked after drain")
+        check(store.tier_bytes("disk") == 0, "disk bytes leaked after drain")
+        left = list((tmp_path / "tier").glob("*"))
+        check(not left, f"disk files leaked after drain: {left}")
 
     def test_dense_backend(self, model_params):
         """Same stream shape on DenseKV (no paging/prefix): termination and

@@ -1,0 +1,375 @@
+"""Tiered memory hierarchy (device → host → disk) tests.
+
+Covers the `repro.serving.memory.TieredStore` contract (budgets, cost-model
+eviction, demote cascade, counters, drain, self-verify), disk crash safety
+(a truncated spill file degrades to a miss, never corruption), the
+AdapterCache demote/host-hit path, the re-admit identity matrix
+``{DenseKV, PagedKV} × {adapter, none}`` — re-admitted prefix KV must be
+**bit-identical** to freshly prefilled KV and produce token-identical
+output — and the train → freeze → register deployment round trip
+(`repro.serving.adapters.from_checkpoint`).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.train import reduce_config
+from repro.models.transformer import Model
+from repro.serving import (DenseKV, PagedKV, RequestSpec, ServeEngine,
+                           TieredStore)
+from repro.serving.adapters import (AdapterRegistry, AdapterServing,
+                                    AdapterSpec, lora_stacks_from_params,
+                                    register_from_checkpoint,
+                                    register_from_params,
+                                    synthetic_adapter_stacks)
+from repro.serving.adapters.registry import TARGET_GROUP
+from repro.serving.gateway import Gateway
+
+jax.config.update("jax_enable_x64", False)
+
+SPEC = AdapterSpec(rank=4, alpha=8.0, targets=("q", "v"))
+PROMPT = [7, 3, 11, 2, 9, 1, 4, 8, 5, 12, 6, 10, 13, 14, 15, 0, 2, 5, 3]
+PAGE = 4
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+    model = Model(cfg, mode="serve")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def registry(model_params):
+    model, _ = model_params
+    reg = AdapterRegistry(SPEC)
+    rng = np.random.default_rng(11)
+    for i in range(2):
+        reg.register(f"tenant-{i}",
+                     synthetic_adapter_stacks(rng, model.cfg, SPEC,
+                                              model.cfg.num_layers,
+                                              scale=0.05))
+    return reg
+
+
+def _payload(nbytes, seed=0, dtype=np.uint8):
+    rng = np.random.default_rng(seed)
+    n = nbytes // np.dtype(dtype).itemsize
+    return {"x": rng.integers(0, 200, size=n).astype(dtype)}
+
+
+def _payload_bytes(p):
+    return {k: np.asarray(v).tobytes() for k, v in sorted(p.items())}
+
+
+class TestTieredStore:
+    def test_device_host_round_trip_and_counters(self):
+        store = TieredStore(host_budget_bytes=1 << 20)
+        pay = {"a": np.arange(16, dtype=np.float32),
+               "b": np.ones(8, np.int8)}
+        store.note_device("k", 128)
+        assert store.tier_of("k") == "device"
+        assert store.tier_bytes("device") == 128
+        store.demote("k", pay)
+        assert store.tier_of("k") == "host"
+        assert store.tier_bytes("device") == 0
+        got = store.take("k")
+        np.testing.assert_array_equal(got["a"], pay["a"])
+        np.testing.assert_array_equal(got["b"], pay["b"])
+        assert store.tier_of("k") is None
+        st = store.stats()
+        assert st["demotes"] == 1 and st["promotes"] == 1
+        assert st["tier_hits"]["host"] == 1 and st["misses"] == 0
+        assert store.get("gone") is None and store.stats()["misses"] == 1
+        assert store.verify() == []
+
+    def test_eviction_prefers_stale_cheap_entries(self):
+        # score = remat_cost × 1/(1+age) ÷ nbytes; the victim is the
+        # minimum — stale entries that are cheap to rebuild go first,
+        # recently-touched / expensive entries survive
+        store = TieredStore(host_budget_bytes=3 * 1024)
+        store.put("cheap-stale", _payload(1024, 1), remat_cost=1.0)
+        store.put("pricey", _payload(1024, 2), remat_cost=100.0)
+        store.put("cheap-hot", _payload(1024, 3), remat_cost=1.0)
+        assert store.get("cheap-hot") is not None      # touch: now hottest
+        store.put("new", _payload(1024, 4), remat_cost=1.0)  # forces 1 evict
+        assert store.tier_of("cheap-stale") is None    # no disk: evicted
+        assert store.tier_of("pricey") == "host"
+        assert store.tier_of("cheap-hot") == "host"
+        assert store.stats()["evictions"] == 1
+        assert store.verify() == []
+
+    def test_demote_cascades_host_to_disk(self, tmp_path):
+        store = TieredStore(host_budget_bytes=1024,
+                            disk_budget_bytes=2048,
+                            disk_dir=str(tmp_path))
+        for i in range(3):
+            store.put(f"k{i}", _payload(1024, i))
+        assert store.tier_of("k2") == "host"           # newest stays up
+        assert store.tier_of("k0") == "disk"
+        assert store.tier_of("k1") == "disk"
+        assert store.tier_bytes("disk") == 2048
+        got = store.take("k0")                         # disk read-back
+        np.testing.assert_array_equal(got["x"], _payload(1024, 0)["x"])
+        assert store.verify() == []
+        store.drain()
+        assert store.tier_bytes("host") == 0 and store.tier_bytes("disk") == 0
+        assert not list(tmp_path.iterdir())
+
+    def test_exotic_dtype_disk_round_trip(self, tmp_path):
+        ml_dtypes = pytest.importorskip("ml_dtypes")
+        fp8 = np.dtype(ml_dtypes.float8_e4m3fn)
+        store = TieredStore(host_budget_bytes=16,      # too small: straight
+                            disk_budget_bytes=1 << 20,  # to disk
+                            disk_dir=str(tmp_path))
+        raw = np.arange(64, dtype=np.uint8).view(fp8)
+        store.put("fp8", {"k": raw, "bf16": np.ones(4, ml_dtypes.bfloat16)})
+        assert store.tier_of("fp8") == "disk"
+        got = store.take("fp8")
+        assert got["k"].dtype == fp8
+        np.testing.assert_array_equal(got["k"].view(np.uint8),
+                                      raw.view(np.uint8))
+        assert got["bf16"].dtype == np.dtype(ml_dtypes.bfloat16)
+
+    def test_truncated_disk_file_degrades_to_miss(self, tmp_path):
+        store = TieredStore(host_budget_bytes=16,
+                            disk_budget_bytes=1 << 20,
+                            disk_dir=str(tmp_path))
+        store.put("victim", _payload(4096, 9))
+        assert store.tier_of("victim") == "disk"
+        files = list(tmp_path.iterdir())
+        assert len(files) == 1
+        files[0].write_bytes(files[0].read_bytes()[:40])   # crash mid-write
+        assert store.get("victim") is None                 # miss, no raise
+        assert store.stats()["disk_corrupt"] == 1
+        assert "victim" not in store
+        assert store.verify() == []
+
+    def test_corrupted_disk_payload_fails_crc(self, tmp_path):
+        store = TieredStore(host_budget_bytes=16,
+                            disk_budget_bytes=1 << 20,
+                            disk_dir=str(tmp_path))
+        store.put("victim", _payload(4096, 9))
+        f = list(tmp_path.iterdir())[0]
+        blob = bytearray(f.read_bytes())
+        blob[-1] ^= 0xFF                                   # flip a data byte
+        f.write_bytes(bytes(blob))
+        assert store.get("victim") is None
+        assert store.stats()["disk_corrupt"] == 1
+
+
+class TestAdapterCacheTiering:
+    def test_evicted_adapter_demotes_and_readmits_from_host(
+            self, model_params, registry):
+        model, _ = model_params
+        nbytes = registry.get("tenant-0").nbytes
+        adapters = AdapterServing(model, registry, budget_bytes=nbytes,
+                                  max_resident=1)
+        store = TieredStore(host_budget_bytes=8 << 20)
+        adapters.attach_tiered(store)
+        _, key0 = adapters.acquire_versioned("tenant-0")
+        adapters.release_key(key0)
+        _, key1 = adapters.acquire_versioned("tenant-1")   # evicts tenant-0
+        assert store.tier_of("adapter:" + key0) == "host"
+        adapters.release_key(key1)
+        slot2, key2 = adapters.acquire_versioned("tenant-0")  # host hit
+        assert key2 == key0
+        assert store.stats()["promotes"] == 1
+        assert store.tier_of("adapter:" + key0) == "device"
+        # the re-uploaded device stacks are the registry's packs, bit-exact
+        ent = registry.get("tenant-0")
+        for t in SPEC.targets:
+            pk = ent.packs[t]
+            np.testing.assert_array_equal(
+                np.asarray(adapters.pack[t]["a"][:, slot2]), pk["a_codes"])
+            np.testing.assert_array_equal(
+                np.asarray(adapters.pack[t]["b"][:, slot2]), pk["b_codes"])
+            np.testing.assert_allclose(
+                np.asarray(adapters.pack[t]["s"][:, slot2]),
+                pk["a_scale"] * pk["b_scale"] * np.float32(SPEC.scaling),
+                rtol=1e-6)
+        adapters.release_key(key2)
+
+
+def _run(gw, prompt, adapter_id=None, max_new=4):
+    req = gw.submit(list(prompt), RequestSpec(max_new_tokens=max_new,
+                                              adapter_id=adapter_id))
+    gw.run_until_drained()
+    assert req.state == "done", req.state
+    return list(req.output)
+
+
+def _trie_bytes(eng):
+    """{trie key: raw page bytes} — the bit-identity ground truth."""
+    out = {}
+    for key, node in eng.prefix.nodes.items():
+        p = eng.kv.export_page(node.page_id)
+        out[key] = (np.asarray(p["k"]).tobytes(), np.asarray(p["v"]).tobytes())
+    return out
+
+
+class TestReadmitIdentity:
+    """{DenseKV, PagedKV} × {adapter, none}: spill → re-admit must be
+    bit-identical to freshly prefilled KV and token-identical in output."""
+
+    @pytest.mark.parametrize("adapter", [None, "tenant-0"])
+    def test_paged_readmit_bit_identical(self, model_params, registry,
+                                         adapter):
+        model, params = model_params
+        nbytes = registry.get("tenant-0").nbytes
+
+        def mk(tiered):
+            adapters = None
+            if adapter is not None:
+                adapters = AdapterServing(model, registry,
+                                          budget_bytes=2 * nbytes,
+                                          max_resident=2)
+            return ServeEngine(model, params, max_slots=2, max_len=64,
+                               prefill="batched",
+                               kv=PagedKV(page=PAGE, n_pages=24),
+                               prefix_cache=True, tiered=tiered,
+                               adapters=adapters)
+
+        store = TieredStore(host_budget_bytes=32 << 20)
+        eng = mk(store)
+        gw = Gateway(eng)
+        out1 = _run(gw, PROMPT, adapter)
+        pages1 = _trie_bytes(eng)
+        assert pages1, "first run committed no prefix pages"
+        eng._evict_prefix(len(eng.prefix.nodes))       # force full spill
+        assert not eng.prefix.nodes
+        assert eng.stats.kv_spilled_pages == len(pages1)
+        out2 = _run(gw, PROMPT, adapter)               # re-admits from host
+        assert eng.stats.prefix_readmits > 0
+        assert out2 == out1
+        pages2 = _trie_bytes(eng)
+        for key, blob in pages1.items():
+            assert pages2[key] == blob, f"re-admitted page {key} not " \
+                                        "bit-identical to the spilled copy"
+        # against an engine that never tiered: same tokens, same page bytes
+        eng3 = mk(None)
+        out3 = _run(Gateway(eng3), PROMPT, adapter)
+        assert out3 == out1
+        pages3 = _trie_bytes(eng3)
+        for key, blob in pages1.items():
+            assert pages3[key] == blob, f"page {key} differs from a fresh " \
+                                        "uncached prefill"
+        assert store.verify() == []
+
+    @pytest.mark.parametrize("adapter", [None, "tenant-0"])
+    def test_dense_readmit_identity(self, model_params, registry, adapter):
+        model, params = model_params
+        nbytes = registry.get("tenant-0").nbytes
+
+        def mk(tiered, with_adapters=adapter is not None):
+            adapters = None
+            if with_adapters:
+                adapters = AdapterServing(model, registry,
+                                          budget_bytes=2 * nbytes,
+                                          max_resident=2)
+            return ServeEngine(model, params, max_slots=2, max_len=64,
+                               prefill="batched", kv=DenseKV(),
+                               tiered=tiered, adapters=adapters)
+
+        store = TieredStore(host_budget_bytes=32 << 20)
+        eng = mk(store)
+        gw = Gateway(eng)
+        out1 = _run(gw, PROMPT, adapter)
+        assert eng.stats.kv_spilled_pages >= 1         # spilled at release
+        out2 = _run(gw, PROMPT, adapter)               # re-admits
+        assert eng.stats.prefix_readmits >= 1
+        assert eng.stats.prefix_hit_tokens > 0
+        assert out2 == out1
+        out3 = _run(Gateway(mk(None)), PROMPT, adapter)
+        assert out3 == out1
+        # bit-identity: a second engine's fresh prefill spills the same
+        # bytes for the shared keys
+        store2 = TieredStore(host_budget_bytes=32 << 20)
+        _run(Gateway(mk(store2)), PROMPT, adapter)
+        shared = set(store.keys("host")) & set(store2.keys("host"))
+        assert shared, "no shared spilled entries between identical runs"
+        for k in shared:
+            assert _payload_bytes(store.get(k)) == \
+                _payload_bytes(store2.get(k)), \
+                f"spilled dense KV for {k} not bit-identical across runs"
+
+    def test_dense_spill_is_tenant_scoped(self, model_params, registry):
+        """The dense spill key is namespaced by the slot's pinned adapter
+        version: a plain request must never re-admit a tenant's KV (and
+        vice versa), since adapter prefill produces different KV bytes."""
+        model, params = model_params
+        nbytes = registry.get("tenant-0").nbytes
+        adapters = AdapterServing(model, registry, budget_bytes=2 * nbytes,
+                                  max_resident=2)
+        store = TieredStore(host_budget_bytes=32 << 20)
+        eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                          prefill="batched", kv=DenseKV(),
+                          tiered=store, adapters=adapters)
+        gw = Gateway(eng)
+        out_t = _run(gw, PROMPT, "tenant-0")
+        before = eng.stats.prefix_readmits
+        out_p = _run(gw, PROMPT, None)                 # plain revisit
+        assert eng.stats.prefix_readmits == before, \
+            "plain request re-admitted a tenant's spilled KV"
+        # the plain output matches an engine that never saw the tenant
+        eng_ref = ServeEngine(model, params, max_slots=2, max_len=64,
+                              prefill="batched", kv=DenseKV())
+        assert out_p == _run(Gateway(eng_ref), PROMPT, None)
+        # and the tenant's own revisit does re-admit, token-identically
+        assert _run(gw, PROMPT, "tenant-0") == out_t
+        assert eng.stats.prefix_readmits > before
+
+
+class TestTrainFreezeRegister:
+    def test_register_from_checkpoint_round_trip(self, tmp_path):
+        """train → freeze → register: a qlora-mode checkpoint's LoRA leaves
+        deploy into the registry with packs bit-identical to freezing the
+        live tree directly."""
+        cfg = reduce_config(get_config("bitnet-2b"), "tiny")
+        assert cfg.lora is not None, "bitnet-2b lost its LoRA config"
+        model = Model(cfg, mode="qlora", remat=False)
+        params = model.init(jax.random.PRNGKey(5))
+        rng = np.random.default_rng(7)
+        for t in cfg.lora.targets:                 # make the freeze non-
+            lora = params["layers"][TARGET_GROUP[t]][t]["lora"]   # trivial:
+            for leaf in ("a", "b"):                # b inits to zeros
+                lora[leaf] = jnp.asarray(
+                    rng.normal(size=lora[leaf].shape).astype(np.float32)
+                    * 0.1)
+        from repro.ckpt import checkpoint as ckpt_mod
+        ckpt_mod.save(str(tmp_path / "ck"), 3, {"params": params},
+                      async_=False)
+        spec = AdapterSpec(rank=cfg.lora.rank, alpha=cfg.lora.alpha,
+                           targets=cfg.lora.targets)
+        reg_ck, reg_live = AdapterRegistry(spec), AdapterRegistry(spec)
+        params_like = jax.tree.map(np.zeros_like, params)
+        ent = register_from_checkpoint(reg_ck, str(tmp_path / "ck"),
+                                       "tenant-x", params_like)
+        ref = register_from_params(reg_live, params, "tenant-x")
+        assert ent.version == 1 and ent.nbytes == ref.nbytes
+        assert ent.n_layers == cfg.num_layers
+        for t in spec.targets:
+            for leaf in ("a_codes", "a_scale", "b_codes", "b_scale"):
+                np.testing.assert_array_equal(ent.packs[t][leaf],
+                                              ref.packs[t][leaf])
+        # deployed pack actually serves: loadable through the runtime
+        serve_model = Model(cfg, mode="serve")
+        serving = AdapterServing(serve_model, reg_ck,
+                                 budget_bytes=2 * ent.nbytes, max_resident=1)
+        slot, key = serving.acquire_versioned("tenant-x")
+        assert key == "tenant-x@v1" and slot >= 1
+        serving.release_key(key)
+
+    def test_missing_lora_leaves_fail_loudly(self, model_params):
+        _, serve_params = model_params
+        spec = AdapterSpec(rank=4, alpha=8.0, targets=("q", "v"))
+        with pytest.raises(KeyError, match="no trained LoRA leaves"):
+            lora_stacks_from_params(serve_params, spec)
+
+    def test_missing_checkpoint_fails_loudly(self, tmp_path):
+        spec = AdapterSpec(rank=4, alpha=8.0, targets=("q",))
+        reg = AdapterRegistry(spec)
+        with pytest.raises(FileNotFoundError):
+            register_from_checkpoint(reg, str(tmp_path / "nope"), "t", {})
